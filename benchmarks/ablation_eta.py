@@ -1,0 +1,32 @@
+"""Paper Figures 6/7/10/11: FDM-A stage thresholds η₁ (qualified) and η₂
+(borderline) — accuracy stays flat then drops as η₁ shrinks, TPS rises."""
+from benchmarks.common import evaluate_strategy, fmt, print_table
+
+TASK = "sort"
+ETA1S = [1.0, 0.9, 0.8, 0.7, 0.6]
+ETA2S = [0.75, 0.7, 0.65, 0.6, 0.55]
+
+
+def run(n_eval: int = 0):
+    rows = []
+    for e1 in ETA1S:
+        r = evaluate_strategy(TASK, "fdm_a", n_eval=n_eval,
+                              eta1=e1, eta2=0.6)
+        r["strategy"] = f"fdm_a η1={e1}"
+        rows.append(r)
+    print(f"\n== Fig 6 — η1 sweep (η2=0.6, task: {TASK}) ==")
+    print_table(fmt(rows), ["strategy", "accuracy", "tps"])
+
+    rows2 = []
+    for e2 in ETA2S:
+        r = evaluate_strategy(TASK, "fdm_a", n_eval=n_eval,
+                              eta1=0.8, eta2=e2)
+        r["strategy"] = f"fdm_a η2={e2}"
+        rows2.append(r)
+    print(f"\n== Fig 7 — η2 sweep (η1=0.8, task: {TASK}) ==")
+    print_table(fmt(rows2), ["strategy", "accuracy", "tps"])
+    return rows + rows2
+
+
+if __name__ == "__main__":
+    run()

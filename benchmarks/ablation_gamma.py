@@ -1,0 +1,25 @@
+"""Paper Figures 5/9: the pruning threshold γ trade-off."""
+from benchmarks.common import evaluate_strategy, fmt, print_table
+
+TASKS = ["sum", "sort"]
+GAMMAS = [0.1, 0.3, 0.5, 0.7, 0.9]
+
+
+def run(n_eval: int = 0, tasks=None):
+    all_rows = []
+    for task in tasks or TASKS:
+        rows = []
+        for g in GAMMAS:
+            for k in [2, 4]:
+                r = evaluate_strategy(task, "fdm", n_eval=n_eval,
+                                      gamma=g, k=k)
+                r["strategy"] = f"fdm γ={g} K={k}"
+                rows.append(r)
+        print(f"\n== Fig 5/9 — γ ablation (task: {task}) ==")
+        print_table(fmt(rows), ["strategy", "accuracy", "tps"])
+        all_rows += rows
+    return all_rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,27 @@
+"""Paper Figures 4/8: accuracy vs search width K — peaks at moderate K
+(the winner's-curse analysis of Appendix E)."""
+from benchmarks.common import evaluate_strategy, fmt, print_table
+
+TASKS = ["sum", "sort"]
+WIDTHS = [2, 4, 6, 8]
+
+
+def run(n_eval: int = 0, tasks=None):
+    all_rows = []
+    for task in tasks or TASKS:
+        rows = []
+        for k in WIDTHS:
+            r = evaluate_strategy(task, "fdm", n_eval=n_eval, k=k)
+            r["strategy"] = f"fdm K={k}"
+            rows.append(r)
+            r2 = evaluate_strategy(task, "fdm_a", n_eval=n_eval, k1=k)
+            r2["strategy"] = f"fdm_a K1={k}"
+            rows.append(r2)
+        print(f"\n== Fig 4/8 — width ablation (task: {task}) ==")
+        print_table(fmt(rows), ["strategy", "accuracy", "tps"])
+        all_rows += rows
+    return all_rows
+
+
+if __name__ == "__main__":
+    run()

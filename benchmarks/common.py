@@ -1,0 +1,118 @@
+"""Shared benchmark harness: train one model per task once (cached), then
+evaluate decoding strategies on held-out prompts.
+
+The quality testbed is the band-2 gate from DESIGN.md: small masked-
+diffusion LMs trained from scratch on bidirectionally-constrained synthetic
+tasks; we reproduce the paper's *orderings* (FDM > heuristics, FDM-A ≈ FDM
+accuracy at higher speed), not its absolute benchmark numbers — those need
+the 8B public checkpoints this container cannot load.
+"""
+from __future__ import annotations
+
+import functools
+import os
+import time
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import DecodeConfig, TrainConfig, get_config
+from repro.core import generate
+from repro.data import CharTokenizer, TaskDataset
+from repro.models.model import forward
+from repro.training import load, save, train
+
+CKPT_DIR = os.environ.get("REPRO_BENCH_CKPTS", "/root/repo/.bench_ckpts")
+ARCH = os.environ.get("REPRO_BENCH_ARCH", "llada-8b")
+# per-task training budgets, calibrated so the decode-order effect is
+# visible: hard tasks (carry chains, parities) train long enough to be
+# competent; easy tasks stay deliberately light so confidence ordering
+# still matters (a saturated model decodes correctly in ANY order).
+TASK_STEPS = {"sum": 600, "parity": 1000, "bracket": 1000,
+              "sort": 300, "reverse": 250}
+TRAIN_STEPS = int(os.environ.get("REPRO_BENCH_TRAIN_STEPS", "0"))
+EVAL_N = int(os.environ.get("REPRO_BENCH_EVAL_N", "64"))
+
+# evaluated model: the paper's own arch family at testbed scale
+_MODEL_OVERRIDES = dict(num_layers=4, d_model=256, num_heads=4,
+                        num_kv_heads=4, d_ff=1024)
+
+
+def bench_config(arch: str = None):
+    cfg = get_config(arch or ARCH).reduced(**_MODEL_OVERRIDES)
+    return cfg
+
+
+@functools.lru_cache(maxsize=None)
+def trained_model(task: str, arch: Optional[str] = None,
+                  steps: int = 0) -> Tuple:
+    """Train (or load the cached) testbed model for ``task``."""
+    cfg = bench_config(arch)
+    tok = CharTokenizer(cfg.vocab_size)
+    ds = TaskDataset(task, tok)
+    steps = steps or TRAIN_STEPS or TASK_STEPS.get(task, 400)
+    path = os.path.join(CKPT_DIR, f"{cfg.name}-{task}-{steps}.npz")
+    tcfg = TrainConfig(batch_size=64, seq_len=ds.seq_len, steps=steps,
+                       log_every=max(steps // 5, 1))
+    if os.path.exists(path):
+        from repro.models.model import init_model
+        template = init_model(jax.random.PRNGKey(0), cfg)
+        params, _, _ = load(path, template)
+    else:
+        print(f"  [train] {cfg.name} on '{task}' for {steps} steps …")
+        params, _ = train(cfg, tcfg, ds.batches(tcfg.batch_size), log=None)
+        save(path, params, step=steps)
+    return params, cfg, ds, tok
+
+
+def evaluate_strategy(task: str, strategy: str, n_eval: int = 0,
+                      seed: int = 0, arch: Optional[str] = None,
+                      **dcfg_over) -> Dict[str, float]:
+    """Accuracy (exact match) + TPS + tokens/forward for one strategy."""
+    params, cfg, ds, tok = trained_model(task, arch)
+    model_fn = jax.jit(lambda x: forward(params, x, cfg)[0])
+    n_eval = n_eval or EVAL_N
+    batch = ds.eval_batch(n_eval)
+    prompts = jnp.asarray(ds.prompts_only(batch))
+    gen = ds.seq_len - prompts.shape[1]
+    block = gen if gen <= 16 else max(gen // 2, 1)
+    over = dict(gen_length=gen, block_size=block, steps=gen,
+                strategy=strategy)
+    over.update(dcfg_over)
+    dcfg = DecodeConfig(**over)
+    # warmup compile (excluded from timing)
+    generate(jax.random.PRNGKey(99), model_fn, prompts[:n_eval], cfg,
+             dcfg)
+    out, stats = generate(jax.random.PRNGKey(seed), model_fn, prompts, cfg,
+                          dcfg)
+    em = ds.exact_match(np.asarray(jax.device_get(out)), batch)
+    return {**{k: v for k, v in dcfg_over.items()},
+            "task": task, "strategy": strategy, "accuracy": em,
+            "tps": stats.tps, "steps": stats.steps,
+            "tokens_per_forward": stats.tokens_per_forward,
+            "forward_equivalents": stats.forward_equivalents}
+
+
+def print_table(rows, cols) -> None:
+    widths = [max(len(str(r.get(c, ""))) for r in rows + [{c: c}])
+              for c in cols]
+    line = "  ".join(c.ljust(w) for c, w in zip(cols, widths))
+    print(line)
+    print("-" * len(line))
+    for r in rows:
+        print("  ".join(str(r.get(c, "")).ljust(w)
+                        for c, w in zip(cols, widths)))
+
+
+def fmt(rows):
+    out = []
+    for r in rows:
+        r = dict(r)
+        r["accuracy"] = f"{r['accuracy']:.2%}"
+        r["tps"] = f"{r['tps']:.1f}"
+        if "tokens_per_forward" in r:
+            r["tokens_per_forward"] = f"{r['tokens_per_forward']:.2f}"
+        out.append(r)
+    return out

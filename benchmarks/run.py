@@ -1,0 +1,57 @@
+"""Benchmark entry point: one function per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run [--fast]``
+
+Env knobs: REPRO_BENCH_TRAIN_STEPS (default 1200), REPRO_BENCH_EVAL_N (64),
+REPRO_BENCH_ARCH (llada-8b).
+"""
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="small eval sets (CI smoke)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset, e.g. table1,fig2")
+    args = ap.parse_args()
+
+    from benchmarks import (ablation_eta, ablation_gamma, ablation_k,
+                            fig2_consistency, kernel_confidence,
+                            table1_decode_order, table2_fdm_scaling,
+                            table3_fdm_a, table4_arch_generality,
+                            table5_cached_serving)
+    n_eval = 16 if args.fast else 0
+    suites = {
+        "table1": lambda: table1_decode_order.run(n_eval=n_eval),
+        "table2": lambda: table2_fdm_scaling.run(
+            n_eval=n_eval, tasks=["sum", "sort"] if args.fast else None),
+        "table3": lambda: table3_fdm_a.run(
+            n_eval=n_eval, tasks=["sum"] if args.fast else None),
+        "fig2": lambda: fig2_consistency.run(
+            n_examples=8 if args.fast else 16),
+        "ablation_k": lambda: ablation_k.run(
+            n_eval=n_eval, tasks=["sort"] if args.fast else None),
+        "ablation_gamma": lambda: ablation_gamma.run(
+            n_eval=n_eval, tasks=["sort"] if args.fast else None),
+        "ablation_eta": lambda: ablation_eta.run(n_eval=n_eval),
+        "table4": lambda: table4_arch_generality.run(
+            n_eval=n_eval,
+            archs=["llada-8b", "xlstm-125m"] if args.fast else None),
+        "table5": lambda: table5_cached_serving.run(
+            n_eval=16 if args.fast else 32),
+        "kernel": kernel_confidence.run,
+    }
+    chosen = (args.only.split(",") if args.only else list(suites))
+    t0 = time.perf_counter()
+    for name in chosen:
+        t = time.perf_counter()
+        suites[name]()
+        print(f"[{name} done in {time.perf_counter() - t:.0f}s]")
+    print(f"\nall benchmarks done in {time.perf_counter() - t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""Paper Table 1: decoding order matters.
+
+Random vs Margin vs FDM-A on one benchmark — accuracy should rise from
+Random -> Margin -> FDM-A while FDM-A is also the fastest (fewer steps).
+"""
+from benchmarks.common import evaluate_strategy, fmt, print_table
+
+TASK = "sort"
+
+
+def run(n_eval: int = 0):
+    rows = [evaluate_strategy(TASK, s, n_eval=n_eval)
+            for s in ["random", "margin", "fdm_a"]]
+    print(f"\n== Table 1 — decode order matters (task: {TASK}) ==")
+    print_table(fmt(rows), ["strategy", "accuracy", "tps",
+                            "tokens_per_forward"])
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,28 @@
+"""Paper Table 2: FDM vs heuristic decoding; accuracy scales with width K
+at the cost of TPS (inference-time scaling).
+"""
+from benchmarks.common import evaluate_strategy, fmt, print_table
+
+TASKS = ["sum", "sort", "parity", "bracket"]
+HEURISTICS = ["probability", "margin", "entropy"]
+WIDTHS = [2, 3, 4]
+
+
+def run(n_eval: int = 0, tasks=None):
+    all_rows = []
+    for task in tasks or TASKS:
+        rows = [evaluate_strategy(task, s, n_eval=n_eval)
+                for s in HEURISTICS]
+        rows += [evaluate_strategy(task, "fdm", n_eval=n_eval, k=k)
+                 for k in WIDTHS]
+        for r, k in zip(rows[len(HEURISTICS):], WIDTHS):
+            r["strategy"] = f"fdm (K={k})"
+        print(f"\n== Table 2 — FDM vs heuristics (task: {task}) ==")
+        print_table(fmt(rows), ["strategy", "accuracy", "tps",
+                                "tokens_per_forward"])
+        all_rows += rows
+    return all_rows
+
+
+if __name__ == "__main__":
+    run()

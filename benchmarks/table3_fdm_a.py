@@ -1,0 +1,28 @@
+"""Paper Table 3: FDM-A vs acceleration baselines (halved-step heuristics,
+EB, WINO) — the efficiency/performance trade-off.
+"""
+from benchmarks.common import evaluate_strategy, fmt, print_table
+
+TASKS = ["sum", "sort"]
+
+
+def run(n_eval: int = 0, tasks=None):
+    all_rows = []
+    for task in tasks or TASKS:
+        rows = []
+        for s in ["probability", "margin", "entropy"]:
+            r = evaluate_strategy(task, s, n_eval=n_eval, steps=8)
+            r["strategy"] = f"{s} (T/2)"
+            rows.append(r)
+        rows.append(evaluate_strategy(task, "eb", n_eval=n_eval))
+        rows.append(evaluate_strategy(task, "wino", n_eval=n_eval))
+        rows.append(evaluate_strategy(task, "fdm_a", n_eval=n_eval))
+        print(f"\n== Table 3 — FDM-A vs dynamic baselines (task: {task}) ==")
+        print_table(fmt(rows), ["strategy", "accuracy", "tps",
+                                "tokens_per_forward"])
+        all_rows += rows
+    return all_rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,38 @@
+"""Architecture generality (paper Table 2's four model variants, here as
+four architecture FAMILIES): the decode-order effect and FDM's gain are
+architecture-agnostic — dense (LLaDA), MoE (mixtral/LLaDA-MoE analogue),
+SSM (xLSTM) and hybrid (hymba) testbed models, same task, same strategies.
+"""
+from benchmarks.common import evaluate_strategy, fmt, print_table
+
+TASK = "sort"
+ARCHS = ["llada-8b", "mixtral-8x22b", "xlstm-125m", "hymba-1.5b"]
+
+
+def run(n_eval: int = 0, archs=None, only_cached: bool = True):
+    import os
+
+    from benchmarks.common import CKPT_DIR, TASK_STEPS, bench_config
+    rows = []
+    for arch in archs or ARCHS:
+        if only_cached and arch != "llada-8b":
+            cfg = bench_config(arch)
+            path = os.path.join(
+                CKPT_DIR, f"{cfg.name}-{TASK}-{TASK_STEPS.get(TASK, 400)}.npz")
+            if not os.path.exists(path):
+                print(f"  [table4] skip {arch} (no cached testbed model — "
+                      f"train with benchmarks.common.trained_model)")
+                continue
+        for strat in ["probability", "fdm", "fdm_a"]:
+            r = evaluate_strategy(TASK, strat, n_eval=n_eval, arch=arch)
+            r["arch"] = arch
+            rows.append(r)
+    print(f"\n== Table 4 (beyond paper) — architecture generality "
+          f"(task: {TASK}) ==")
+    print_table(fmt(rows), ["arch", "strategy", "accuracy", "tps",
+                            "tokens_per_forward"])
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,57 @@
+"""Beyond paper — frozen-prefix cached serving.
+
+The paper's related work (Fast-dLLM, dKV-cache) accelerates LLDM serving
+by caching committed blocks; we implement the prefix-cache half of the
+DualCache design (the live suffix is kept — masked-diffusion models read
+future mask tokens as a length signal; see sampler docstring) and measure
+quality parity + the forward-cost reduction as the prompt grows.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import fmt, print_table, trained_model
+from repro.configs import DecodeConfig
+from repro.core import generate, generate_cached
+from repro.models.model import forward
+
+TASK = "sort"
+
+
+def run(n_eval: int = 32):
+    params, cfg, ds, tok = trained_model(TASK)
+    model_fn = jax.jit(lambda x: forward(params, x, cfg)[0])
+    batch = ds.eval_batch(n_eval or 32)
+    prompts = jnp.asarray(ds.prompts_only(batch))
+    gen = ds.seq_len - prompts.shape[1]
+    bs = gen // 2 if gen % 2 == 0 else gen
+    rows = []
+    for strat in ["probability", "fdm", "fdm_a"]:
+        dcfg = DecodeConfig(gen_length=gen, block_size=bs, steps=gen,
+                            strategy=strat)
+        o1, s1 = generate(jax.random.PRNGKey(0), model_fn, prompts, cfg,
+                          dcfg)
+        o2, s2 = generate_cached(jax.random.PRNGKey(0), params, prompts,
+                                 cfg, dcfg)
+        agree = float(jnp.mean((o1 == o2).astype(jnp.float32)))
+        rows.append({
+            "strategy": strat,
+            "accuracy": ds.exact_match(np.asarray(o1), batch),
+            "acc_cached": f"{ds.exact_match(np.asarray(o2), batch):.2%}",
+            "token_agree": f"{agree:.2%}",
+            "fwd_full": f"{s1.forward_equivalents:.1f}",
+            "fwd_cached": f"{s2.forward_equivalents:.1f}",
+            "tps": s1.tps,
+        })
+    print("\n== Table 5 (beyond paper) — frozen-prefix cached serving "
+          f"(task: {TASK}) ==")
+    print_table(fmt(rows), ["strategy", "accuracy", "acc_cached",
+                            "token_agree", "fwd_full", "fwd_cached"])
+    print("(fwd counts are full-sequence-forward equivalents; the cached"
+          " path's advantage grows with prompt length — here prompts are"
+          " short, production prompts dominate)")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

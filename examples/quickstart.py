@@ -1,0 +1,50 @@
+"""Quickstart: train a tiny masked-diffusion LM on arithmetic, then decode
+the same prompts with a heuristic order and with FDM to see the difference.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import DecodeConfig, TrainConfig, get_config
+from repro.core import generate
+from repro.data import CharTokenizer, TaskDataset
+from repro.models.model import forward
+from repro.training import train
+
+
+def main():
+    # 1. a reduced config from the paper's own model family
+    cfg = get_config("llada-8b").reduced(num_layers=4, d_model=256,
+                                         num_heads=4, num_kv_heads=4,
+                                         d_ff=1024)
+    tok = CharTokenizer(cfg.vocab_size)
+    ds = TaskDataset("sum", tok)
+
+    # 2. train on the Eq. 4 masked-diffusion objective
+    tcfg = TrainConfig(batch_size=64, seq_len=ds.seq_len, steps=250,
+                       log_every=50)
+    print(f"training {cfg.param_count() / 1e6:.1f} M-param LLDM on 'sum' …")
+    params, _ = train(cfg, tcfg, ds.batches(tcfg.batch_size))
+
+    # 3. decode held-out prompts with two strategies
+    model_fn = jax.jit(lambda x: forward(params, x, cfg)[0])
+    batch = ds.eval_batch(32)
+    prompts = jnp.asarray(ds.prompts_only(batch))
+    gen = ds.seq_len - prompts.shape[1]
+    for strategy in ["probability", "fdm"]:
+        dcfg = DecodeConfig(gen_length=gen, block_size=gen, steps=gen,
+                            strategy=strategy, k=3)
+        out, stats = generate(jax.random.PRNGKey(0), model_fn, prompts,
+                              cfg, dcfg)
+        em = ds.exact_match(np.asarray(jax.device_get(out)), batch)
+        print(f"{strategy:12s} exact-match {em:.2%}  "
+              f"({stats.tokens_per_forward:.2f} tokens/forward)")
+        for i in range(2):
+            print(f"   {tok.decode(prompts[i])!r} -> "
+                  f"{tok.decode(np.asarray(out)[i][ds.answer_slice])!r}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Config registry: ``get_config(name)`` / ``--arch <id>`` resolution."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import (DecodeConfig, EncDecConfig, MLAConfig,
+                                ModelConfig, MoEConfig, SSMConfig, TrainConfig)
+
+# arch id -> module (one file per assigned architecture + the paper's own)
+_MODULES: Dict[str, str] = {
+    "whisper-medium":   "repro.configs.whisper_medium",
+    "mixtral-8x22b":    "repro.configs.mixtral_8x22b",
+    "stablelm-12b":     "repro.configs.stablelm_12b",
+    "stablelm-3b":      "repro.configs.stablelm_3b",
+    "qwen3-14b":        "repro.configs.qwen3_14b",
+    "xlstm-125m":       "repro.configs.xlstm_125m",
+    "chatglm3-6b":      "repro.configs.chatglm3_6b",
+    "deepseek-v2-236b": "repro.configs.deepseek_v2_236b",
+    "hymba-1.5b":       "repro.configs.hymba_1_5b",
+    "qwen2-vl-72b":     "repro.configs.qwen2_vl_72b",
+    "llada-8b":         "repro.configs.llada_8b",
+}
+
+ASSIGNED_ARCHS: List[str] = [k for k in _MODULES if k != "llada-8b"]
+
+
+def get_config(name: str) -> ModelConfig:
+    if name.endswith("-tiny"):
+        return get_config(name[: -len("-tiny")]).reduced()
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(_MODULES)}")
+    return importlib.import_module(_MODULES[name]).CONFIG
+
+
+def list_configs() -> List[str]:
+    return sorted(_MODULES)
+
+
+__all__ = [
+    "ModelConfig", "MoEConfig", "MLAConfig", "SSMConfig", "EncDecConfig",
+    "DecodeConfig", "TrainConfig", "get_config", "list_configs", "ASSIGNED_ARCHS",
+]

@@ -1,0 +1,253 @@
+"""Config dataclasses for the foresee framework.
+
+A single ``ModelConfig`` describes every architecture in the assigned pool; the
+block assembler (``repro.models.blocks``) reads the flags it needs.  Configs are
+frozen dataclasses so they hash and can key jit caches.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int = 0              # routed experts (0 = dense)
+    num_experts_per_tok: int = 0      # top-k
+    num_shared_experts: int = 0       # DeepSeek-style always-on experts
+    moe_d_ff: int = 0                 # per-expert hidden size
+    first_k_dense: int = 0            # leading layers that stay dense (DeepSeek-V2: 1)
+    router_aux_coef: float = 0.01     # load-balance loss weight
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    """DeepSeek-V2 Multi-head Latent Attention dims."""
+    kv_lora_rank: int = 512
+    q_lora_rank: int = 1536
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """xLSTM / Mamba-family knobs."""
+    state_size: int = 16              # per-head/channel recurrent state (Hymba: 16)
+    conv_kernel: int = 4              # depthwise conv width (mamba)
+    expand: int = 2                   # inner expansion factor
+    # xLSTM block pattern: 'm' = mLSTM, 's' = sLSTM, repeated/cycled over layers.
+    xlstm_pattern: str = "mmmmmms"    # xLSTM-125m style: mostly mLSTM w/ periodic sLSTM
+    num_ssm_heads: int = 4
+
+
+@dataclass(frozen=True)
+class EncDecConfig:
+    encoder_layers: int = 0
+    encoder_seq: int = 0              # e.g. Whisper: 1500 audio frames
+    frontend: str = "none"            # 'audio_stub' | 'vision_stub' | 'none'
+    num_patch_tokens: int = 0         # VLM: stub patch embeddings prepended
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    arch_type: str                    # dense | moe | ssm | hybrid | encdec | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    source: str = ""                  # citation for the dims
+
+    head_dim: int = 0                 # 0 -> d_model // num_heads
+    attention: str = "gqa"            # gqa | mla | none (pure ssm)
+    rope: str = "standard"            # standard | half (ChatGLM 2d) | mrope | sinusoidal | none
+    rope_theta: float = 10000.0
+    mrope_sections: Tuple[int, ...] = ()   # M-RoPE split of head_dim/2 (t, h, w)
+    qk_norm: bool = False
+    sliding_window: int = 0           # 0 = full attention
+    norm: str = "rmsnorm"             # rmsnorm | layernorm
+    act: str = "silu"                 # silu (SwiGLU) | gelu (plain MLP)
+    tie_embeddings: bool = False
+
+    moe: MoEConfig = field(default_factory=MoEConfig)
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+    encdec: Optional[EncDecConfig] = None
+    # hybrid (Hymba): fraction of heads that are SSM heads, run in parallel with attn
+    hybrid_ssm_heads: int = 0
+
+    # diffusion
+    mask_token_id: int = -1           # -1 -> vocab_size - 1 (reserved)
+    max_seq_len: int = 4096
+    dtype: str = "bfloat16"
+    remat: str = "none"               # none | block  (checkpoint each block in train fwd)
+    unroll: bool = False              # unroll layers instead of lax.scan
+                                      # (dry-run cost extrapolation: XLA
+                                      # counts a scan body once)
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+        if self.mask_token_id < 0:
+            object.__setattr__(self, "mask_token_id", self.vocab_size - 1)
+        assert self.num_heads % max(self.num_kv_heads, 1) == 0, self.name
+
+    # -- derived ----------------------------------------------------------
+    @property
+    def is_moe(self) -> bool:
+        return self.moe.num_experts > 0
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.encdec is not None and self.encdec.encoder_layers > 0
+
+    @property
+    def subquadratic(self) -> bool:
+        """True iff long-context decode (long_500k) is admissible."""
+        return self.arch_type in ("ssm", "hybrid") or self.sliding_window > 0
+
+    def param_count(self) -> int:
+        """Analytic total parameter count (embeddings included once)."""
+        return _param_count(self)
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: shared + top-k experts only)."""
+        return _param_count(self, active_only=True)
+
+    def reduced(self, **over) -> "ModelConfig":
+        """The smoke-test variant: same family, tiny dims (spec: <=2 layers,
+        d_model<=512, <=4 experts)."""
+        small: dict = dict(
+            name=self.name + "-tiny",
+            num_layers=min(self.num_layers, 2),
+            d_model=min(self.d_model, 256),
+            num_heads=min(self.num_heads, 4),
+            d_ff=min(self.d_ff, 512) if self.d_ff else 0,
+            vocab_size=min(self.vocab_size, 512),
+            max_seq_len=min(self.max_seq_len, 128),
+            head_dim=0,
+            mask_token_id=-1,
+            dtype="float32",
+            remat="none",
+        )
+        small["num_kv_heads"] = min(self.num_kv_heads, small["num_heads"])
+        if small["num_heads"] % small["num_kv_heads"]:
+            small["num_kv_heads"] = 1
+        if self.is_moe:
+            small["moe"] = dataclasses.replace(
+                self.moe,
+                num_experts=min(self.moe.num_experts, 4),
+                num_experts_per_tok=min(self.moe.num_experts_per_tok, 2),
+                num_shared_experts=min(self.moe.num_shared_experts, 1),
+                moe_d_ff=min(self.moe.moe_d_ff, 256),
+                first_k_dense=min(self.moe.first_k_dense, 1),
+            )
+        if self.mla is not None:
+            small["mla"] = MLAConfig(kv_lora_rank=64, q_lora_rank=96,
+                                     qk_nope_head_dim=32, qk_rope_head_dim=16,
+                                     v_head_dim=32)
+        if self.ssm is not None:
+            small["ssm"] = dataclasses.replace(
+                self.ssm, state_size=min(self.ssm.state_size, 16),
+                num_ssm_heads=min(self.ssm.num_ssm_heads, 2))
+        if self.encdec is not None:
+            small["encdec"] = dataclasses.replace(
+                self.encdec,
+                encoder_layers=min(self.encdec.encoder_layers, 2),
+                encoder_seq=min(self.encdec.encoder_seq, 32) or 0,
+                num_patch_tokens=min(self.encdec.num_patch_tokens, 16))
+        if self.hybrid_ssm_heads:
+            small["hybrid_ssm_heads"] = 1
+        if self.sliding_window:
+            small["sliding_window"] = 32
+        if self.mrope_sections:
+            hd = small["d_model"] // small["num_heads"]
+            small["mrope_sections"] = (hd // 4, hd // 8, hd // 8)
+        small.update(over)
+        return dataclasses.replace(self, **small)
+
+
+def _param_count(cfg: ModelConfig, active_only: bool = False) -> int:
+    d, hd = cfg.d_model, cfg.head_dim
+    n_q, n_kv = cfg.num_heads, cfg.num_kv_heads
+    embed = cfg.vocab_size * d * (1 if cfg.tie_embeddings else 2)
+    if cfg.attention == "mla" and cfg.mla is not None:
+        m = cfg.mla
+        qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+        attn = (d * m.q_lora_rank + m.q_lora_rank * n_q * qk
+                + d * (m.kv_lora_rank + m.qk_rope_head_dim)
+                + m.kv_lora_rank * n_q * (m.qk_nope_head_dim + m.v_head_dim)
+                + n_q * m.v_head_dim * d)
+    else:
+        attn = d * (n_q * hd) + 2 * d * (n_kv * hd) + (n_q * hd) * d
+    if cfg.arch_type == "ssm":
+        # xLSTM block: qkv-style projections + gates; approximate with expand factor
+        e = cfg.ssm.expand if cfg.ssm else 2
+        per_layer = 2 * d * (e * d) + (e * d) * d + 4 * d
+        return embed + cfg.num_layers * per_layer
+    def ffn_params(dff):
+        mult = 3 if cfg.act == "silu" else 2      # SwiGLU has gate+up+down
+        return mult * d * dff
+    per_layer = attn + 2 * d  # norms
+    if cfg.hybrid_ssm_heads and cfg.ssm:
+        e = cfg.ssm.expand
+        per_layer += d * (e * d) + (e * d) * d   # parallel SSM path
+    total = 0
+    for li in range(cfg.num_layers):
+        layer = per_layer
+        if cfg.is_moe and li >= cfg.moe.first_k_dense:
+            n_routed = (cfg.moe.num_experts_per_tok if active_only
+                        else cfg.moe.num_experts)
+            layer += (n_routed + cfg.moe.num_shared_experts) * ffn_params(cfg.moe.moe_d_ff)
+            layer += d * cfg.moe.num_experts   # router
+        elif cfg.d_ff:
+            layer += ffn_params(cfg.d_ff)
+        total += layer
+    if cfg.is_encdec and cfg.encdec:
+        # encoder layers (full attn + ffn) + per-decoder-layer cross attention
+        enc = cfg.encdec.encoder_layers * (attn + ffn_params(cfg.d_ff) + 2 * d)
+        total += enc + cfg.num_layers * attn
+    return embed + total
+
+
+@dataclass(frozen=True)
+class DecodeConfig:
+    """Sampler / strategy hyperparameters (paper §5.1 defaults)."""
+    gen_length: int = 256
+    block_size: int = 64
+    steps: int = 256                   # T
+    strategy: str = "fdm"              # random|probability|margin|entropy|eb|wino|fdm|fdm_a
+    temperature: float = 0.0
+    # FDM (Algorithm 1)
+    k: int = 2                         # search width K
+    gamma: float = 0.6                 # dynamic pruning threshold
+    # FDM-A (Algorithm 2)
+    k1: int = 2
+    gamma1: float = 0.5
+    eta1: float = 0.8
+    eta2: float = 0.7
+    n_max: int = 8                     # N: decode-count upper bound
+    # EB baseline
+    eb_threshold: float = 0.5
+    # WINO baseline
+    wino_tau1: float = 0.7
+    wino_tau2: float = 0.9
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    batch_size: int = 32
+    seq_len: int = 64
+    steps: int = 300
+    lr: float = 3e-4
+    warmup: int = 20
+    weight_decay: float = 0.01
+    clip_norm: float = 1.0
+    seed: int = 0
+    log_every: int = 50
+    eval_every: int = 100
+    ckpt_dir: str = ""

@@ -1,0 +1,28 @@
+"""qwen2-vl-72b — VLM language backbone with M-RoPE [arXiv:2409.12191].
+
+80 layers, d_model=8192, 64 heads (GQA kv=8), d_ff=29568, vocab=152064.
+Vision encoder is a STUB: input_specs supplies precomputed patch embeddings
+(dynamic-resolution token count fixed to 1024 stand-in patches); the language
+model consumes them through the shared embedding stream with 3-section M-RoPE
+(temporal/height/width) position ids.
+"""
+from repro.configs.base import EncDecConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-72b",
+    arch_type="vlm",
+    source="arXiv:2409.12191",
+    num_layers=80,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=29568,
+    vocab_size=152064,
+    rope="mrope",
+    mrope_sections=(16, 24, 24),   # t,h,w split of head_dim/2 = 64
+    rope_theta=1_000_000.0,
+    encdec=EncDecConfig(frontend="vision_stub", num_patch_tokens=1024),
+    max_seq_len=32768,
+    remat="block",
+)

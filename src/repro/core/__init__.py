@@ -1,0 +1,31 @@
+"""The paper's contribution: foreseeing decoding for masked-diffusion LMs.
+
+Public API:
+  masking     — forward (noising) process, inference start states
+  loss        — Eq. 4 masked cross-entropy
+  confidence  — C_local metrics + the C_global (foreseeing) estimator
+  strategies  — Random/Probability/Margin/Entropy + EB + WINO baselines
+  fdm         — Algorithm 1 (FDM)
+  fdm_a       — Algorithm 2 (FDM-A, three-phase adaptive)
+  sampler     — semi-autoregressive block sampler driving any strategy
+"""
+from repro.core.confidence import (Scores, global_confidence,
+                                   local_confidence, score_logits)
+from repro.core.fdm import fdm_select, fdm_step
+from repro.core.fdm_a import fdm_a_plan, fdm_a_step
+from repro.core.loss import masked_cross_entropy, token_accuracy
+from repro.core.masking import (apply_mask, fully_masked, mask_positions,
+                                sample_mask_ratio)
+from repro.core.sampler import (SampleStats, generate,
+                               generate_cached, make_model_fn)
+from repro.core.strategies import commit_topn, get_strategy, rank_desc
+
+__all__ = [
+    "Scores", "score_logits", "local_confidence", "global_confidence",
+    "fdm_step", "fdm_select", "fdm_a_step", "fdm_a_plan",
+    "masked_cross_entropy", "token_accuracy",
+    "apply_mask", "fully_masked", "mask_positions", "sample_mask_ratio",
+    "SampleStats", "generate", "generate_cached", "make_model_fn",
+    "get_strategy",
+    "commit_topn", "rank_desc",
+]

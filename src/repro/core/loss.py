@@ -1,0 +1,36 @@
+"""Eq. 4 — the masked-diffusion training objective.
+
+L(θ) = E_{x, t} [ 1/t · Σ_j 1[x_t^(j) = Mask] · (-log p_θ(x^(j) | x_t, q)) ]
+
+The 1/t reweighting makes the objective an upper bound on NLL; aux losses
+(MoE load-balance) are added by the caller.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def masked_cross_entropy(logits: jnp.ndarray, targets: jnp.ndarray,
+                         masked: jnp.ndarray, t: jnp.ndarray
+                         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """logits (B,L,V) f32, targets (B,L) int, masked (B,L) bool, t (B,).
+
+    Returns (scalar loss, per-example masked-token count).
+    """
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    w = masked.astype(jnp.float32) / jnp.maximum(t, 1e-3)[:, None]
+    count = jnp.maximum(jnp.sum(masked), 1)
+    loss = jnp.sum(nll * w) / count
+    return loss, jnp.sum(masked, axis=-1)
+
+
+def token_accuracy(logits: jnp.ndarray, targets: jnp.ndarray,
+                   masked: jnp.ndarray) -> jnp.ndarray:
+    """Fraction of masked positions whose argmax equals the target."""
+    pred = jnp.argmax(logits, axis=-1)
+    hit = (pred == targets) & masked
+    return jnp.sum(hit) / jnp.maximum(jnp.sum(masked), 1)

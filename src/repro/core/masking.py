@@ -1,0 +1,52 @@
+"""The forward (noising) process of masked-diffusion LMs.
+
+LLaDA's training corruption (Eq. 4): sample a mask ratio t ~ U(0, 1] per
+example, independently replace each answer token with ``Mask`` w.p. t.  The
+loss reweights masked positions by 1/t so the objective is an exact bound on
+the data NLL (Nie et al., 2025).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def sample_mask_ratio(rng, batch: int, eps: float = 1e-3) -> jnp.ndarray:
+    """t ~ U(eps, 1] per example."""
+    return jax.random.uniform(rng, (batch,), minval=eps, maxval=1.0)
+
+
+def apply_mask(rng, tokens: jnp.ndarray, t: jnp.ndarray,
+               cfg: ModelConfig,
+               maskable: Optional[jnp.ndarray] = None
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Corrupt ``tokens`` (B, L): each maskable position -> Mask w.p. t[b].
+
+    ``maskable`` (B, L) bool restricts corruption to the answer region
+    (prompt tokens are conditioning and never masked).  Returns
+    (corrupted tokens, mask indicator (B, L) bool).
+    """
+    b, l = tokens.shape
+    u = jax.random.uniform(rng, (b, l))
+    masked = u < t[:, None]
+    if maskable is not None:
+        masked = masked & maskable
+    corrupted = jnp.where(masked, cfg.mask_token_id, tokens)
+    return corrupted, masked
+
+
+def fully_masked(cfg: ModelConfig, prompt: jnp.ndarray,
+                 gen_length: int) -> jnp.ndarray:
+    """Inference start state: [prompt | Mask × gen_length]."""
+    b = prompt.shape[0]
+    tail = jnp.full((b, gen_length), cfg.mask_token_id, prompt.dtype)
+    return jnp.concatenate([prompt, tail], axis=1)
+
+
+def mask_positions(tokens: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """(B, L) bool: which positions are still masked."""
+    return tokens == cfg.mask_token_id

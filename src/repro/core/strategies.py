@@ -1,0 +1,120 @@
+"""Baseline decoding-order strategies (the paper's comparison set).
+
+Heuristics (§2, Table 2): Random / Probability / Margin / Entropy — commit
+the n most confident masked positions per step, confidence judged locally.
+
+Dynamic baselines (§5, Table 3):
+* **EB** (Ben-Hamu et al., 2025): entropy-bounded parallel unmasking —
+  commit every position whose predictive entropy is below a bound (always
+  at least the single most confident one).
+* **WINO** (Hong et al., 2025): wide-in narrow-out — greedily commit every
+  position above τ₁, then re-verify with one extra forward pass and revoke
+  (re-mask) commitments whose re-scored confidence drops below τ₂ (the top
+  confidence token is always kept so progress is guaranteed).
+
+All strategies share the same jit-friendly primitive: a per-example top-n
+masked commit with fixed shapes (ranking instead of dynamic gather).
+"""
+from __future__ import annotations
+
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import DecodeConfig, ModelConfig
+from repro.core.confidence import Scores, local_confidence, score_logits
+
+ModelFn = Callable[[jnp.ndarray], jnp.ndarray]   # tokens (B,L) -> logits
+
+NEG = -1e30
+
+
+def rank_desc(conf: jnp.ndarray) -> jnp.ndarray:
+    """Dense descending rank per row: rank 0 = highest confidence."""
+    order = jnp.argsort(-conf, axis=-1)
+    return jnp.argsort(order, axis=-1)
+
+
+def commit_topn(x: jnp.ndarray, conf: jnp.ndarray, cand: jnp.ndarray,
+                eligible: jnp.ndarray, n: jnp.ndarray) -> jnp.ndarray:
+    """Commit cand tokens at the top-n eligible positions per example.
+
+    conf (B,L) ranking score; eligible (B,L) bool; n (B,) or scalar int.
+    """
+    c = jnp.where(eligible, conf, NEG)
+    ranks = rank_desc(c)
+    n_arr = jnp.asarray(n)
+    if n_arr.ndim == 0:
+        n_arr = n_arr[None].repeat(x.shape[0], 0)
+    commit = eligible & (ranks < n_arr[:, None])
+    return jnp.where(commit, cand, x)
+
+
+# --------------------------------------------------------------------------
+# strategy step functions
+# --------------------------------------------------------------------------
+# signature: step(rng, x, active, model_fn, cfg, dcfg, n) ->
+#   (new_x, extra_forwards) — `active` marks the current semi-AR block's
+#   still-masked positions; the caller already ran one forward whose logits
+#   we recompute inside model_fn for jit friendliness (the sampler fuses).
+
+def heuristic_step(metric: str):
+    def step(rng, x, active, model_fn: ModelFn, cfg: ModelConfig,
+             dcfg: DecodeConfig, n) -> Tuple[jnp.ndarray, int]:
+        logits = model_fn(x)
+        s = score_logits(logits)
+        if metric == "random":
+            conf = jax.random.uniform(rng, x.shape)
+        else:
+            conf = local_confidence(s, metric)
+        return commit_topn(x, conf, s.argmax, active, n), 1
+    return step
+
+
+def eb_step(rng, x, active, model_fn: ModelFn, cfg: ModelConfig,
+            dcfg: DecodeConfig, n) -> Tuple[jnp.ndarray, int]:
+    """Entropy-bounded: commit everything with H < bound, at least one."""
+    logits = model_fn(x)
+    s = score_logits(logits)
+    low_entropy = (-s.neg_entropy) < dcfg.eb_threshold
+    conf = jnp.where(active, s.neg_entropy, NEG)
+    best = rank_desc(conf) == 0                       # guarantee progress
+    commit = active & (low_entropy | best)
+    return jnp.where(commit, s.argmax, x), 1
+
+
+def wino_step(rng, x, active, model_fn: ModelFn, cfg: ModelConfig,
+              dcfg: DecodeConfig, n) -> Tuple[jnp.ndarray, int]:
+    """Wide-in (commit > τ₁) then narrow-out (revoke < τ₂ on re-score)."""
+    logits = model_fn(x)
+    s = score_logits(logits)
+    conf = jnp.where(active, s.max_prob, NEG)
+    best = rank_desc(conf) == 0
+    wide = active & ((s.max_prob > dcfg.wino_tau1) | best)
+    x_wide = jnp.where(wide, s.argmax, x)
+    # verify: re-score the committed tokens in their new context
+    logits2 = model_fn(x_wide)
+    logp2 = jax.nn.log_softmax(logits2.astype(jnp.float32), axis=-1)
+    p_committed = jnp.exp(jnp.take_along_axis(
+        logp2, x_wide[..., None], axis=-1)[..., 0])
+    revoke = wide & (p_committed < dcfg.wino_tau2) & ~best
+    return jnp.where(revoke, cfg.mask_token_id, x_wide), 2
+
+
+def get_strategy(name: str):
+    from repro.core.fdm import fdm_step
+    from repro.core.fdm_a import fdm_a_step
+    table = {
+        "random": heuristic_step("random"),
+        "probability": heuristic_step("probability"),
+        "margin": heuristic_step("margin"),
+        "entropy": heuristic_step("entropy"),
+        "eb": eb_step,
+        "wino": wino_step,
+        "fdm": fdm_step,
+        "fdm_a": fdm_a_step,
+    }
+    if name not in table:
+        raise KeyError(f"unknown strategy {name!r}; have {sorted(table)}")
+    return table[name]

@@ -1,0 +1,5 @@
+from repro.data.loader import TaskDataset
+from repro.data.tasks import TASKS, task_geometry
+from repro.data.tokenizer import CharTokenizer
+
+__all__ = ["TaskDataset", "TASKS", "task_geometry", "CharTokenizer"]

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the decode-scoring and attention hot spots.
+
+``confidence``      — fused streaming (argmax / max-prob / margin / entropy)
+``flash_attention`` — bidirectional flash attention + sliding-window band
+``ops``             — jit'd public wrappers with jnp fallback dispatch
+``ref``             — pure-jnp oracles (the allclose ground truth)
+"""
+from repro.kernels.ops import attention, score_logits_fused, use_pallas
+
+__all__ = ["attention", "score_logits_fused", "use_pallas"]

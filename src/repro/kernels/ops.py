@@ -1,0 +1,46 @@
+"""Public jit'd wrappers for the Pallas kernels with jnp fallback dispatch.
+
+On this CPU container the kernels run in ``interpret=True`` mode, which is
+slow (Python-level emulation) but bit-faithful — so the default execution
+path uses the pure-jnp reference and the kernels are exercised by the test
+suite + benchmarks.  On a real TPU set ``use_pallas(True)`` (or env
+``REPRO_USE_PALLAS=1``) to route the hot paths through the fused kernels.
+"""
+from __future__ import annotations
+
+import os
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.confidence import Scores
+from repro.kernels import ref as ref_lib
+from repro.kernels.confidence import confidence_fused
+from repro.kernels.flash_attention import flash_attention
+
+_ON_TPU = any(d.platform == "tpu" for d in jax.devices())
+_STATE = {"use_pallas": bool(int(os.environ.get("REPRO_USE_PALLAS", "0")))
+          or _ON_TPU}
+
+
+def use_pallas(flag: bool) -> None:
+    _STATE["use_pallas"] = flag
+
+
+def score_logits_fused(logits: jnp.ndarray) -> Scores:
+    """Fused (single HBM pass) version of ``core.confidence.score_logits``."""
+    if _STATE["use_pallas"]:
+        a, p, m, e = confidence_fused(logits, interpret=not _ON_TPU)
+    else:
+        a, p, m, e = ref_lib.confidence_ref(logits)
+    return Scores(argmax=a, max_prob=p, margin=m, neg_entropy=e)
+
+
+def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+              window: int = 0) -> jnp.ndarray:
+    """Flash bidirectional attention (band-masked when window > 0)."""
+    if _STATE["use_pallas"]:
+        return flash_attention(q, k, v, window=window,
+                               interpret=not _ON_TPU)
+    return ref_lib.attention_ref(q, k, v, window=window)

@@ -1,0 +1,10 @@
+"""Launchers: production meshes, the multi-pod dry-run, train/serve CLIs.
+
+``dryrun`` must be executed as a script/module (it sets XLA_FLAGS before
+importing jax); do not import it from library code.
+"""
+from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS, make_host_mesh,
+                               make_production_mesh)
+
+__all__ = ["HBM_BW", "ICI_BW", "PEAK_FLOPS", "make_host_mesh",
+           "make_production_mesh"]

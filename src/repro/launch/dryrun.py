@@ -1,0 +1,213 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count on first initialization).  512 host-platform placeholder devices let
+# ``jax.make_mesh`` build the production meshes; nothing is ever allocated —
+# the dry-run lowers and compiles against ShapeDtypeStruct stand-ins only.
+"""Multi-pod dry-run: prove every (architecture × input-shape × mesh)
+combination lowers, compiles, fits — and report its roofline terms.
+
+Per combination, THREE compiles:
+  1. the FULL config — the lowering proof + memory_analysis (buffer sizes
+     are exact regardless of loop structure);
+  2./3. layer-reduced variants (L₀ and L₀+1 layers) — XLA's cost_analysis
+     counts a scanned layer body once, not × trip count (verified), so the
+     true per-step cost is extrapolated:
+         cost(L) = cost(L₀) + (L − L₀)·(cost(L₀+1) − cost(L₀)).
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen3-14b --shape train_4k
+    python -m repro.launch.dryrun --all                  # every combo, 16×16
+    python -m repro.launch.dryrun --all --multi-pod      # + (2,16,16)
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import ASSIGNED_ARCHS, TrainConfig, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import Roofline, measure, model_flops_per_step
+from repro.launch.specs import SHAPES, input_specs, shape_admissible
+from repro.launch.steps import make_steps
+from repro.parallel.sharding import to_named
+
+
+def _compile(cfg, shape_name: str, mesh, opts: frozenset = frozenset()):
+    from repro.parallel.ctx import activation_mesh
+    bundle = input_specs(cfg, shape_name, mesh, opts=opts)
+    step_fn = make_steps(cfg, TrainConfig(), opts=opts)[bundle.kind]
+    in_shardings = to_named(mesh, bundle.in_specs)
+    out_shardings = (to_named(mesh, bundle.out_specs)
+                     if bundle.out_specs is not None else None)
+    # serve donates the decode state (32k/500k cache updated in place);
+    # train donates params + optimizer state (the AdamW update is in-place)
+    donate = (3,) if bundle.kind == "serve" else \
+        (0, 1) if bundle.kind == "train" else ()
+    jitted = jax.jit(step_fn, in_shardings=in_shardings,
+                     out_shardings=out_shardings, donate_argnums=donate)
+    with activation_mesh(mesh, seq_shard=(bundle.kind != "serve"),
+                         local_moe="global_moe" not in opts,
+                         seq_attn="seq_attn" in opts,
+                         xgather="xgather" in opts):
+        return jitted.lower(*bundle.args).compile()
+
+
+def _reduced(cfg, n_layers: int):
+    # unroll=True: cost_analysis counts every (unrolled) layer, so the
+    # L0 -> L0+1 delta is the true per-layer cost
+    over = {"num_layers": n_layers, "unroll": True}
+    if cfg.encdec is not None and cfg.encdec.encoder_layers:
+        over["encdec"] = dataclasses.replace(cfg.encdec,
+                                             encoder_layers=n_layers)
+    return dataclasses.replace(cfg, **over)
+
+
+def dryrun(arch: str, shape_name: str, multi_pod: bool = False,
+           verbose: bool = True, skip_full: bool = False,
+           skip_roofline: bool = False,
+           opts: frozenset = frozenset()) -> Roofline:
+    cfg = get_config(arch)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    mesh_name = "x".join(str(s) for s in mesh.devices.shape)
+    kind, seq, batch = SHAPES[shape_name]
+
+    # 1) full-config compile: the lowering proof + memory analysis.
+    # NOTE (serve shapes): the CPU host backend legalizes bf16 dot operands
+    # to f32, materializing f32 copies of the KV cache that a real TPU
+    # (native bf16 MXU) never allocates — decode temp numbers are therefore
+    # a ~2-3x overestimate; the honest per-device cache size is
+    # argument_size (see EXPERIMENTS.md §Dry-run).
+    peak = None
+    args_bytes = None
+    t_full = 0.0
+    if not skip_full:
+        t0 = time.perf_counter()
+        compiled_full = _compile(cfg, shape_name, mesh, opts)
+        t_full = time.perf_counter() - t0
+        ma = compiled_full.memory_analysis()
+        peak = (ma.argument_size_in_bytes + ma.output_size_in_bytes
+                + ma.temp_size_in_bytes - ma.alias_size_in_bytes)
+        args_bytes = ma.argument_size_in_bytes
+        if verbose:
+            print(f"[{arch} × {shape_name} × {mesh_name}] "
+                  f"full compile {t_full:.1f}s")
+            print(f"  memory_analysis: {ma}")
+        del compiled_full
+
+    if skip_roofline:
+        return Roofline(arch=arch, shape=shape_name, mesh=mesh_name,
+                        chips=chips, flops=0.0, bytes_accessed=0.0,
+                        coll_bytes=0.0, peak_memory=peak,
+                        args_bytes=args_bytes,
+                        model_flops=model_flops_per_step(cfg, kind, seq,
+                                                         batch))
+
+    # 2) per-layer extrapolation (scan bodies are counted once by XLA)
+    l0 = (cfg.moe.first_k_dense + 1) if cfg.is_moe else 1
+    l0 = max(l0, 1)
+    t0 = time.perf_counter()
+    m_lo = measure(_compile(_reduced(cfg, l0), shape_name, mesh, opts))
+    m_hi = measure(_compile(_reduced(cfg, l0 + 1), shape_name, mesh, opts))
+    t_extr = time.perf_counter() - t0
+    n_extra = cfg.num_layers - l0
+    # the microbatch accumulation loop is also a scan counted once: scale
+    # terms by the microbatch factor so per-step costs stay comparable
+    micro = 1
+    for o in opts:
+        if o.startswith("microbatch"):
+            micro = int(o[len("microbatch"):] or 1)
+    # per-layer deltas clamped at 0: XLA optimization variance between the
+    # two compiles can otherwise produce (meaningless) negative terms
+    ext = lambda lo, hi: (lo + n_extra * max(0.0, hi - lo)) * micro
+    flops = ext(m_lo[0], m_hi[0])
+    byts = ext(m_lo[1], m_hi[1])
+    coll = ext(m_lo[2], m_hi[2])
+    breakdown = {k: int(ext(m_lo[3].get(k, 0), m_hi[3].get(k, 0)))
+                 for k in set(m_lo[3]) | set(m_hi[3])}
+
+    roof = Roofline(arch=arch, shape=shape_name, mesh=mesh_name, chips=chips,
+                    flops=flops, bytes_accessed=byts, coll_bytes=coll,
+                    coll_breakdown=breakdown,
+                    model_flops=model_flops_per_step(cfg, kind, seq, batch),
+                    peak_memory=peak, args_bytes=args_bytes)
+    if verbose:
+        print(f"  layer-extrapolated (L0={l0}, {t_extr:.1f}s): "
+              f"flops={flops:.3e} bytes={byts:.3e} coll={coll:.3e}")
+        print(f"  roofline: compute {roof.t_compute * 1e3:.2f} ms | "
+              f"memory {roof.t_memory * 1e3:.2f} ms | "
+              f"collective {roof.t_collective * 1e3:.2f} ms "
+              f"-> {roof.bottleneck}-bound | useful {roof.useful_ratio:.3f}"
+              + (f" | peak {peak / 2**30:.2f} GiB/dev" if peak else ""))
+    return roof
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None,
+                    help="architecture id (default: all assigned)")
+    ap.add_argument("--shape", default=None,
+                    help="input shape id (default: all four)")
+    ap.add_argument("--multi-pod", action="store_true",
+                    help="use the (2,16,16) 512-chip mesh")
+    ap.add_argument("--all", action="store_true",
+                    help="run every admissible (arch × shape)")
+    ap.add_argument("--skip-full", action="store_true",
+                    help="skip the full-config compile (roofline terms only)")
+    ap.add_argument("--no-roofline", action="store_true",
+                    help="full lower+compile proof only (multi-pod pass)")
+    ap.add_argument("--opt", default="",
+                    help="comma list of perf knobs: bf16_gather,"
+                         "infer_replicate,infer_bf16")
+    ap.add_argument("--json", default=None, help="append JSONL results here")
+    args = ap.parse_args()
+    opts = frozenset(o for o in args.opt.split(",") if o)
+
+    archs = [args.arch] if args.arch else list(ASSIGNED_ARCHS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    results, failures = [], []
+    for arch in archs:
+        cfg = get_config(arch)
+        for shape in shapes:
+            if not shape_admissible(cfg, shape):
+                print(f"[{arch} × {shape}] SKIP "
+                      f"(full-attention arch; see DESIGN.md)")
+                continue
+            try:
+                roof = dryrun(arch, shape, multi_pod=args.multi_pod,
+                              skip_full=args.skip_full,
+                              skip_roofline=args.no_roofline, opts=opts)
+                results.append(roof)
+            except Exception as e:   # a failure here is a sharding bug
+                failures.append((arch, shape, repr(e)))
+                traceback.print_exc()
+    print(f"\n=== dry-run summary: {len(results)} ok, "
+          f"{len(failures)} failed ===")
+    for arch, shape, err in failures:
+        print(f"  FAIL {arch} × {shape}: {err[:200]}")
+    if args.json and results:
+        with open(args.json, "a") as f:
+            for r in results:
+                f.write(json.dumps({
+                    "arch": r.arch, "shape": r.shape, "mesh": r.mesh,
+                    "chips": r.chips, "flops": r.flops,
+                    "bytes": r.bytes_accessed, "coll_bytes": r.coll_bytes,
+                    "coll_breakdown": r.coll_breakdown,
+                    "model_flops": r.model_flops,
+                    "peak_memory": r.peak_memory,
+                    "args_bytes": r.args_bytes,
+                    "t_compute": r.t_compute, "t_memory": r.t_memory,
+                    "t_collective": r.t_collective,
+                    "bottleneck": r.bottleneck,
+                    "useful_ratio": r.useful_ratio,
+                    "opts": sorted(opts)}) + "\n")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

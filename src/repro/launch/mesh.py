@@ -1,0 +1,28 @@
+"""Production meshes for the TPU v5e target.
+
+``make_production_mesh`` is a FUNCTION (importing this module never touches
+jax device state): single-pod is 256 chips as (16, 16) -> ("data","model"),
+multi-pod is 2 pods = 512 chips as (2, 16, 16) -> ("pod","data","model").
+The dry-run script materializes these over 512 forced host-platform
+devices; real launches get them from the TPU topology.
+"""
+from __future__ import annotations
+
+import jax
+
+# hardware constants (TPU v5e) used by the roofline analysis
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """A 1x1 mesh over the real local device (tests / examples)."""
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         devices=jax.devices()[:1])

@@ -1,0 +1,154 @@
+"""Roofline-term extraction from a compiled dry-run artifact.
+
+Three terms per (arch × shape × mesh), in seconds:
+
+    compute    = HLO_FLOPs   / PEAK_FLOPS          (per-chip program)
+    memory     = HLO_bytes   / HBM_BW
+    collective = coll_bytes  / ICI_BW
+
+``cost_analysis`` on a GSPMD-partitioned executable describes the
+*per-device* module, so the terms above are already per-chip; collective
+bytes are parsed from the compiled HLO text (sum of output sizes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute,
+which approximates the per-chip link traffic).
+
+MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE) per training step —
+the "useful"-compute yardstick; its ratio against total-step HLO FLOPs
+flags remat/redundancy waste.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.configs.base import ModelConfig
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1,
+}
+
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Tuple[int, Dict[str, int]]:
+    """Sum output sizes of every collective op in the HLO text."""
+    per_kind: Dict[str, int] = {k: 0 for k in _COLL_KINDS}
+    ops = 0
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^=]*?\)|\S+)\s+"
+                     r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+                     r"collective-permute)(-start)?\(", stripped)
+        if not m:
+            continue
+        size = _shape_bytes(m.group(1))
+        per_kind[m.group(2)] += size
+        ops += 1
+    return sum(per_kind.values()), per_kind
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops: float                  # per-chip HLO FLOPs
+    bytes_accessed: float         # per-chip HBM traffic
+    coll_bytes: float             # per-chip link traffic
+    coll_breakdown: Dict[str, int] = field(default_factory=dict)
+    model_flops: float = 0.0      # 6·N_active·D (global, per step)
+    peak_memory: Optional[float] = None   # bytes/device, from memory_analysis
+    args_bytes: Optional[float] = None    # params + caches per device
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_accessed / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        """MODEL_FLOPS / global HLO FLOPs (remat & redundancy waste)."""
+        total = self.flops * self.chips
+        return self.model_flops / total if total else 0.0
+
+    def row(self) -> str:
+        return (f"| {self.arch} | {self.shape} | {self.mesh} | "
+                f"{self.t_compute * 1e3:.2f} | {self.t_memory * 1e3:.2f} | "
+                f"{self.t_collective * 1e3:.2f} | **{self.bottleneck}** | "
+                f"{self.useful_ratio:.3f} |")
+
+
+def model_flops_per_step(cfg: ModelConfig, shape_kind: str, seq: int,
+                         batch: int) -> float:
+    """6·N_active·D for train (fwd+bwd), 2·N_active·D for inference."""
+    n = cfg.active_param_count()
+    if shape_kind == "train":
+        d = batch * seq
+        return 6.0 * n * d
+    if shape_kind == "prefill":
+        return 2.0 * n * batch * seq
+    return 2.0 * n * batch * 1       # serve: one token
+
+
+def measure(compiled) -> Tuple[float, float, float, Dict[str, int]]:
+    """(flops, bytes, collective_bytes, breakdown) of a compiled program.
+
+    NOTE: XLA's cost_analysis counts a while/scan body ONCE, not × trip
+    count (verified empirically) — callers that scan over layers must
+    extrapolate per-layer costs; see ``dryrun.roofline_extrapolated``.
+    """
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):       # older API returns [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    bytes_accessed = float(cost.get("bytes accessed", 0.0))
+    try:
+        hlo = compiled.as_text()
+    except Exception:
+        hlo = ""
+    coll, breakdown = collective_bytes(hlo)
+    return flops, bytes_accessed, float(coll), breakdown
+
+
+def peak_memory(compiled) -> Optional[float]:
+    try:
+        ma = compiled.memory_analysis()
+        return (ma.argument_size_in_bytes + ma.output_size_in_bytes
+                + ma.temp_size_in_bytes)
+    except Exception:
+        return None

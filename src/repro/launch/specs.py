@@ -1,0 +1,137 @@
+"""ShapeDtypeStruct stand-ins + shardings for every dry-run combination.
+
+``input_specs(cfg, shape_name, mesh)`` returns (step_kind, args, in_specs,
+out_specs) where ``args`` is a pytree of ShapeDtypeStruct — weak-type
+correct, shardable, zero device allocation — and the spec trees mirror it.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.models.model import init_decode_state, init_model
+from repro.parallel.sharding import (batch_pspec, cache_pspecs, data_axes,
+                                     param_pspecs, seq_pspec)
+from repro.training.optimizer import adamw_init
+
+# shape id -> (step kind, seq_len, global_batch)
+SHAPES: Dict[str, Tuple[str, int, int]] = {
+    "train_4k":    ("train",   4_096, 256),
+    "prefill_32k": ("prefill", 32_768, 32),
+    "decode_32k":  ("serve",   32_768, 128),
+    "long_500k":   ("serve",   524_288, 1),
+}
+
+
+class SpecBundle(NamedTuple):
+    kind: str
+    args: Tuple            # positional args for the step fn (SDS pytrees)
+    in_specs: Tuple        # matching PartitionSpec pytrees
+    out_specs: Any         # PartitionSpec pytree or None (compiler choice)
+
+
+def shape_admissible(cfg: ModelConfig, shape_name: str) -> bool:
+    """long_500k only for sub-quadratic archs (DESIGN.md §Arch-applicability)."""
+    if shape_name == "long_500k":
+        return cfg.subquadratic
+    return True
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def params_spec(cfg: ModelConfig, mesh):
+    """(params SDS tree, PartitionSpec tree) without allocating anything."""
+    p_sds = jax.eval_shape(
+        functools.partial(init_model, cfg=cfg), jax.random.PRNGKey(0))
+    return p_sds, param_pspecs(p_sds, mesh)
+
+
+def _extras_sds(cfg: ModelConfig, batch: int):
+    """Stub-frontend inputs: precomputed frame / patch embeddings."""
+    out = {}
+    if cfg.encdec is not None and cfg.encdec.frontend == "audio_stub":
+        out["enc_embeds"] = _sds((batch, cfg.encdec.encoder_seq,
+                                  cfg.d_model), jnp.bfloat16)
+    if cfg.encdec is not None and cfg.encdec.frontend == "vision_stub":
+        out["patch_embeds"] = _sds((batch, cfg.encdec.num_patch_tokens,
+                                    cfg.d_model), jnp.bfloat16)
+    return out
+
+
+def input_specs(cfg: ModelConfig, shape_name: str, mesh,
+                opts: frozenset = frozenset()) -> SpecBundle:
+    """``opts`` (perf-pass knobs, see EXPERIMENTS.md §Perf):
+      infer_replicate — prefill/serve weights NOT FSDP-sharded on data
+                        (inference has no optimizer state to amortize;
+                        replication kills the per-layer all-gathers);
+      infer_bf16      — prefill/serve weights stored bf16 (a serving
+                        checkpoint), halving weight bytes.
+    """
+    kind, seq, batch = SHAPES[shape_name]
+    p_sds, p_spec = params_spec(cfg, mesh)
+    if kind != "train":
+        if "infer_replicate" in opts:
+            p_spec = param_pspecs(p_sds, mesh, fsdp=False)
+        if "infer_bf16" in opts:
+            p_sds = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct(s.shape, jnp.bfloat16)
+                if s.dtype == jnp.float32 else s, p_sds)
+    bspec = batch_pspec(mesh)
+    long_ctx = shape_name == "long_500k"
+    tok_spec = seq_pspec(mesh) if long_ctx else bspec
+
+    if kind == "train":
+        opt_sds = jax.eval_shape(adamw_init, p_sds)
+        opt_spec = type(opt_sds)(step=P(), mu=p_spec, nu=p_spec)
+        rng_sds = jax.eval_shape(lambda: jax.random.PRNGKey(0))
+        batch_sds = {"tokens": _sds((batch, seq), jnp.int32),
+                     "maskable": _sds((batch, seq), jnp.bool_),
+                     **_extras_sds(cfg, batch)}
+        # batch on the data axes; sequence parallelism (activation
+        # constraints inside the model) shards the seq axis on `model`
+        batch_spec = {k: batch_pspec(mesh, ndim=len(v.shape))
+                      for k, v in batch_sds.items()}
+        args = (p_sds, opt_sds, rng_sds, batch_sds)
+        in_specs = (p_spec, opt_spec, P(), batch_spec)
+        out_specs = (p_spec, opt_spec,
+                     {"loss": P(), "aux": P(), "acc": P()})
+        return SpecBundle("train", args, in_specs, out_specs)
+
+    if kind == "prefill":
+        batch_sds = {"tokens": _sds((batch, seq), jnp.int32),
+                     **_extras_sds(cfg, batch)}
+        batch_spec = {k: batch_pspec(mesh, ndim=len(v.shape))
+                      for k, v in batch_sds.items()}
+        args = (p_sds, batch_sds)
+        in_specs = (p_spec, batch_spec)
+        # Scores: 4 × (B, L) — replicate-free: batch on data
+        out_specs = None
+        return SpecBundle("prefill", args, in_specs, out_specs)
+
+    # serve: ONE new token vs a cache/state of length `seq`
+    def build_state():
+        enc = None
+        if cfg.encdec is not None and cfg.encdec.frontend == "audio_stub":
+            enc = jnp.zeros((batch, cfg.encdec.encoder_seq, cfg.d_model),
+                            jnp.bfloat16)
+        return init_decode_state(cfg, batch, seq, jnp.bfloat16, enc_out=enc)
+
+    state_sds = jax.eval_shape(build_state)
+    state_spec = cache_pspecs(state_sds, mesh, batch)
+    token_sds = _sds((batch, 1), jnp.int32)
+    pos_sds = _sds((batch, 1), jnp.int32)
+    dsize = 1
+    for a in data_axes(mesh):
+        dsize *= mesh.shape[a]
+    tok_sp = batch_pspec(mesh) if batch % dsize == 0 else P()
+    args = (p_sds, token_sds, pos_sds, state_sds)
+    in_specs = (p_spec, tok_sp, tok_sp, state_spec)
+    out_specs = None
+    return SpecBundle("serve", args, in_specs, out_specs)

@@ -1,0 +1,67 @@
+"""The three production step functions, one semantics for tests/examples
+and the multi-pod dry-run alike.
+
+* ``train_step``   — Eq. 4 loss + AdamW update (train_4k);
+* ``prefill_step`` — one full bidirectional forward + fused confidence
+                     scoring, i.e. step 0 of the sampler (prefill_32k);
+* ``serve_step``   — ONE new token against a frozen KV/recurrent state of
+                     the contract length + confidence scoring
+                     (decode_32k / long_500k).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.core.confidence import score_logits, score_logits_sharded
+from repro.models.layers import lm_head
+from repro.models.model import decode_step, forward
+from repro.training.trainer import make_train_step
+
+
+def extra_input_names(cfg: ModelConfig) -> Tuple[str, ...]:
+    if cfg.encdec is None:
+        return ()
+    if cfg.encdec.frontend == "audio_stub":
+        return ("enc_embeds",)
+    if cfg.encdec.frontend == "vision_stub":
+        return ("patch_embeds",)
+    return ()
+
+
+def make_steps(cfg: ModelConfig, tcfg: TrainConfig = None,
+               opts: frozenset = frozenset()) -> Dict[str, Callable]:
+    tcfg = tcfg or TrainConfig()
+    extras = extra_input_names(cfg)
+    micro = 1
+    for o in opts:
+        if o.startswith("microbatch"):
+            micro = int(o[len("microbatch"):] or 1)
+    train_step = make_train_step(cfg, tcfg, extra_inputs=extras,
+                                 bf16_params="bf16_gather" in opts,
+                                 microbatch=micro)
+
+    def prefill_step(params, batch):
+        """Full forward + confidence scoring over VOCAB-SHARDED logits.
+
+        The logits stay sharded on the vocab axis (per-device slice
+        ~V/16) and the four scores are computed with reduction-only ops
+        that GSPMD partitions — no full-vocab gather ever happens.  This
+        is the jnp realization of the fused Pallas confidence kernel's
+        semantics (one streaming pass, four scalars out).
+        """
+        kw = {k: batch[k] for k in extras}
+        hidden, _ = forward(params, batch["tokens"], cfg, return_hidden=True,
+                            **kw)
+        logits = lm_head(params["embed"], hidden, cfg, vocab_sharded=True)
+        return score_logits_sharded(logits)
+
+    def serve_step(params, token, position, state):
+        logits, new_state = decode_step(params, token, position, state, cfg)
+        return score_logits(logits), new_state
+
+    return {"train": train_step, "prefill": prefill_step,
+            "serve": serve_step}

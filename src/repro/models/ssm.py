@@ -1,0 +1,491 @@
+"""Recurrent sequence mixers: xLSTM (mLSTM + sLSTM) and a Mamba-style
+selective-scan head (Hymba's SSM half).
+
+TPU adaptation notes
+--------------------
+* **mLSTM** uses the *chunkwise-parallel* formulation: ``lax.scan`` over
+  chunks of 128 tokens carrying the (head, d_k, d_v) matrix state; within a
+  chunk the contribution is a dense MXU matmul.  This keeps the training
+  forward sub-quadratic (O(L·d²) not O(L²·d)) while the per-chunk work is
+  systolic-friendly — the TPU analogue of the paper's GPU kernel fusion.
+* **sLSTM** is a strict token recurrence (exponential gating with a
+  normalizer/stabilizer state), expressed with ``lax.scan`` over time.
+* **Mamba head** (Hymba) uses a diagonal selective SSM evaluated with
+  ``lax.associative_scan`` — log-depth on the sequence axis, which is the
+  TPU-native replacement for the CUDA selective-scan kernel.
+* Every mixer exposes a matching ``*_step`` for O(1)-per-token decode
+  carrying recurrent state instead of a KV cache — this is the sub-quadratic
+  path that makes ``long_500k`` admissible for ssm/hybrid archs.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import Params, dense_init
+from repro.parallel.ctx import constrain
+
+CHUNK = 128  # mLSTM chunk length (MXU-aligned)
+
+
+# ==========================================================================
+# mLSTM (matrix-memory LSTM) — xLSTM's parallelizable block
+# ==========================================================================
+
+class MLSTMState(NamedTuple):
+    """Per-layer recurrent state for decode: C (B,H,dk,dv), n (B,H,dk), m (B,H)."""
+    c: jnp.ndarray
+    n: jnp.ndarray
+    m: jnp.ndarray
+
+
+def init_mlstm(rng, cfg: ModelConfig) -> Params:
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.expand * d
+    h = s.num_ssm_heads
+    ks = jax.random.split(rng, 7)
+    return {
+        "w_up": dense_init(ks[0], (d, di)),          # pre-projection
+        "w_q": dense_init(ks[1], (di, di)),
+        "w_k": dense_init(ks[2], (di, di)),
+        "w_v": dense_init(ks[3], (di, di)),
+        "w_i": dense_init(ks[4], (di, h), scale=0.02),  # input gate (per head)
+        "w_f": dense_init(ks[5], (di, h), scale=0.02),  # forget gate
+        "b_i": jnp.zeros((h,), jnp.float32),
+        "b_f": jnp.full((h,), 3.0, jnp.float32),     # bias toward remembering
+        "w_down": dense_init(ks[6], (di, d)),
+        "skip_scale": jnp.ones((di,), jnp.float32),  # learnable skip
+    }
+
+
+def _mlstm_heads(p: Params, x, cfg: ModelConfig):
+    """Project x (B,L,d) -> q,k,v (B,L,H,dh) and gate pre-activations (B,L,H)."""
+    s = cfg.ssm
+    dt = x.dtype
+    inner = constrain(x @ p["w_up"].astype(dt), ("dp", None, "tp"))
+    b, l, di = inner.shape
+    h = s.num_ssm_heads
+    dh = di // h
+    q = (inner @ p["w_q"].astype(dt)).reshape(b, l, h, dh)
+    k = (inner @ p["w_k"].astype(dt)).reshape(b, l, h, dh) * (dh ** -0.5)
+    v = (inner @ p["w_v"].astype(dt)).reshape(b, l, h, dh)
+    i_pre = (inner @ p["w_i"].astype(dt)).astype(jnp.float32) + p["b_i"]
+    f_pre = (inner @ p["w_f"].astype(dt)).astype(jnp.float32) + p["b_f"]
+    return inner, q, k, v, i_pre, f_pre
+
+
+def mlstm_forward(p: Params, x, cfg: ModelConfig,
+                  state: "MLSTMState" = None,
+                  return_state: bool = False):
+    """Chunkwise-parallel mLSTM over the full sequence (training/prefill).
+
+    Exponential gating in log space (stabilizer m) following the xLSTM paper;
+    inter-chunk state is a scan, intra-chunk is dense matmuls.
+    ``state`` seeds the scan (frozen-prefix cached decoding);
+    ``return_state=True`` also returns the end-of-sequence state.
+    """
+    s = cfg.ssm
+    dt = x.dtype
+    inner, q, k, v, i_pre, f_pre = _mlstm_heads(p, x, cfg)
+    b, l, h, dh = q.shape
+    # pad to a chunk multiple
+    pad = (-l) % CHUNK
+    if pad:
+        zf = lambda a: jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+        q, k, v = zf(q), zf(k), zf(v)
+        # padded steps must be state-IDENTITY (forget ≈ 1, input ≈ 0) so
+        # the final carry is exact for cached decoding; padded OUTPUTS are
+        # sliced off regardless
+        i_pre = jnp.pad(i_pre, ((0, 0), (0, pad), (0, 0)),
+                        constant_values=-30.0)
+        f_pre = jnp.pad(f_pre, ((0, 0), (0, pad), (0, 0)),
+                        constant_values=30.0)
+    nc = q.shape[1] // CHUNK
+    rs = lambda a: a.reshape(b, nc, CHUNK, *a.shape[2:]).swapaxes(0, 1)
+    qc, kc, vc = rs(q), rs(k), rs(v)                  # (nc,B,C,H,dh)
+    ic, fc = rs(i_pre), rs(f_pre)                     # (nc,B,C,H)
+
+    logf = jax.nn.log_sigmoid(fc)                     # (nc,B,C,H) f32
+    csum = jnp.cumsum(logf, axis=2)                   # within-chunk cumulative
+
+    def chunk_step(carry, inp):
+        c_state, n_state, m_state = carry             # (B,H,dk,dv),(B,H,dk),(B,H)
+        qch, kch, vch, ich, logfch, cch = inp
+        # log decay from chunk start to position t (inclusive of t's forget)
+        a = cch                                        # (B,C,H)
+        total = cch[:, -1]                             # (B,H) full-chunk decay
+        # keys' outgoing decay: from t+1..C  => total - a
+        log_i = ich                                    # (B,C,H)
+        # stabilizer: running max of (m_prev + a, intra scores)
+        m_inter = m_state + total                      # (B,H)
+        m_intra = jnp.max(log_i + (total[:, None] - a), axis=1)  # (B,H)
+        m_new = jnp.maximum(m_inter, m_intra)
+        # inter-chunk contribution: q_t decayed from chunk start
+        q_scale = jnp.exp(a + m_state[:, None] - m_new[:, None])   # (B,C,H)
+        inter = jnp.einsum("bchk,bhkv->bchv", qch.astype(jnp.float32) *
+                           q_scale[..., None], c_state)
+        n_inter = jnp.einsum("bchk,bhk->bch", qch.astype(jnp.float32) *
+                             q_scale[..., None], n_state)
+        # intra-chunk: masked quadratic within the 128-token chunk (MXU matmul)
+        # decay from j to t: a_t - a_j, valid for j <= t
+        dmat = a[:, :, None] - a[:, None, :]           # (B,C,C,H) t,j
+        gate = jnp.exp(dmat + log_i[:, None] - m_new[:, None, None])
+        tri = jnp.tril(jnp.ones((CHUNK, CHUNK), bool))
+        gate = jnp.where(tri[None, :, :, None], gate, 0.0)
+        scores = jnp.einsum("bthk,bjhk->btjh", qch.astype(jnp.float32),
+                            kch.astype(jnp.float32)) * gate
+        intra = jnp.einsum("btjh,bjhv->bthv", scores, vch.astype(jnp.float32))
+        n_intra = jnp.sum(scores, axis=2)              # (B,C,H)
+        # combine + normalize (|n q| max with exp(-m) per xLSTM eq. 26)
+        num = inter + intra
+        den = jnp.maximum(jnp.abs(n_inter + n_intra),
+                          jnp.exp(-m_new)[:, None]) + 1e-6
+        out = (num / den[..., None]).astype(dt)
+        # state update: C' = exp(total) C + sum_j exp(total - a_j + i_j) k_j v_j^T
+        k_scale = jnp.exp((total[:, None] - a) + log_i - m_new[:, None])
+        kw = kch.astype(jnp.float32) * k_scale[..., None]
+        c_new = (jnp.exp(m_state + total - m_new)[..., None, None] * c_state
+                 + jnp.einsum("bchk,bchv->bhkv", kw, vch.astype(jnp.float32)))
+        n_new = (jnp.exp(m_state + total - m_new)[..., None] * n_state
+                 + jnp.sum(kw, axis=1))
+        return (c_new, n_new, m_new), out
+
+    if state is None:
+        c0 = jnp.zeros((b, h, dh, dh), jnp.float32)
+        n0 = jnp.zeros((b, h, dh), jnp.float32)
+        m0 = jnp.full((b, h), -1e30, jnp.float32)
+    else:
+        c0, n0, m0 = state.c, state.n, state.m
+    carry, outs = jax.lax.scan(chunk_step, (c0, n0, m0),
+                               (qc, kc, vc, ic, logf, csum))
+    out = outs.swapaxes(0, 1).reshape(b, nc * CHUNK, h, dh)[:, :l]
+    out = out.reshape(b, l, h * dh)
+    out = out + inner * jax.nn.silu(p["skip_scale"].astype(dt))
+    out = out @ p["w_down"].astype(dt)
+    if return_state:
+        # padded steps are gate-identities (see padding above) so the
+        # carry is exact at any length
+        return out, MLSTMState(*carry)
+    return out
+
+
+def mlstm_step(p: Params, x, cfg: ModelConfig,
+               state: MLSTMState) -> Tuple[jnp.ndarray, MLSTMState]:
+    """One-token decode (B,1,d) carrying (C,n,m) state — O(d²) per token."""
+    dt = x.dtype
+    inner, q, k, v, i_pre, f_pre = _mlstm_heads(p, x, cfg)
+    b, _, h, dh = q.shape
+    q1, k1, v1 = (a[:, 0].astype(jnp.float32) for a in (q, k, v))  # (B,H,dh)
+    logf = jax.nn.log_sigmoid(f_pre[:, 0])            # (B,H)
+    logi = i_pre[:, 0]
+    m_new = jnp.maximum(state.m + logf, logi)
+    fdec = jnp.exp(state.m + logf - m_new)
+    iw = jnp.exp(logi - m_new)
+    c_new = fdec[..., None, None] * state.c + iw[..., None, None] * \
+        jnp.einsum("bhk,bhv->bhkv", k1, v1)
+    n_new = fdec[..., None] * state.n + iw[..., None] * k1
+    num = jnp.einsum("bhk,bhkv->bhv", q1, c_new)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", q1, n_new)),
+                      jnp.exp(-m_new)) + 1e-6
+    out = (num / den[..., None]).astype(dt).reshape(b, 1, h * dh)
+    out = out + inner * jax.nn.silu(p["skip_scale"].astype(dt))
+    return out @ p["w_down"].astype(dt), MLSTMState(c_new, n_new, m_new)
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int) -> MLSTMState:
+    s = cfg.ssm
+    dh = s.expand * cfg.d_model // s.num_ssm_heads
+    return MLSTMState(
+        c=jnp.zeros((batch, s.num_ssm_heads, dh, dh), jnp.float32),
+        n=jnp.zeros((batch, s.num_ssm_heads, dh), jnp.float32),
+        m=jnp.full((batch, s.num_ssm_heads), -1e30, jnp.float32))
+
+
+# ==========================================================================
+# sLSTM (scalar-memory LSTM with exponential gating)
+# ==========================================================================
+
+class SLSTMState(NamedTuple):
+    c: jnp.ndarray   # (B, di)
+    n: jnp.ndarray   # (B, di)
+    m: jnp.ndarray   # (B, di)
+    h: jnp.ndarray   # (B, di) hidden fed back into gates
+
+
+def init_slstm(rng, cfg: ModelConfig) -> Params:
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.expand * d
+    ks = jax.random.split(rng, 4)
+    return {
+        "w_up": dense_init(ks[0], (d, di)),
+        "w_gates": dense_init(ks[1], (di, 4 * di)),      # z,i,f,o from input
+        "r_gates": dense_init(ks[2], (di, 4 * di), scale=0.02),  # recurrent
+        "b_gates": jnp.concatenate([jnp.zeros((2 * di,), jnp.float32),
+                                    jnp.full((di,), 3.0, jnp.float32),
+                                    jnp.zeros((di,), jnp.float32)]),
+        "w_down": dense_init(ks[3], (di, d)),
+    }
+
+
+def _slstm_cell(p: Params, xt, st: SLSTMState, di: int):
+    """xt: (B, di) pre-projected input; one exponential-gated LSTM step."""
+    pre = (xt.astype(jnp.float32) @ p["w_gates"].astype(jnp.float32)
+           + st.h @ p["r_gates"].astype(jnp.float32) + p["b_gates"])
+    z, i_pre, f_pre, o = jnp.split(pre, 4, axis=-1)
+    logf = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(logf + st.m, i_pre)
+    i_g = jnp.exp(i_pre - m_new)
+    f_g = jnp.exp(logf + st.m - m_new)
+    c_new = f_g * st.c + i_g * jnp.tanh(z)
+    n_new = f_g * st.n + i_g
+    h_new = jax.nn.sigmoid(o) * c_new / jnp.maximum(n_new, 1e-6)
+    return SLSTMState(c_new, n_new, m_new, h_new)
+
+
+def slstm_forward(p: Params, x, cfg: ModelConfig,
+                  state: "SLSTMState" = None, return_state: bool = False):
+    """Sequential scan over time (the sLSTM is inherently recurrent)."""
+    s = cfg.ssm
+    dt = x.dtype
+    di = s.expand * cfg.d_model
+    inner = (x @ p["w_up"].astype(dt)).astype(jnp.float32)   # (B,L,di)
+    b = x.shape[0]
+    st0 = state if state is not None else init_slstm_state(cfg, b)
+
+    def step(st, xt):
+        st2 = _slstm_cell(p, xt, st, di)
+        return st2, st2.h
+
+    st_end, hs = jax.lax.scan(step, st0, inner.swapaxes(0, 1))
+    out = hs.swapaxes(0, 1).astype(dt)                       # (B,L,di)
+    out = out @ p["w_down"].astype(dt)
+    if return_state:
+        return out, st_end
+    return out
+
+
+def slstm_step(p: Params, x, cfg: ModelConfig,
+               state: SLSTMState) -> Tuple[jnp.ndarray, SLSTMState]:
+    dt = x.dtype
+    di = cfg.ssm.expand * cfg.d_model
+    inner = (x @ p["w_up"].astype(dt)).astype(jnp.float32)[:, 0]
+    st2 = _slstm_cell(p, inner, state, di)
+    return (st2.h.astype(dt)[:, None] @ p["w_down"].astype(dt)), st2
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int) -> SLSTMState:
+    di = cfg.ssm.expand * cfg.d_model
+    z = jnp.zeros((batch, di), jnp.float32)
+    return SLSTMState(c=z, n=z, m=jnp.full((batch, di), -1e30, jnp.float32),
+                      h=z)
+
+
+# ==========================================================================
+# Mamba-style selective SSM head (Hymba's parallel SSM path)
+# ==========================================================================
+
+class MambaState(NamedTuple):
+    """h: (B, di, N) diagonal SSM state; conv: (B, K-1, di) rolling buffer."""
+    h: jnp.ndarray
+    conv: jnp.ndarray
+
+
+def init_mamba(rng, cfg: ModelConfig) -> Params:
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.expand * d
+    n = s.state_size
+    ks = jax.random.split(rng, 6)
+    return {
+        "w_in": dense_init(ks[0], (d, 2 * di)),          # x and gate z
+        "conv_w": dense_init(ks[1], (s.conv_kernel, di), scale=0.5),
+        "w_bcdt": dense_init(ks[2], (di, 2 * n + 1), scale=0.02),  # B, C, dt
+        "a_log": jnp.log(jnp.arange(1, n + 1, dtype=jnp.float32)
+                         )[None, :].repeat(di, 0),        # (di, N) neg-real A
+        "dt_bias": jnp.full((di,), -4.6, jnp.float32),    # softplus ≈ 0.01
+        "w_out": dense_init(ks[3], (di, d)),
+    }
+
+
+def _mamba_inputs(p: Params, x, cfg: ModelConfig):
+    s = cfg.ssm
+    dt_ = x.dtype
+    xz = x @ p["w_in"].astype(dt_)
+    xin, z = jnp.split(xz, 2, axis=-1)                   # (B,L,di) each
+    return (constrain(xin, ("dp", None, "tp")),
+            constrain(z, ("dp", None, "tp")))
+
+
+def _mamba_conv_full(p: Params, xin, cfg: ModelConfig):
+    """Depthwise causal conv along L (width K). xin (B,L,di)."""
+    k = cfg.ssm.conv_kernel
+    pad = jnp.pad(xin, ((0, 0), (k - 1, 0), (0, 0)))
+    w = p["conv_w"].astype(xin.dtype)                    # (K, di)
+    out = sum(pad[:, i:i + xin.shape[1]] * w[i] for i in range(k))
+    return jax.nn.silu(out)
+
+
+def _mamba_scan_terms(p: Params, xc, cfg: ModelConfig):
+    """Selective params: decay a_t=(B,L,di,N), input b_t x_t, readout C."""
+    n = cfg.ssm.state_size
+    bcdt = (xc @ p["w_bcdt"].astype(xc.dtype)).astype(jnp.float32)
+    b_sel, c_sel, dt_pre = jnp.split(bcdt, [n, 2 * n], axis=-1)
+    # low-rank dt (scalar per position, broadcast over channels + per-channel
+    # bias) — the rank-1 form of mamba's dt projection
+    delta = jax.nn.softplus(dt_pre + p["dt_bias"])           # (B,L,di)
+    a = -jnp.exp(p["a_log"])                              # (di,N)
+    decay = jnp.exp(delta[..., None] * a)                 # (B,L,di,N)
+    drive = (delta[..., None] * b_sel[:, :, None, :]
+             * xc.astype(jnp.float32)[..., None])         # (B,L,di,N)
+    return decay, drive, c_sel
+
+
+MAMBA_CHUNK = 256   # selective-scan chunk (memory: B·CHUNK·di·N live)
+
+
+def mamba_forward(p: Params, x, cfg: ModelConfig,
+                  state: "MambaState" = None, return_state: bool = False):
+    """Chunked selective scan: lax.scan over CHUNK-sized pieces carrying
+    the (B, di, N) state, associative_scan (log-depth) within a chunk.
+
+    The naive full-length associative_scan materializes log₂(L) copies of
+    the (B, L, di, N) state tensor — measured 28 s of HBM traffic and an
+    87 GiB/dev peak on hymba × train_4k (§Perf iteration D1); chunking
+    caps the live working set at (B, CHUNK, di, N) and was confirmed to
+    move the bottleneck off memory.
+    """
+    xin, z = _mamba_inputs(p, x, cfg)
+    if state is not None:
+        # frozen-prefix decoding: the conv left-pad is the prefix tail
+        k = cfg.ssm.conv_kernel
+        xin_pad = jnp.concatenate([state.conv.astype(xin.dtype), xin], 1)
+        w = p["conv_w"].astype(xin.dtype)
+        xc = jax.nn.silu(sum(xin_pad[:, i:i + xin.shape[1]] * w[i]
+                             for i in range(k)))
+    else:
+        xc = _mamba_conv_full(p, xin, cfg)                # (B,L,di)
+    b, l, di = xc.shape
+    n = cfg.ssm.state_size
+    pad = (-l) % MAMBA_CHUNK
+    if pad:
+        xc_p = jnp.pad(xc, ((0, 0), (0, pad), (0, 0)))
+    else:
+        xc_p = xc
+    nch = xc_p.shape[1] // MAMBA_CHUNK
+    xcc = xc_p.reshape(b, nch, MAMBA_CHUNK, di).swapaxes(0, 1)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a2 * a1, a2 * b1 + b2
+
+    def chunk_body(h0, xc_chunk):                         # h0 (B,di,N)
+        decay, drive, c_sel = _mamba_scan_terms(p, xc_chunk, cfg)
+        # (§Perf D2, refuted on this harness): casting the (B,C,di,N)
+        # selective-state tensors to bf16 measured *equal* bytes because
+        # the CPU backend re-legalizes bf16 elementwise ops to f32; on a
+        # TPU it would halve traffic.  Kept f32 for numerical simplicity —
+        # the real fix is a fused Pallas selective-scan kernel (the TPU
+        # analogue of CUDA mamba's kernel), recorded as future work.
+        a_cum, h = jax.lax.associative_scan(combine, (decay, drive),
+                                            axis=1)      # (B,C,di,N)
+        h = h + a_cum * h0[:, None]                       # fold in carry
+        y = jnp.einsum("blcn,bln->blc", h, c_sel)         # (B,C,di)
+        return h[:, -1], y
+
+    h0 = state.h if state is not None else \
+        jnp.zeros((b, di, n), jnp.float32)
+    h_end, ys = jax.lax.scan(chunk_body, h0, xcc)
+    y = ys.swapaxes(0, 1).reshape(b, nch * MAMBA_CHUNK, di)[:, :l]
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = y @ p["w_out"].astype(x.dtype)
+    if return_state:
+        # NOTE h_end includes padded steps; padded xc rows are zero ->
+        # delta = softplus(bias) ≠ 0, so decays continue on pads.  Exact
+        # state comes from re-scanning the unpadded tail:
+        if pad:
+            h_exact = selective_last_state(p, xc[:, :l], cfg, h0)
+        else:
+            h_exact = h_end
+        k = cfg.ssm.conv_kernel
+        conv_tail = jnp.concatenate(
+            [state.conv.astype(xin.dtype) if state is not None else
+             jnp.zeros((b, k - 1, di), xin.dtype), xin], 1)[:, -(k - 1):]
+        return out, MambaState(h=h_exact, conv=conv_tail)
+    return out
+
+
+def selective_last_state(p: Params, xc, cfg: ModelConfig, h0):
+    """Exact end state of the selective scan over xc (B, L, di)."""
+    decay, drive, _ = _mamba_scan_terms(p, xc, cfg)
+
+    def step(h, t):
+        return decay[:, t] * h + drive[:, t], None
+
+    h, _ = jax.lax.scan(step, h0, jnp.arange(xc.shape[1]))
+    return h
+
+
+def mamba_step(p: Params, x, cfg: ModelConfig,
+               state: MambaState) -> Tuple[jnp.ndarray, MambaState]:
+    """One-token decode with rolling conv buffer + diagonal state update."""
+    s = cfg.ssm
+    xin, z = _mamba_inputs(p, x, cfg)                    # (B,1,di)
+    buf = jnp.concatenate([state.conv, xin], axis=1)     # (B,K,di)
+    w = p["conv_w"].astype(x.dtype)
+    xc = jax.nn.silu(jnp.sum(buf * w[None], axis=1, keepdims=True))
+    decay, drive, c_sel = _mamba_scan_terms(p, xc, cfg)
+    h_new = decay[:, 0] * state.h + drive[:, 0]          # (B,di,N)
+    y = jnp.einsum("bcn,bn->bc", h_new, c_sel[:, 0])[:, None]
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = y @ p["w_out"].astype(x.dtype)
+    return out, MambaState(h=h_new, conv=buf[:, 1:])
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int,
+                     dtype=jnp.bfloat16) -> MambaState:
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    return MambaState(
+        h=jnp.zeros((batch, di, s.state_size), jnp.float32),
+        conv=jnp.zeros((batch, s.conv_kernel - 1, di), dtype))
+
+
+# ==========================================================================
+# xLSTM block dispatch (pattern string 'm'/'s' cycled over layers)
+# ==========================================================================
+
+def xlstm_kind(cfg: ModelConfig, layer_idx: int) -> str:
+    pat = cfg.ssm.xlstm_pattern
+    return pat[layer_idx % len(pat)]
+
+
+def init_xlstm_layer(rng, cfg: ModelConfig, layer_idx: int) -> Params:
+    if xlstm_kind(cfg, layer_idx) == "s":
+        return init_slstm(rng, cfg)
+    return init_mlstm(rng, cfg)
+
+
+def xlstm_forward(p: Params, x, cfg: ModelConfig, layer_idx: int,
+                  state=None, return_state: bool = False):
+    if xlstm_kind(cfg, layer_idx) == "s":
+        return slstm_forward(p, x, cfg, state=state,
+                             return_state=return_state)
+    return mlstm_forward(p, x, cfg, state=state, return_state=return_state)
+
+
+def xlstm_step(p: Params, x, cfg: ModelConfig, layer_idx: int, state):
+    if xlstm_kind(cfg, layer_idx) == "s":
+        return slstm_step(p, x, cfg, state)
+    return mlstm_step(p, x, cfg, state)
+
+
+def init_xlstm_state(cfg: ModelConfig, layer_idx: int, batch: int):
+    if xlstm_kind(cfg, layer_idx) == "s":
+        return init_slstm_state(cfg, batch)
+    return init_mlstm_state(cfg, batch)

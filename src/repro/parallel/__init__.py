@@ -1,0 +1,5 @@
+from repro.parallel.sharding import (batch_pspec, cache_pspecs, data_axes,
+                                     param_pspecs, seq_pspec, to_named)
+
+__all__ = ["batch_pspec", "cache_pspecs", "data_axes", "param_pspecs",
+           "seq_pspec", "to_named"]

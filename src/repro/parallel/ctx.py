@@ -1,0 +1,104 @@
+"""Activation-sharding context: logical axis constraints inside the model.
+
+Annotating only jit inputs lets GSPMD propagate shardings freely, and for
+FSDP-style weight sharding it routinely resolves conflicts by *replicating
+the batch* (we measured a 32 GiB fully-replicated attention-score buffer on
+a 3 B model).  Production JAX LMs (MaxText, etc.) pin the activation layout
+with ``with_sharding_constraint`` at a handful of seams; this module is
+that mechanism, kept optional so the same model code runs un-meshed on the
+host (tests, sampler) where the context is unset and ``constrain`` is a
+no-op.
+
+Logical symbols:
+  "dp" — the data-parallel axes ("pod","data"/"data"): batch dims
+  "sp" — sequence parallelism on the ``model`` axis between blocks
+         (Megatron-SP; disabled for decode where L == 1)
+  "tp" — tensor parallelism on the ``model`` axis: heads / ffn / vocab dims
+
+Every constraint is divisibility-guarded: a dim that doesn't divide its
+axis is left unconstrained rather than failing.
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STATE = {"mesh": None, "seq_shard": True, "local_moe": True}
+
+
+def set_activation_mesh(mesh: Optional[Mesh], seq_shard: bool = True,
+                        local_moe: bool = True,
+                        seq_attn: bool = False,
+                        xgather: bool = False) -> None:
+    _STATE["mesh"] = mesh
+    _STATE["seq_shard"] = seq_shard
+    _STATE["local_moe"] = local_moe
+    _STATE["seq_attn"] = seq_attn
+    _STATE["xgather"] = xgather
+
+
+@contextmanager
+def activation_mesh(mesh: Mesh, seq_shard: bool = True,
+                    local_moe: bool = True, seq_attn: bool = False,
+                    xgather: bool = False):
+    prev = dict(_STATE)
+    set_activation_mesh(mesh, seq_shard, local_moe, seq_attn, xgather)
+    try:
+        yield
+    finally:
+        _STATE.update(prev)
+
+
+def option(name: str):
+    return _STATE.get(name)
+
+
+def _data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(n for n in mesh.axis_names if n in ("pod", "data"))
+
+
+def shard_counts() -> Tuple[int, int]:
+    """(data-axes product, 1) — the grid the shard-local MoE dispatch
+    groups tokens by; (1, 1) off-mesh.
+
+    Grouping by the model axis too was measured WORSE (a 264 GiB xs
+    all-gather on mixtral train): the grid dim then uses (data × model)
+    while the expert ffn dim wants model, and GSPMD resolves the conflict
+    by replicating every group.  Data-only groups leave the model axis
+    free for the expert ffn tensor parallelism."""
+    mesh = _STATE["mesh"]
+    if mesh is None or not _STATE["local_moe"]:
+        return 1, 1
+    gd = int(np.prod([mesh.shape[a] for a in _data_axes(mesh)]))
+    return gd, 1
+
+
+def constrain(x, spec: Tuple) -> jax.Array:
+    """Apply a logical-axis sharding constraint (no-op without a mesh)."""
+    mesh = _STATE["mesh"]
+    if mesh is None or x.ndim != len(spec):
+        return x
+    out = []
+    for dim, sym in zip(x.shape, spec):
+        axes: Optional[Tuple[str, ...]] = None
+        if sym == "dp":
+            axes = _data_axes(mesh)
+        elif sym == "tp":
+            axes = ("model",)
+        elif sym == "sp":
+            axes = ("model",) if _STATE["seq_shard"] else None
+        elif sym == "grid":
+            # must mirror shard_counts(): MoE dispatch groups = data axes
+            axes = _data_axes(mesh)
+        if axes:
+            size = int(np.prod([mesh.shape[a] for a in axes]))
+            if dim % size != 0 or dim == 0:
+                axes = None
+        out.append(None if not axes else
+                   (axes[0] if len(axes) == 1 else axes))
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*out)))

@@ -1,0 +1,123 @@
+"""Batched serving engine for diffusion-LM decoding.
+
+A miniature vLLM-style front end adapted to the *blockwise* execution model
+of masked-diffusion decoding: requests are queued, grouped into fixed-shape
+batches (padding to the bucket size keeps one jit compilation alive), and
+each batch is decoded with the configured strategy through the semi-AR
+sampler.  Diffusion decode is batch-synchronous (every sequence in the
+batch advances through the same denoising steps), so the natural scheduling
+unit is the *batch*, not the token — continuous batching applies between
+blocks, not between tokens.
+
+The engine also owns the per-batch model function cache (one jitted forward
+per sequence length) — the serving analogue of a KV-cache manager for
+bidirectional models where the cache is the *committed prefix* itself.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Callable, Deque, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import DecodeConfig, ModelConfig
+from repro.core.sampler import SampleStats, generate
+from repro.models.model import forward
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                 # (Lp,) int32
+    result: Optional[np.ndarray] = None
+    stats: Optional[SampleStats] = None
+    submit_time: float = 0.0
+    finish_time: float = 0.0
+
+    @property
+    def latency(self) -> float:
+        return self.finish_time - self.submit_time
+
+
+class ServingEngine:
+    def __init__(self, params, cfg: ModelConfig, dcfg: DecodeConfig,
+                 max_batch: int = 8, seed: int = 0):
+        self.params = params
+        self.cfg = cfg
+        self.dcfg = dcfg
+        self.max_batch = max_batch
+        self.queue: Deque[Request] = deque()
+        self.done: Dict[int, Request] = {}
+        self._next_id = 0
+        self._rng = jax.random.PRNGKey(seed)
+        self._model_fns: Dict[int, Callable] = {}
+
+    # -- client API --------------------------------------------------------
+    def submit(self, prompt: np.ndarray) -> int:
+        rid = self._next_id
+        self._next_id += 1
+        self.queue.append(Request(rid=rid, prompt=np.asarray(prompt),
+                                  submit_time=time.perf_counter()))
+        return rid
+
+    def result(self, rid: int) -> Request:
+        return self.done[rid]
+
+    # -- scheduler ---------------------------------------------------------
+    def _model_fn(self, seq_len: int) -> Callable:
+        if seq_len not in self._model_fns:
+            cfg = self.cfg
+            params = self.params
+            self._model_fns[seq_len] = jax.jit(
+                lambda x: forward(params, x, cfg)[0])
+        return self._model_fns[seq_len]
+
+    def step(self) -> List[int]:
+        """Serve one batch from the queue. Returns finished request ids."""
+        if not self.queue:
+            return []
+        batch: List[Request] = []
+        lp = self.queue[0].prompt.shape[0]
+        while self.queue and len(batch) < self.max_batch \
+                and self.queue[0].prompt.shape[0] == lp:
+            batch.append(self.queue.popleft())
+        # pad the batch to the bucket size (replicate last prompt)
+        prompts = np.stack([r.prompt for r in batch])
+        pad = self.max_batch - len(batch)
+        if pad:
+            prompts = np.concatenate(
+                [prompts, np.repeat(prompts[-1:], pad, 0)])
+        model_fn = self._model_fn(lp + self.dcfg.gen_length)
+        self._rng, rng = jax.random.split(self._rng)
+        out, stats = generate(rng, model_fn, jnp.asarray(prompts),
+                              self.cfg, self.dcfg)
+        out = np.asarray(jax.device_get(out))
+        now = time.perf_counter()
+        for i, req in enumerate(batch):
+            req.result = out[i]
+            req.stats = stats
+            req.finish_time = now
+            self.done[req.rid] = req
+        return [r.rid for r in batch]
+
+    def run_until_idle(self) -> None:
+        while self.queue:
+            self.step()
+
+    # -- metrics -----------------------------------------------------------
+    def summary(self) -> Dict[str, float]:
+        reqs = list(self.done.values())
+        if not reqs:
+            return {}
+        lat = [r.latency for r in reqs]
+        toks = sum(self.dcfg.gen_length for _ in reqs)
+        span = max(r.finish_time for r in reqs) - \
+            min(r.submit_time for r in reqs)
+        return {"requests": len(reqs),
+                "mean_latency_s": float(np.mean(lat)),
+                "p95_latency_s": float(np.percentile(lat, 95)),
+                "throughput_tps": toks / max(span, 1e-9)}

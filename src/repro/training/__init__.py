@@ -1,0 +1,7 @@
+from repro.training.checkpoint import load, save
+from repro.training.optimizer import (AdamWState, adamw_init, adamw_update,
+                                      cosine_schedule, global_norm)
+from repro.training.trainer import make_train_step, train
+
+__all__ = ["load", "save", "AdamWState", "adamw_init", "adamw_update",
+           "cosine_schedule", "global_norm", "make_train_step", "train"]

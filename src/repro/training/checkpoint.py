@@ -1,0 +1,51 @@
+"""Checkpointing: pytree <-> flat .npz with structure-path keys."""
+from __future__ import annotations
+
+import os
+from typing import Any, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save(path: str, params: Any, opt_state: Any = None,
+         step: int = 0) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    payload = {f"params/{k}": v for k, v in _flatten(params).items()}
+    if opt_state is not None:
+        payload.update({f"opt/{k}": v for k, v in _flatten(opt_state).items()})
+    payload["meta/step"] = np.asarray(step)
+    np.savez_compressed(path, **payload)
+
+
+def load(path: str, params_template: Any,
+         opt_template: Any = None) -> Tuple[Any, Any, int]:
+    """Restore into the given pytree templates (shape/dtype-checked)."""
+    with np.load(path) as z:
+        data = {k: z[k] for k in z.files}
+
+    def restore(template, prefix):
+        flat = _flatten(template)
+        out = {}
+        for k, ref in flat.items():
+            arr = data[f"{prefix}/{k}"]
+            assert arr.shape == ref.shape, (k, arr.shape, ref.shape)
+            out[k] = arr
+        leaves_paths = jax.tree_util.tree_flatten_with_path(template)
+        keys = ["/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                         for p in path) for path, _ in leaves_paths[0]]
+        return jax.tree_util.tree_unflatten(
+            leaves_paths[1], [out[k] for k in keys])
+
+    params = restore(params_template, "params")
+    opt = restore(opt_template, "opt") if opt_template is not None else None
+    return params, opt, int(data["meta/step"])

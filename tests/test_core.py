@@ -1,0 +1,158 @@
+"""Unit tests for the paper's core: confidence, FDM, FDM-A, strategies."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import DecodeConfig, get_config
+from repro.core import (apply_mask, commit_topn, fully_masked,
+                        global_confidence, mask_positions,
+                        masked_cross_entropy, rank_desc, score_logits)
+from repro.core.fdm import fdm_select
+from repro.core.fdm_a import fdm_a_plan
+
+CFG = get_config("llada-8b").reduced()
+
+
+def test_score_logits_consistency(rng):
+    logits = 3 * jax.random.normal(rng, (2, 5, 101))
+    s = score_logits(logits)
+    p = jax.nn.softmax(logits, axis=-1)
+    np.testing.assert_array_equal(s.argmax, jnp.argmax(logits, -1))
+    np.testing.assert_allclose(s.max_prob, jnp.max(p, -1), rtol=1e-5)
+    assert (s.margin >= -1e-6).all() and (s.margin <= s.max_prob + 1e-6).all()
+    assert (s.neg_entropy <= 1e-6).all()
+
+
+def test_global_confidence_prefers_confident_states(rng):
+    """A peaked next-state distribution has higher C_global (Eq. 10)."""
+    peaked = jnp.zeros((1, 4, 50)).at[..., 0].set(20.0)
+    flat = jnp.zeros((1, 4, 50))
+    masked = jnp.ones((1, 4), bool)
+    assert float(global_confidence(peaked, masked)[0]) > \
+        float(global_confidence(flat, masked)[0])
+
+
+def test_global_confidence_counts_only_masked():
+    logits = jnp.zeros((1, 4, 50))
+    half = jnp.array([[True, True, False, False]])
+    full = jnp.ones((1, 4), bool)
+    assert float(global_confidence(logits, half)[0]) == \
+        pytest.approx(float(global_confidence(logits, full)[0]) / 2)
+
+
+def test_rank_and_commit_topn():
+    conf = jnp.array([[0.1, 0.9, 0.5, 0.7]])
+    assert rank_desc(conf)[0, 1] == 0 and rank_desc(conf)[0, 0] == 3
+    x = jnp.full((1, 4), 9, jnp.int32)
+    cand = jnp.arange(4)[None]
+    out = commit_topn(x, conf, cand, jnp.ones((1, 4), bool), 2)
+    np.testing.assert_array_equal(out, [[9, 1, 9, 3]])
+
+
+def test_commit_topn_respects_eligibility():
+    conf = jnp.array([[0.9, 0.8, 0.7, 0.6]])
+    eligible = jnp.array([[False, True, False, True]])
+    x = jnp.full((1, 4), 9, jnp.int32)
+    out = commit_topn(x, conf, jnp.arange(4)[None], eligible, 2)
+    np.testing.assert_array_equal(out, [[9, 1, 9, 3]])
+
+
+def test_apply_mask_only_masks_maskable(rng):
+    tokens = jnp.arange(32).reshape(2, 16) % CFG.vocab_size
+    maskable = jnp.zeros((2, 16), bool).at[:, 8:].set(True)
+    t = jnp.array([1.0, 1.0])   # mask everything maskable
+    corrupted, masked = apply_mask(rng, tokens, t, CFG, maskable)
+    assert not masked[:, :8].any()
+    assert masked[:, 8:].all()
+    assert (corrupted[:, 8:] == CFG.mask_token_id).all()
+
+
+def test_masked_cross_entropy_perfect_prediction():
+    v = 32
+    targets = jnp.array([[3, 5, 7]])
+    logits = jax.nn.one_hot(targets, v) * 100.0
+    masked = jnp.ones((1, 3), bool)
+    loss, _ = masked_cross_entropy(logits, targets, masked, jnp.ones((1,)))
+    assert float(loss) < 1e-3
+
+
+class _ToyModel:
+    """Deterministic model for FDM semantics tests: position i prefers
+    token i, confidence rises with the number of committed tokens."""
+
+    def __init__(self, vocab, peak=4.0):
+        self.vocab = vocab
+        self.peak = peak
+
+    def __call__(self, x):
+        b, l = x.shape
+        committed = jnp.sum(x != CFG.mask_token_id, axis=-1, keepdims=True)
+        conf = 1.0 + self.peak * committed / l
+        pos_tok = jnp.arange(l) % (self.vocab - 1)
+        logits = jax.nn.one_hot(pos_tok, self.vocab) * conf[..., None]
+        return jnp.broadcast_to(logits, (b, l, self.vocab))
+
+
+def test_fdm_select_commits_exactly_n():
+    model = _ToyModel(CFG.vocab_size)
+    x = jnp.full((2, 8), CFG.mask_token_id, jnp.int32)
+    active = jnp.ones((2, 8), bool)
+    logits = model(x)
+    for n in [1, 2, 3]:
+        new_x, _ = fdm_select(x, logits, active, model, CFG,
+                              k=2, gamma=0.0, n=n)
+        committed = (new_x != CFG.mask_token_id).sum(axis=-1)
+        np.testing.assert_array_equal(committed, [n, n])
+
+
+def test_fdm_select_falls_back_when_pruned():
+    """γ above every confidence -> Λ = ∅ -> local-only commit still occurs."""
+    model = _ToyModel(CFG.vocab_size, peak=0.0)
+    x = jnp.full((1, 6), CFG.mask_token_id, jnp.int32)
+    logits = model(x)
+    new_x, _ = fdm_select(x, logits, jnp.ones((1, 6), bool), model, CFG,
+                          k=2, gamma=0.999, n=1)
+    assert int((new_x != CFG.mask_token_id).sum()) == 1
+
+
+def test_fdm_a_plan_phases():
+    dcfg = DecodeConfig(eta1=0.8, eta2=0.6, n_max=4)
+    v = 16
+
+    def logits_with_probs(probs):
+        """Build logits whose per-position max prob ≈ probs."""
+        out = []
+        for p in probs:
+            rest = (1 - p) / (v - 1)
+            row = jnp.log(jnp.full((v,), rest).at[0].set(p))
+            out.append(row)
+        return jnp.stack(out)[None]
+
+    active = jnp.ones((1, 4), bool)
+    # exploration: nothing above eta1
+    s, n, gamma, need, phases = fdm_a_plan(
+        logits_with_probs([0.5, 0.5, 0.5, 0.5]), active, dcfg)
+    assert bool(need[0]) and int(n[0]) == 1
+    assert float(gamma[0]) == pytest.approx(dcfg.gamma1)
+    # acceleration: >= N qualified
+    s, n, gamma, need, phases = fdm_a_plan(
+        logits_with_probs([0.95, 0.95, 0.95, 0.95]), active, dcfg)
+    assert not bool(need[0]) and int(n[0]) == 4
+    # balance: qualified + borderline
+    s, n, gamma, need, phases = fdm_a_plan(
+        logits_with_probs([0.95, 0.7, 0.3, 0.3]), active, dcfg)
+    assert bool(need[0]) and int(n[0]) == 1
+    assert float(gamma[0]) == pytest.approx(dcfg.eta2)
+    # local-only: qualified, no borderline
+    s, n, gamma, need, phases = fdm_a_plan(
+        logits_with_probs([0.95, 0.3, 0.3, 0.3]), active, dcfg)
+    assert not bool(need[0]) and int(n[0]) == 1
+
+
+def test_fully_masked_layout():
+    prompt = jnp.ones((2, 5), jnp.int32)
+    x = fully_masked(CFG, prompt, 8)
+    assert x.shape == (2, 13)
+    assert (x[:, 5:] == CFG.mask_token_id).all()
+    assert mask_positions(x, CFG)[:, 5:].all()

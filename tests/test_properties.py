@@ -1,0 +1,121 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import DecodeConfig, get_config
+from repro.core import commit_topn, rank_desc, score_logits
+from repro.core.confidence import global_confidence
+from repro.core.fdm import fdm_select
+from repro.core.fdm_a import fdm_a_plan
+from repro.kernels.confidence import confidence_fused
+from repro.kernels.ref import confidence_ref
+
+CFG = get_config("llada-8b").reduced()
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+@st.composite
+def logit_arrays(draw, max_rows=4, max_vocab=600):
+    rows = draw(st.integers(1, max_rows))
+    vocab = draw(st.integers(2, max_vocab))
+    seed = draw(st.integers(0, 2**31 - 1))
+    scale = draw(st.floats(0.1, 30.0))
+    return scale * jax.random.normal(jax.random.PRNGKey(seed), (rows, vocab))
+
+
+@given(logit_arrays())
+@settings(**SETTINGS)
+def test_scores_are_valid_probabilities(logits):
+    s = score_logits(logits[None])
+    assert (s.max_prob > 0).all() and (s.max_prob <= 1 + 1e-6).all()
+    assert (s.margin >= -1e-6).all()
+    assert (s.margin <= s.max_prob + 1e-6).all()
+    # negative entropy bounded by [-log V, 0]
+    v = logits.shape[-1]
+    assert (s.neg_entropy <= 1e-5).all()
+    assert (s.neg_entropy >= -np.log(v) - 1e-4).all()
+
+
+@given(logit_arrays(max_rows=3, max_vocab=900))
+@settings(**SETTINGS)
+def test_fused_kernel_equals_reference_everywhere(logits):
+    a, p, m, e = confidence_fused(logits)
+    ra, rp, rm, re = confidence_ref(logits)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(ra))
+    np.testing.assert_allclose(p, rp, rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(m, rm, rtol=1e-4, atol=1e-6)
+    # neg-entropy: the online u = Σ l·exp(l−m) accumulator cancels against
+    # logZ near H≈0, so the absolute floor dominates the comparison there
+    np.testing.assert_allclose(e, re, rtol=1e-3, atol=5e-4)
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 8))
+@settings(**SETTINGS)
+def test_commit_topn_commits_min_n_eligible(seed, n):
+    rng = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(rng)
+    conf = jax.random.uniform(k1, (2, 12))
+    eligible = jax.random.bernoulli(k2, 0.6, (2, 12))
+    x = jnp.full((2, 12), -1, jnp.int32)
+    cand = jnp.zeros((2, 12), jnp.int32)
+    out = commit_topn(x, conf, cand, eligible, n)
+    committed = (out != -1)
+    # commits exactly min(n, #eligible) per row, only at eligible slots
+    want = jnp.minimum(n, eligible.sum(-1))
+    np.testing.assert_array_equal(committed.sum(-1), want)
+    assert not (committed & ~eligible).any()
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_rank_desc_is_permutation(seed):
+    conf = jax.random.uniform(jax.random.PRNGKey(seed), (3, 9))
+    r = rank_desc(conf)
+    np.testing.assert_array_equal(np.sort(np.asarray(r), -1),
+                                  np.tile(np.arange(9), (3, 1)))
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 4),
+       st.floats(0.0, 0.99))
+@settings(**SETTINGS)
+def test_fdm_progress_guarantee(seed, k, gamma):
+    """FDM must commit at least one token per step whatever γ/K —
+    otherwise the sampler would deadlock."""
+    rng = jax.random.PRNGKey(seed)
+    logits = 2 * jax.random.normal(rng, (2, 8, CFG.vocab_size))
+    x = jnp.full((2, 8), CFG.mask_token_id, jnp.int32)
+    model = lambda q: 2 * jax.random.normal(
+        jax.random.PRNGKey(0), (q.shape[0], 8, CFG.vocab_size))
+    new_x, _ = fdm_select(x, logits, jnp.ones((2, 8), bool), model, CFG,
+                          k=k, gamma=gamma, n=1)
+    assert ((new_x != CFG.mask_token_id).sum(-1) >= 1).all()
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_fdm_a_plan_phase_partition(seed):
+    """Every example lands in exactly one of the four phases."""
+    dcfg = DecodeConfig()
+    logits = 3 * jax.random.normal(jax.random.PRNGKey(seed), (4, 10, 64))
+    active = jnp.ones((4, 10), bool)
+    _, n, gamma, need, (explore, accel, local, balance) = \
+        fdm_a_plan(logits, active, dcfg)
+    one_hot = (explore.astype(int) + accel.astype(int)
+               + local.astype(int) + balance.astype(int))
+    np.testing.assert_array_equal(one_hot, np.ones(4, int))
+    assert (n >= 1).all()
+    assert (n <= dcfg.n_max).all()
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_global_confidence_monotone_in_masked_set(seed):
+    """Adding positions to the masked set can only lower C_global
+    (each position contributes a non-positive negative entropy)."""
+    logits = jax.random.normal(jax.random.PRNGKey(seed), (1, 6, 32))
+    small = jnp.array([[True, False, False, True, False, False]])
+    big = small | jnp.array([[False, True, False, False, True, False]])
+    assert float(global_confidence(logits, big)[0]) <= \
+        float(global_confidence(logits, small)[0]) + 1e-6

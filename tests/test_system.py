@@ -1,0 +1,139 @@
+"""End-to-end behaviour tests: training reduces loss, every strategy
+decodes to completion, FDM-A commits more tokens per forward, the serving
+engine round-trips requests, checkpoints restore exactly."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import DecodeConfig, TrainConfig, get_config
+from repro.core import generate
+from repro.data import CharTokenizer, TaskDataset
+from repro.models.model import forward, init_model
+from repro.serving import ServingEngine
+from repro.training import adamw_init, load, make_train_step, save, train
+
+CFG = get_config("llada-8b").reduced()
+
+
+@pytest.fixture(scope="module")
+def trained():
+    """One small model trained on `sum` shared across system tests."""
+    tok = CharTokenizer(CFG.vocab_size)
+    ds = TaskDataset("sum", tok)
+    tcfg = TrainConfig(batch_size=32, seq_len=ds.seq_len, steps=150,
+                       log_every=1000)
+    params, history = train(CFG, tcfg, ds.batches(tcfg.batch_size),
+                            log=None)
+    return params, ds, tok, history
+
+
+def test_training_reduces_loss(trained):
+    _, _, _, history = trained
+    assert history["loss"][-1] < history["loss"][0] * 0.7
+
+
+@pytest.mark.parametrize("strategy", ["random", "probability", "margin",
+                                      "entropy", "eb", "wino", "fdm",
+                                      "fdm_a"])
+def test_every_strategy_completes(trained, strategy):
+    params, ds, tok, _ = trained
+    model_fn = jax.jit(lambda x: forward(params, x, CFG)[0])
+    batch = ds.eval_batch(4)
+    prompts = jnp.asarray(ds.prompts_only(batch))
+    gen = ds.seq_len - prompts.shape[1]
+    dcfg = DecodeConfig(gen_length=gen, block_size=gen, steps=gen,
+                        strategy=strategy, k=2, k1=2)
+    out, stats = generate(jax.random.PRNGKey(0), model_fn, prompts, CFG,
+                          dcfg)
+    assert out.shape == (4, ds.seq_len)
+    assert not (out == CFG.mask_token_id).any(), strategy
+    assert stats.steps >= 1
+
+
+def test_fdm_a_uses_fewer_steps_than_fdm(trained):
+    params, ds, tok, _ = trained
+    model_fn = jax.jit(lambda x: forward(params, x, CFG)[0])
+    prompts = jnp.asarray(ds.prompts_only(ds.eval_batch(4)))
+    gen = ds.seq_len - prompts.shape[1]
+    base = dict(gen_length=gen, block_size=gen, steps=gen, k=2, k1=2)
+    _, s_fdm = generate(jax.random.PRNGKey(0), model_fn, prompts, CFG,
+                        DecodeConfig(strategy="fdm", **base))
+    _, s_a = generate(jax.random.PRNGKey(0), model_fn, prompts, CFG,
+                      DecodeConfig(strategy="fdm_a", **base))
+    assert s_a.steps <= s_fdm.steps
+    assert s_a.tokens_per_forward >= s_fdm.tokens_per_forward
+
+
+def test_cached_generation_matches_full(trained):
+    """Frozen-prefix cached decoding (generate_cached) must track the full
+    re-forward sampler closely and leave no masks.  Threshold 0.85: the
+    approximation diverges more on an uncertain model, and this fixture
+    is deliberately lightly trained (a well-trained testbed model
+    measures ≥0.99 — see benchmarks/table5)."""
+    from repro.core import generate_cached
+    params, ds, tok, _ = trained
+    model_fn = jax.jit(lambda x: forward(params, x, CFG)[0])
+    prompts = jnp.asarray(ds.prompts_only(ds.eval_batch(8)))
+    gen = ds.seq_len - prompts.shape[1]
+    bs = gen // 2 if gen % 2 == 0 else gen
+    for strategy in ["probability", "fdm_a"]:
+        dcfg = DecodeConfig(gen_length=gen, block_size=bs, steps=gen,
+                            strategy=strategy)
+        o1, _ = generate(jax.random.PRNGKey(0), model_fn, prompts, CFG,
+                         dcfg)
+        o2, _ = generate_cached(jax.random.PRNGKey(0), params, prompts,
+                                CFG, dcfg)
+        assert not (o2 == CFG.mask_token_id).any()
+        agree = float(jnp.mean((o1 == o2).astype(jnp.float32)))
+        assert agree >= 0.85, (strategy, agree)
+
+
+def test_serving_engine_roundtrip(trained):
+    params, ds, tok, _ = trained
+    gen = ds.seq_len - (1 + ds.prompt_len)
+    dcfg = DecodeConfig(gen_length=gen, block_size=gen, steps=gen,
+                        strategy="probability")
+    engine = ServingEngine(params, CFG, dcfg, max_batch=4)
+    batch = ds.eval_batch(6)
+    prompts = ds.prompts_only(batch)
+    rids = [engine.submit(prompts[i]) for i in range(6)]
+    engine.run_until_idle()
+    for rid in rids:
+        req = engine.result(rid)
+        assert req.result is not None
+        assert req.result.shape == (ds.seq_len,)
+        assert req.latency >= 0
+    summary = engine.summary()
+    assert summary["requests"] == 6
+    assert summary["throughput_tps"] > 0
+
+
+def test_checkpoint_roundtrip(tmp_path, trained):
+    params, _, _, _ = trained
+    opt = adamw_init(params)
+    path = str(tmp_path / "ckpt.npz")
+    save(path, params, opt, step=42)
+    p2, o2, step = load(path, params, opt)
+    assert step == 42
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_tokenizer_roundtrip():
+    tok = CharTokenizer(128)
+    s = "12+34=046"
+    assert tok.decode(tok.encode(s)) == s
+
+
+def test_dataset_geometry_static():
+    tok = CharTokenizer(128)
+    for task in ["sum", "sort", "parity", "bracket", "reverse"]:
+        ds = TaskDataset(task, tok)
+        b = next(ds.batches(8))
+        assert b["tokens"].shape == (8, ds.seq_len)
+        assert b["maskable"].shape == (8, ds.seq_len)
+        # prompts never maskable, geometry identical across samples
+        assert not b["maskable"][:, :1 + ds.prompt_len].any()
+        b2 = next(ds.batches(8))
+        assert b2["tokens"].shape == b["tokens"].shape
