@@ -34,6 +34,10 @@ TASK_STEPS = {"sum": 600, "parity": 1000, "bracket": 1000,
               "sort": 300, "reverse": 250}
 TRAIN_STEPS = int(os.environ.get("REPRO_BENCH_TRAIN_STEPS", "0"))
 EVAL_N = int(os.environ.get("REPRO_BENCH_EVAL_N", "64"))
+# decode-loop driver: fused (device-resident lax.while_loop, the default)
+# vs the legacy host step loop; REPRO_HOST_LOOP=1 flips every suite to the
+# host loop for A/B runs (benchmarks/loop_overhead.py measures both).
+FUSED_LOOP = not bool(int(os.environ.get("REPRO_HOST_LOOP", "0")))
 
 # evaluated model: the paper's own arch family at testbed scale
 _MODEL_OVERRIDES = dict(num_layers=4, d_model=256, num_heads=4,
@@ -79,7 +83,7 @@ def evaluate_strategy(task: str, strategy: str, n_eval: int = 0,
     gen = ds.seq_len - prompts.shape[1]
     block = gen if gen <= 16 else max(gen // 2, 1)
     over = dict(gen_length=gen, block_size=block, steps=gen,
-                strategy=strategy)
+                strategy=strategy, fused_loop=FUSED_LOOP)
     over.update(dcfg_over)
     dcfg = DecodeConfig(**over)
     # warmup compile (excluded from timing)

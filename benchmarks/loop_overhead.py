@@ -1,0 +1,117 @@
+"""Decode-loop overhead: legacy host step loop vs device-resident fused loop.
+
+Measures steps/sec of the SAME strategy under the two drivers
+(``DecodeConfig.fused_loop``) across batch sizes.  The decode math is
+identical (parity-tested in tests/test_loop.py), so any gap is pure loop
+overhead: the per-step jitted dispatches (the host-mode strategy body runs
+~30 un-jitted jnp ops), the host RNG split, and the blocking
+``bool(device_get(any(active)))`` sync — all of which the fused
+``lax.while_loop`` driver eliminates.
+
+Two model points, same llada-8b family:
+
+* ``loop-bound`` (2 layers, d=128) — the dispatch-bound regime the fused
+  driver targets; on CPU the per-step forward (~1 ms) is comparable to the
+  host-loop overhead, so the ratio isolates the loop machinery.  Its
+  batch-1 speedup is the ISSUE-1 acceptance number (``batch1_speedup``).
+* ``testbed`` (4 layers, d=256) — the quality-benchmark model, recorded as
+  context: on CPU its ~15 ms forward hides the overhead (ratio ≈ 1); on
+  accelerators the forward shrinks and every model drifts toward the
+  loop-bound point — that is exactly the regime §5.3 cares about.
+
+Emits ``BENCH_decode_loop.json`` at the repo root (via ``benchmarks.run``)
+so later PRs have a perf baseline to regress against.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import _MODEL_OVERRIDES, print_table
+from repro.configs import DecodeConfig, get_config
+from repro.core import generate
+from repro.models.model import forward, init_model
+
+OUT_PATH = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_decode_loop.json")
+
+GEN, BLOCK = 64, 32
+PROMPT_LEN = 8
+BATCHES = (1, 2, 4, 8)
+REPEATS = 5
+MODELS = {
+    # the dispatch-bound point: loop overhead ~ per-step compute
+    "loop-bound": dict(num_layers=2, d_model=128, num_heads=4,
+                       num_kv_heads=4, d_ff=256),
+    # the quality-testbed model (benchmarks/common.py), for context
+    "testbed": _MODEL_OVERRIDES,
+}
+
+
+def _steps_per_sec(model_fn, prompts, cfg, dcfg,
+                   repeats: int = REPEATS) -> Dict:
+    """Best-of-N steps/sec (the model is untrained — decode quality is
+    irrelevant here and the step count is identical either way)."""
+    generate(jax.random.PRNGKey(0), model_fn, prompts, cfg, dcfg)  # compile
+    best, steps = 0.0, 0
+    for r in range(repeats):
+        _, stats = generate(jax.random.PRNGKey(r), model_fn, prompts,
+                            cfg, dcfg)
+        best = max(best, stats.steps / max(stats.wall_time, 1e-9))
+        steps = stats.steps
+    return {"steps_per_sec": best, "steps": steps}
+
+
+def run(strategy: str = "probability", batches=None) -> List[Dict]:
+    batches = batches or BATCHES
+    rows = []
+    for model_key, overrides in MODELS.items():
+        cfg = get_config("llada-8b").reduced(**overrides)
+        params = init_model(jax.random.PRNGKey(0), cfg)
+        model_fn = jax.jit(lambda x: forward(params, x, cfg)[0])
+        base = DecodeConfig(gen_length=GEN, block_size=BLOCK, steps=GEN,
+                            strategy=strategy)
+        for b in batches:
+            prompts = jnp.ones((b, PROMPT_LEN), jnp.int32)
+            host = _steps_per_sec(model_fn, prompts, cfg,
+                                  dataclasses.replace(base,
+                                                      fused_loop=False))
+            fused = _steps_per_sec(model_fn, prompts, cfg,
+                                   dataclasses.replace(base,
+                                                       fused_loop=True))
+            rows.append({
+                "model": model_key, "batch": b, "strategy": strategy,
+                "steps": fused["steps"],
+                "host_steps_per_sec": round(host["steps_per_sec"], 1),
+                "fused_steps_per_sec": round(fused["steps_per_sec"], 1),
+                "speedup": round(fused["steps_per_sec"]
+                                 / max(host["steps_per_sec"], 1e-9), 2),
+            })
+    print("\n== decode-loop overhead: host step loop vs fused while_loop ==")
+    print_table(rows, ["model", "batch", "strategy", "steps",
+                       "host_steps_per_sec", "fused_steps_per_sec",
+                       "speedup"])
+    batch1 = next(r for r in rows
+                  if r["model"] == "loop-bound" and r["batch"] == 1)
+    payload = {
+        "benchmark": "decode_loop",
+        "family": "llada-8b",
+        "backend": jax.default_backend(),
+        "gen_length": GEN, "block_size": BLOCK,
+        "batch1_speedup": batch1["speedup"],
+        "rows": rows,
+    }
+    with open(OUT_PATH, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"[wrote {OUT_PATH}; loop-bound batch-1 fused/host = "
+          f"{payload['batch1_speedup']}x]")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -20,9 +20,9 @@ def main() -> None:
 
     from benchmarks import (ablation_eta, ablation_gamma, ablation_k,
                             fig2_consistency, kernel_confidence,
-                            table1_decode_order, table2_fdm_scaling,
-                            table3_fdm_a, table4_arch_generality,
-                            table5_cached_serving)
+                            loop_overhead, table1_decode_order,
+                            table2_fdm_scaling, table3_fdm_a,
+                            table4_arch_generality, table5_cached_serving)
     n_eval = 16 if args.fast else 0
     suites = {
         "table1": lambda: table1_decode_order.run(n_eval=n_eval),
@@ -43,6 +43,8 @@ def main() -> None:
         "table5": lambda: table5_cached_serving.run(
             n_eval=16 if args.fast else 32),
         "kernel": kernel_confidence.run,
+        "loop": lambda: loop_overhead.run(
+            batches=(1, 4) if args.fast else None),
     }
     chosen = (args.only.split(",") if args.only else list(suites))
     t0 = time.perf_counter()

@@ -222,6 +222,16 @@ class DecodeConfig:
     steps: int = 256                   # T
     strategy: str = "fdm"              # random|probability|margin|entropy|eb|wino|fdm|fdm_a
     temperature: float = 0.0
+    # execution
+    fused_loop: bool = True            # device-resident lax.while_loop block
+                                       # driver (core/loop.py); False = the
+                                       # legacy host step loop (debugging /
+                                       # A/B: benchmarks/loop_overhead.py)
+    use_pallas_kernel: Optional[bool] = None
+                                       # route score_logits through the fused
+                                       # Pallas confidence kernel; None =
+                                       # auto (TPU only — interpret mode on
+                                       # CPU costs more than it saves)
     # FDM (Algorithm 1)
     k: int = 2                         # search width K
     gamma: float = 0.6                 # dynamic pruning threshold

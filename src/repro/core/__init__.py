@@ -8,11 +8,13 @@ Public API:
   fdm         — Algorithm 1 (FDM)
   fdm_a       — Algorithm 2 (FDM-A, three-phase adaptive)
   sampler     — semi-autoregressive block sampler driving any strategy
+  loop        — device-resident fused block driver (one XLA program/block)
 """
 from repro.core.confidence import (Scores, global_confidence,
                                    local_confidence, score_logits)
 from repro.core.fdm import fdm_select, fdm_step
-from repro.core.fdm_a import fdm_a_plan, fdm_a_step
+from repro.core.fdm_a import fdm_a_plan, fdm_a_step, fdm_a_step_fused
+from repro.core.loop import block_runner, drive_block
 from repro.core.loss import masked_cross_entropy, token_accuracy
 from repro.core.masking import (apply_mask, fully_masked, mask_positions,
                                 sample_mask_ratio)
@@ -22,7 +24,8 @@ from repro.core.strategies import commit_topn, get_strategy, rank_desc
 
 __all__ = [
     "Scores", "score_logits", "local_confidence", "global_confidence",
-    "fdm_step", "fdm_select", "fdm_a_step", "fdm_a_plan",
+    "fdm_step", "fdm_select", "fdm_a_step", "fdm_a_step_fused",
+    "fdm_a_plan", "block_runner", "drive_block",
     "masked_cross_entropy", "token_accuracy",
     "apply_mask", "fully_masked", "mask_positions", "sample_mask_ratio",
     "SampleStats", "generate", "generate_cached", "make_model_fn",

@@ -31,8 +31,36 @@ class Scores(NamedTuple):
     neg_entropy: jnp.ndarray  # Σ_v p log p  (≤ 0)
 
 
-def score_logits(logits: jnp.ndarray) -> Scores:
-    """One pass over the vocab axis -> all four per-position scores."""
+def pallas_enabled(dcfg=None) -> bool:
+    """Resolve a DecodeConfig's ``use_pallas_kernel`` flag.
+
+    ``None`` (the default) means auto: the fused kernel runs only on a real
+    TPU backend — on CPU it would execute in Pallas interpret mode, whose
+    Python-level emulation costs far more than the jnp reference it
+    replaces.  ``True``/``False`` force the choice (tests use ``True`` to
+    exercise the wiring through interpret mode).
+    """
+    flag = getattr(dcfg, "use_pallas_kernel", None) if dcfg is not None \
+        else None
+    if flag is None:
+        return jax.default_backend() == "tpu"
+    return bool(flag)
+
+
+def score_logits(logits: jnp.ndarray,
+                 use_kernel: bool = None) -> Scores:
+    """One pass over the vocab axis -> all four per-position scores.
+
+    ``use_kernel=True`` routes through the fused single-HBM-pass Pallas
+    kernel (``repro.kernels.confidence.confidence_fused``); ``None`` keeps
+    the pure-jnp reference (decode callers resolve their config flag via
+    ``pallas_enabled`` and pass the result explicitly).
+    """
+    if use_kernel:
+        from repro.kernels.confidence import confidence_fused
+        a, p, m, e = confidence_fused(
+            logits, interpret=jax.default_backend() != "tpu")
+        return Scores(argmax=a, max_prob=p, margin=m, neg_entropy=e)
     lf = logits.astype(jnp.float32)
     logp = jax.nn.log_softmax(lf, axis=-1)
     p = jnp.exp(logp)

@@ -27,19 +27,20 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import DecodeConfig, ModelConfig
-from repro.core.confidence import global_confidence, score_logits
+from repro.core.confidence import (global_confidence, pallas_enabled,
+                                   score_logits)
 from repro.core.strategies import NEG, ModelFn, commit_topn, rank_desc
 
 
 def fdm_select(x: jnp.ndarray, logits: jnp.ndarray, active: jnp.ndarray,
                model_fn: ModelFn, cfg: ModelConfig, k: int,
-               gamma, n) -> Tuple[jnp.ndarray, int]:
+               gamma, n, use_kernel: bool = None) -> Tuple[jnp.ndarray, int]:
     """The FDM search core. gamma/n may be scalars or (B,) arrays.
 
     Returns (new_x, extra_forward_count).
     """
     b, l = x.shape
-    s = score_logits(logits)
+    s = score_logits(logits, use_kernel)
     gamma_arr = jnp.broadcast_to(jnp.asarray(gamma, jnp.float32), (b,))
     n_arr = jnp.broadcast_to(jnp.asarray(n, jnp.int32), (b,))
 
@@ -60,19 +61,13 @@ def fdm_select(x: jnp.ndarray, logits: jnp.ndarray, active: jnp.ndarray,
     x_safe = jnp.where(safe, s.argmax, x)
 
     # build the K hypothetical next states: commit contender slot j
-    # (j-th contender in C_local order) on top of the safe set
+    # (j-th contender in C_local order) on top of the safe set — one
+    # broadcast one-hot build, no per-candidate Python loop
     slot = ranks_el - (n_arr - 1)[:, None]                    # contender slot
-    cand_states = []
-    cand_valid = []
-    cand_pos_onehot = []
-    for j in range(k):
-        sel = contender & (slot == j)                         # ≤1 pos per ex.
-        cand_states.append(jnp.where(sel, s.argmax, x_safe))
-        cand_valid.append(jnp.any(sel, axis=-1))
-        cand_pos_onehot.append(sel)
-    xc = jnp.stack(cand_states)                               # (K, B, L)
-    valid = jnp.stack(cand_valid)                             # (K, B)
-    sel_k = jnp.stack(cand_pos_onehot)                        # (K, B, L)
+    sel_k = contender[None] & \
+        (slot[None] == jnp.arange(k)[:, None, None])          # (K, B, L)
+    xc = jnp.where(sel_k, s.argmax[None], x_safe[None])       # (K, B, L)
+    valid = jnp.any(sel_k, axis=-1)                           # (K, B)
 
     # ONE batched foreseeing forward over all K candidates
     logits_c = model_fn(xc.reshape(k * b, l)).reshape(k, b, l, -1)
@@ -97,5 +92,6 @@ def fdm_step(rng, x, active, model_fn: ModelFn, cfg: ModelConfig,
     """Algorithm 1 with the paper defaults: n=1 token per step."""
     logits = model_fn(x)
     new_x, extra = fdm_select(x, logits, active, model_fn, cfg,
-                              k=dcfg.k, gamma=dcfg.gamma, n=1)
+                              k=dcfg.k, gamma=dcfg.gamma, n=1,
+                              use_kernel=pallas_enabled(dcfg))
     return new_x, 1 + extra

@@ -15,10 +15,16 @@ of the masked positions (η₁ > η₂ thresholds):
 Batch handling: each example picks its phase independently (vectorized);
 the K-candidate foreseeing forward runs once for the whole batch whenever
 *any* example is in a search phase, and each example selects between the
-search result and the local-only result.  A host-side early-out skips the
-search forward entirely when every example is in the acceleration phase —
-this is where the paper's >3× TPS comes from, and it maps to a cheap
-scalar sync in a real serving loop.
+search result and the local-only result.  The search forward is skipped
+entirely when every example is in the acceleration phase — this is where
+the paper's >3× TPS comes from.  Two implementations of that skip:
+
+  * ``fdm_a_step`` — host early-out (``bool(device_get(...))``), one scalar
+    sync per step; used by the legacy host step loop.
+  * ``fdm_a_step_fused`` — a ``lax.cond`` over the batched phase plan; fully
+    traceable, so the device-resident block driver (``core/loop.py``) can
+    run it inside ``lax.while_loop`` with zero host syncs while XLA still
+    executes only the taken branch at runtime.
 """
 from __future__ import annotations
 
@@ -28,7 +34,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import DecodeConfig, ModelConfig
-from repro.core.confidence import score_logits
+from repro.core.confidence import pallas_enabled, score_logits
 from repro.core.fdm import fdm_select
 from repro.core.strategies import ModelFn, commit_topn
 
@@ -36,7 +42,7 @@ from repro.core.strategies import ModelFn, commit_topn
 def fdm_a_plan(logits: jnp.ndarray, active: jnp.ndarray,
                dcfg: DecodeConfig):
     """Vectorized phase decision. Returns (n, gamma, need_search) per ex."""
-    s = score_logits(logits)
+    s = score_logits(logits, pallas_enabled(dcfg))
     p = jnp.where(active, s.max_prob, 0.0)
     qualified = p > dcfg.eta1
     borderline = (p > dcfg.eta2) & ~qualified
@@ -65,6 +71,34 @@ def fdm_a_step(rng, x, active, model_fn: ModelFn, cfg: ModelConfig,
         return x_local, 1
 
     x_search, extra = fdm_select(x, logits, active, model_fn, cfg,
-                                 k=dcfg.k1, gamma=gamma, n=n)
+                                 k=dcfg.k1, gamma=gamma, n=n,
+                                 use_kernel=pallas_enabled(dcfg))
     new_x = jnp.where(need_search[:, None], x_search, x_local)
     return new_x, 1 + extra
+
+
+def fdm_a_step_fused(rng, x, active, model_fn: ModelFn, cfg: ModelConfig,
+                     dcfg: DecodeConfig, n_unused
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Traceable FDM-A step: the acceleration-phase skip is a ``lax.cond``
+    on the batched phase plan instead of a host sync, so the whole step
+    lives inside the device-resident block loop.  Returns the forward
+    count as a traced f32 scalar (1 when the search branch is skipped,
+    1 + K₁ when it runs) for the carry's stats counters.
+    """
+    logits = model_fn(x)
+    s, n, gamma, need_search, _ = fdm_a_plan(logits, active, dcfg)
+    x_local = commit_topn(x, s.max_prob, s.argmax, active, n)
+
+    def with_search(_):
+        x_search, extra = fdm_select(x, logits, active, model_fn, cfg,
+                                     k=dcfg.k1, gamma=gamma, n=n,
+                                     use_kernel=pallas_enabled(dcfg))
+        new_x = jnp.where(need_search[:, None], x_search, x_local)
+        return new_x, jnp.float32(1 + extra)
+
+    def local_only(_):
+        return x_local, jnp.float32(1)
+
+    return jax.lax.cond(jnp.any(need_search), with_search, local_only,
+                        operand=None)

@@ -5,9 +5,13 @@ region is decoded block by block left-to-right, but *within* a block the
 decoding order is free — that is where the strategy (heuristic / EB / WINO /
 FDM / FDM-A) earns its keep.
 
-The step loop runs on host (as a real serving scheduler would) with every
-model evaluation jitted; fixed shapes throughout so there is exactly one
-compilation per (strategy × shape).
+The intra-block step loop is device-resident by default
+(``DecodeConfig.fused_loop``): ``core/loop.py`` compiles each block's
+denoising steps into a single ``lax.while_loop`` program with zero per-step
+host syncs; fixed shapes throughout keep it at exactly one compilation per
+(strategy × shape).  ``fused_loop=False`` falls back to the legacy host
+step loop (one dispatch + one scalar sync + one host RNG split per step) —
+the debugging / A/B path, measured by ``benchmarks/loop_overhead.py``.
 """
 from __future__ import annotations
 
@@ -81,21 +85,35 @@ def generate(rng, model_fn: Callable, prompt: jnp.ndarray,
     stats = SampleStats(tokens_generated=b * gen)
     t0 = time.perf_counter()
 
-    for blk in range(num_blocks):
-        lo, hi = lp + blk * bs, lp + (blk + 1) * bs
-        in_block = (jnp.arange(x.shape[1]) >= lo) & (jnp.arange(x.shape[1]) < hi)
-        # guard: a strategy always commits ≥1 token/example/step, so a block
-        # can never need more than B-agnostic bs steps
-        for it in range(bs * 4):
-            active = in_block[None, :] & (x == cfg.mask_token_id)
-            if not bool(jax.device_get(jnp.any(active))):
-                break
-            rng, step_rng = jax.random.split(rng)
-            x, fwd = step_fn(step_rng, x, active, model_fn, cfg, dcfg,
-                             n_per_step)
-            stats.steps += 1
-            stats.forward_equivalents += fwd
-    x.block_until_ready()
+    if dcfg.fused_loop:
+        from repro.core.loop import block_runner
+        run = block_runner(model_fn, strategy, cfg, dcfg, n_per_step)
+        steps = jnp.zeros((), jnp.int32)
+        fwd = jnp.zeros((), jnp.float32)
+        for blk in range(num_blocks):
+            x, rng, steps, fwd = run(x, rng, jnp.int32(lp + blk * bs),
+                                     steps, fwd)
+        # one sync for the whole decode: canvas + both stats counters
+        x.block_until_ready()
+        stats.steps = int(jax.device_get(steps))
+        stats.forward_equivalents = float(jax.device_get(fwd))
+    else:
+        for blk in range(num_blocks):
+            lo, hi = lp + blk * bs, lp + (blk + 1) * bs
+            in_block = (jnp.arange(x.shape[1]) >= lo) & \
+                (jnp.arange(x.shape[1]) < hi)
+            # guard: a strategy always commits ≥1 token/example/step, so a
+            # block can never need more than B-agnostic bs steps
+            for it in range(bs * 4):
+                active = in_block[None, :] & (x == cfg.mask_token_id)
+                if not bool(jax.device_get(jnp.any(active))):
+                    break
+                rng, step_rng = jax.random.split(rng)
+                x, fwd = step_fn(step_rng, x, active, model_fn, cfg, dcfg,
+                                 n_per_step)
+                stats.steps += 1
+                stats.forward_equivalents += fwd
+        x.block_until_ready()
     stats.wall_time = time.perf_counter() - t0
     return x, stats
 
@@ -123,7 +141,7 @@ def generate_cached(rng, params, prompt: jnp.ndarray, cfg: ModelConfig,
                                     init_decode_state, set_valid_length)
 
     strategy = strategy or dcfg.strategy
-    step_fn = get_strategy(strategy)
+    step_fn = get_strategy(strategy, fused=dcfg.fused_loop)
     b, lp = prompt.shape
     gen, bs = dcfg.gen_length, dcfg.block_size
     assert gen % bs == 0
@@ -170,6 +188,8 @@ def generate_cached(rng, params, prompt: jnp.ndarray, cfg: ModelConfig,
     prompt_pos = all_pos[:, :lp]
     _, state = extend_rec(prompt, prompt_pos, state)
     stats.forward_equivalents += 1
+    steps_c = jnp.zeros((), jnp.int32)
+    fwd_c = jnp.zeros((), jnp.float32)
     for blk in range(num_blocks):
         lo, hi = lp + blk * bs, lp + (blk + 1) * bs
         # live window = active block + still-masked future blocks
@@ -177,24 +197,51 @@ def generate_cached(rng, params, prompt: jnp.ndarray, cfg: ModelConfig,
         blk_pos = jnp.arange(lo, hi, dtype=jnp.int32)[None].repeat(b, 0)
         wlen = total - lo
         in_block = jnp.arange(wlen) < bs
-        cur_state = state
 
-        def model_fn(w):
-            reps = w.shape[0] // b
-            pos = jnp.tile(win_pos, (reps, 1)) if reps > 1 else win_pos
-            return win_fwd(w, pos, tile_state(cur_state, reps))[0]
+        if dcfg.fused_loop:
+            # fuse everything inside the block: the per-block host boundary
+            # stays (KV extension below re-shapes the state) but the whole
+            # denoising loop is one compiled while_loop program, with the
+            # decode state a traced argument rather than a baked constant.
+            # Like the seed's per-call win_fwd jits, run_blk recompiles per
+            # generate_cached call (window shapes also differ per block) —
+            # a params-keyed cross-call runner cache is a ROADMAP item.
+            from repro.core.loop import drive_block
 
-        for it in range(bs * 4):
-            x_win = x[:, lo:]
-            active = in_block[None, :] & (x_win == cfg.mask_token_id)
-            if not bool(jax.device_get(jnp.any(active))):
-                break
-            rng, step_rng = jax.random.split(rng)
-            new_win, fwd = step_fn(step_rng, x_win, active, model_fn, cfg,
-                                   dcfg, n_per_step)
+            @jax.jit
+            def run_blk(x_win, key, st, steps, fwd, _pos=win_pos,
+                        _in=in_block, _scale=wlen / (total - lp)):
+                def mfn(w):
+                    reps = w.shape[0] // b
+                    p = jnp.tile(_pos, (reps, 1)) if reps > 1 else _pos
+                    return win_fwd(w, p, tile_state(st, reps))[0]
+                return drive_block(step_fn, mfn, cfg, dcfg, n_per_step,
+                                   x_win, key, _in, steps, fwd,
+                                   fwd_scale=_scale)
+
+            new_win, rng, steps_c, fwd_c = run_blk(x[:, lo:], rng, state,
+                                                   steps_c, fwd_c)
             x = jax.lax.dynamic_update_slice_in_dim(x, new_win, lo, axis=1)
-            stats.steps += 1
-            stats.forward_equivalents += fwd * wlen / (total - lp)
+        else:
+            cur_state = state
+
+            def model_fn(w):
+                reps = w.shape[0] // b
+                pos = jnp.tile(win_pos, (reps, 1)) if reps > 1 else win_pos
+                return win_fwd(w, pos, tile_state(cur_state, reps))[0]
+
+            for it in range(bs * 4):
+                x_win = x[:, lo:]
+                active = in_block[None, :] & (x_win == cfg.mask_token_id)
+                if not bool(jax.device_get(jnp.any(active))):
+                    break
+                rng, step_rng = jax.random.split(rng)
+                new_win, fwd = step_fn(step_rng, x_win, active, model_fn,
+                                       cfg, dcfg, n_per_step)
+                x = jax.lax.dynamic_update_slice_in_dim(x, new_win, lo,
+                                                        axis=1)
+                stats.steps += 1
+                stats.forward_equivalents += fwd * wlen / (total - lp)
         # block committed: k/v from the live window (future context kept),
         # then valid length clipped to the committed block; recurrent
         # states advance over the block only
@@ -203,5 +250,8 @@ def generate_cached(rng, params, prompt: jnp.ndarray, cfg: ModelConfig,
         _, state = extend_rec(x[:, lo:hi], blk_pos, state)
         stats.forward_equivalents += 1
     x.block_until_ready()
+    if dcfg.fused_loop:
+        stats.steps = int(jax.device_get(steps_c))
+        stats.forward_equivalents += float(jax.device_get(fwd_c))
     stats.wall_time = time.perf_counter() - t0
     return x, stats

@@ -23,7 +23,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import DecodeConfig, ModelConfig
-from repro.core.confidence import Scores, local_confidence, score_logits
+from repro.core.confidence import (Scores, local_confidence, pallas_enabled,
+                                   score_logits)
 
 ModelFn = Callable[[jnp.ndarray], jnp.ndarray]   # tokens (B,L) -> logits
 
@@ -63,7 +64,7 @@ def heuristic_step(metric: str):
     def step(rng, x, active, model_fn: ModelFn, cfg: ModelConfig,
              dcfg: DecodeConfig, n) -> Tuple[jnp.ndarray, int]:
         logits = model_fn(x)
-        s = score_logits(logits)
+        s = score_logits(logits, pallas_enabled(dcfg))
         if metric == "random":
             conf = jax.random.uniform(rng, x.shape)
         else:
@@ -76,7 +77,7 @@ def eb_step(rng, x, active, model_fn: ModelFn, cfg: ModelConfig,
             dcfg: DecodeConfig, n) -> Tuple[jnp.ndarray, int]:
     """Entropy-bounded: commit everything with H < bound, at least one."""
     logits = model_fn(x)
-    s = score_logits(logits)
+    s = score_logits(logits, pallas_enabled(dcfg))
     low_entropy = (-s.neg_entropy) < dcfg.eb_threshold
     conf = jnp.where(active, s.neg_entropy, NEG)
     best = rank_desc(conf) == 0                       # guarantee progress
@@ -88,7 +89,7 @@ def wino_step(rng, x, active, model_fn: ModelFn, cfg: ModelConfig,
               dcfg: DecodeConfig, n) -> Tuple[jnp.ndarray, int]:
     """Wide-in (commit > τ₁) then narrow-out (revoke < τ₂ on re-score)."""
     logits = model_fn(x)
-    s = score_logits(logits)
+    s = score_logits(logits, pallas_enabled(dcfg))
     conf = jnp.where(active, s.max_prob, NEG)
     best = rank_desc(conf) == 0
     wide = active & ((s.max_prob > dcfg.wino_tau1) | best)
@@ -102,9 +103,13 @@ def wino_step(rng, x, active, model_fn: ModelFn, cfg: ModelConfig,
     return jnp.where(revoke, cfg.mask_token_id, x_wide), 2
 
 
-def get_strategy(name: str):
+def get_strategy(name: str, fused: bool = False):
+    """Look up a step function.  ``fused=True`` returns the fully traceable
+    variant (safe inside ``lax.while_loop``): identical for every strategy
+    except FDM-A, whose host-side early-out becomes a ``lax.cond``.
+    """
     from repro.core.fdm import fdm_step
-    from repro.core.fdm_a import fdm_a_step
+    from repro.core.fdm_a import fdm_a_step, fdm_a_step_fused
     table = {
         "random": heuristic_step("random"),
         "probability": heuristic_step("probability"),
@@ -113,7 +118,7 @@ def get_strategy(name: str):
         "eb": eb_step,
         "wino": wino_step,
         "fdm": fdm_step,
-        "fdm_a": fdm_a_step,
+        "fdm_a": fdm_a_step_fused if fused else fdm_a_step,
     }
     if name not in table:
         raise KeyError(f"unknown strategy {name!r}; have {sorted(table)}")

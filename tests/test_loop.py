@@ -1,0 +1,191 @@
+"""Device-resident fused block loop (core/loop.py): fused-vs-host parity
+for every registered strategy, compile-count guarantees, the Pallas
+confidence-kernel wiring, and the bucketed serving scheduler."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import DecodeConfig, get_config
+from repro.core import generate, generate_cached, score_logits
+from repro.core.confidence import pallas_enabled
+from repro.models.model import forward, init_model
+from repro.serving import ServingEngine
+
+CFG = get_config("llada-8b").reduced()
+
+STRATEGIES = ["random", "probability", "margin", "entropy", "eb", "wino",
+              "fdm", "fdm_a"]
+
+
+@pytest.fixture(scope="module")
+def model():
+    """Untrained tiny model — parity is about decode mechanics, not
+    quality, and skipping training keeps this file fast."""
+    params = init_model(jax.random.PRNGKey(0), CFG)
+    model_fn = jax.jit(lambda x: forward(params, x, CFG)[0])
+    return params, model_fn
+
+
+def _dcfg(**over):
+    base = dict(gen_length=16, block_size=8, steps=16, k=2, k1=2)
+    base.update(over)
+    return DecodeConfig(**base)
+
+
+# --------------------------------------------------------------------------
+# parity: fused while_loop ≡ host step loop, bit-for-bit
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("strategy", STRATEGIES)
+def test_fused_host_parity(model, strategy):
+    _, model_fn = model
+    prompts = jnp.full((3, 6), 2, jnp.int32)
+    dcfg = _dcfg(strategy=strategy)
+    out_f, s_f = generate(jax.random.PRNGKey(0), model_fn, prompts, CFG,
+                          dataclasses.replace(dcfg, fused_loop=True))
+    out_h, s_h = generate(jax.random.PRNGKey(0), model_fn, prompts, CFG,
+                          dataclasses.replace(dcfg, fused_loop=False))
+    np.testing.assert_array_equal(np.asarray(out_f), np.asarray(out_h))
+    assert s_f.steps == s_h.steps
+    assert s_f.forward_equivalents == pytest.approx(s_h.forward_equivalents)
+    assert not (np.asarray(out_f) == CFG.mask_token_id).any()
+
+
+@pytest.mark.parametrize("strategy", ["probability", "eb", "fdm_a"])
+def test_cached_fused_host_parity(model, strategy):
+    params, _ = model
+    prompts = jnp.full((2, 6), 2, jnp.int32)
+    dcfg = _dcfg(strategy=strategy)
+    out_f, s_f = generate_cached(jax.random.PRNGKey(0), params, prompts,
+                                 CFG,
+                                 dataclasses.replace(dcfg, fused_loop=True))
+    out_h, s_h = generate_cached(jax.random.PRNGKey(0), params, prompts,
+                                 CFG,
+                                 dataclasses.replace(dcfg,
+                                                     fused_loop=False))
+    np.testing.assert_array_equal(np.asarray(out_f), np.asarray(out_h))
+    assert s_f.steps == s_h.steps
+    assert s_f.forward_equivalents == pytest.approx(s_h.forward_equivalents)
+
+
+# --------------------------------------------------------------------------
+# compile count: one trace per strategy × shape, across blocks AND calls
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("strategy,expected_traces",
+                         [("probability", 1), ("fdm", 2)])
+def test_one_compilation_per_strategy_and_shape(model, strategy,
+                                                expected_traces):
+    """The whole decode — 2 blocks × 8 steps × 2 generate calls — must
+    trace the model exactly once per distinct forward shape: (B, L) for
+    every strategy, plus (K·B, L) for the foreseeing branch."""
+    params, _ = model
+    traces = []
+
+    def counting_fn(x):
+        traces.append(x.shape)          # side effect fires at trace time
+        return forward(params, x, CFG)[0]
+
+    prompts = jnp.full((2, 6), 2, jnp.int32)
+    dcfg = _dcfg(strategy=strategy, fused_loop=True)
+    generate(jax.random.PRNGKey(0), counting_fn, prompts, CFG, dcfg)
+    assert len(traces) == expected_traces, traces
+    generate(jax.random.PRNGKey(1), counting_fn, prompts, CFG, dcfg)
+    assert len(traces) == expected_traces, "recompiled on second call"
+
+
+# --------------------------------------------------------------------------
+# Pallas confidence-kernel wiring (score_logits use_kernel path)
+# --------------------------------------------------------------------------
+
+def test_pallas_flag_resolution():
+    assert pallas_enabled(DecodeConfig(use_pallas_kernel=True)) is True
+    assert pallas_enabled(DecodeConfig(use_pallas_kernel=False)) is False
+    on_tpu = jax.default_backend() == "tpu"
+    assert pallas_enabled(DecodeConfig()) is on_tpu     # auto
+    assert pallas_enabled(None) is on_tpu
+
+
+def test_score_logits_kernel_matches_reference(rng):
+    logits = 3 * jax.random.normal(rng, (2, 5, 131))
+    ref = score_logits(logits)
+    fused = score_logits(logits, use_kernel=True)       # interpret on CPU
+    np.testing.assert_array_equal(fused.argmax, ref.argmax)
+    np.testing.assert_allclose(fused.max_prob, ref.max_prob, rtol=1e-5)
+    np.testing.assert_allclose(fused.margin, ref.margin, rtol=1e-5,
+                               atol=1e-6)
+    np.testing.assert_allclose(fused.neg_entropy, ref.neg_entropy,
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_kernel_on_decode_path(model):
+    """use_pallas_kernel=True flows through the fused loop end-to-end."""
+    _, model_fn = model
+    prompts = jnp.full((1, 6), 2, jnp.int32)
+    dcfg = _dcfg(gen_length=8, block_size=8, steps=8,
+                 strategy="probability", use_pallas_kernel=True)
+    out_k, _ = generate(jax.random.PRNGKey(0), model_fn, prompts, CFG, dcfg)
+    out_r, _ = generate(jax.random.PRNGKey(0), model_fn, prompts, CFG,
+                        dataclasses.replace(dcfg, use_pallas_kernel=False))
+    np.testing.assert_array_equal(np.asarray(out_k), np.asarray(out_r))
+
+
+# --------------------------------------------------------------------------
+# serving scheduler: prompt-length buckets + per-request stats
+# --------------------------------------------------------------------------
+
+def _engine(params, max_batch=4):
+    dcfg = _dcfg(gen_length=8, block_size=8, steps=8,
+                 strategy="probability")
+    return ServingEngine(params, CFG, dcfg, max_batch=max_batch,
+                         length_bucket=8)
+
+
+def test_serving_no_head_of_line_blocking(model):
+    """Interleaved prompt lengths must coalesce by bucket: the old
+    scheduler (consecutive equal lengths only) needed 5 batches here."""
+    params, _ = model
+    engine = _engine(params)
+    lens = [5, 13, 5, 13, 5]
+    rids = [engine.submit(np.full((l,), 3, np.int32)) for l in lens]
+    steps = 0
+    while engine.queue:
+        engine.step()
+        steps += 1
+    assert steps == 2
+    for rid, l in zip(rids, lens):
+        req = engine.result(rid)
+        assert req.result.shape == (l + 8,)
+        # pad columns were sliced off; the answer region is committed
+        assert not (req.result[l:] == CFG.mask_token_id).any()
+
+
+def test_serving_pads_within_bucket(model):
+    """Lengths 5 and 7 share the 8-ceiling bucket -> one batch."""
+    params, _ = model
+    engine = _engine(params)
+    r1 = engine.submit(np.full((5,), 3, np.int32))
+    r2 = engine.submit(np.full((7,), 3, np.int32))
+    finished = engine.step()
+    assert sorted(finished) == sorted([r1, r2])
+    assert engine.result(r1).result.shape == (13,)
+    assert engine.result(r2).result.shape == (15,)
+
+
+def test_serving_per_request_stats(model):
+    """Each request gets its own SampleStats, pro-rated to real batch
+    members (pad replication must not inflate tokens/forwards)."""
+    params, _ = model
+    engine = _engine(params, max_batch=4)
+    rids = [engine.submit(np.full((6,), 3, np.int32)) for _ in range(3)]
+    engine.run_until_idle()
+    stats = [engine.result(r).stats for r in rids]
+    assert stats[0] is not stats[1] and stats[1] is not stats[2]
+    for s in stats:
+        assert s.tokens_generated == 8          # gen_length, not B·gen
+        # batch forwards split across the 3 REAL requests (batch padded
+        # to 4): 8 steps × 1 fwd / 3
+        assert s.forward_equivalents == pytest.approx(8 / 3)
