@@ -34,8 +34,8 @@ import jax.numpy as jnp
 
 from benchmarks.common import _MODEL_OVERRIDES, print_table
 from repro.configs import DecodeConfig, get_config
-from repro.core import generate
-from repro.models.model import forward, init_model
+from repro.core import Decoder
+from repro.models.model import init_model
 
 OUT_PATH = os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "BENCH_decode_loop.json")
@@ -53,15 +53,15 @@ MODELS = {
 }
 
 
-def _steps_per_sec(model_fn, prompts, cfg, dcfg,
+def _steps_per_sec(params, prompts, cfg, dcfg,
                    repeats: int = REPEATS) -> Dict:
     """Best-of-N steps/sec (the model is untrained — decode quality is
     irrelevant here and the step count is identical either way)."""
-    generate(jax.random.PRNGKey(0), model_fn, prompts, cfg, dcfg)  # compile
+    decoder = Decoder(params, cfg, dcfg)
+    decoder.generate(jax.random.PRNGKey(0), prompts)     # compile
     best, steps = 0.0, 0
     for r in range(repeats):
-        _, stats = generate(jax.random.PRNGKey(r), model_fn, prompts,
-                            cfg, dcfg)
+        _, stats = decoder.generate(jax.random.PRNGKey(r), prompts)
         best = max(best, stats.steps / max(stats.wall_time, 1e-9))
         steps = stats.steps
     return {"steps_per_sec": best, "steps": steps}
@@ -73,15 +73,14 @@ def run(strategy: str = "probability", batches=None) -> List[Dict]:
     for model_key, overrides in MODELS.items():
         cfg = get_config("llada-8b").reduced(**overrides)
         params = init_model(jax.random.PRNGKey(0), cfg)
-        model_fn = jax.jit(lambda x: forward(params, x, cfg)[0])
         base = DecodeConfig(gen_length=GEN, block_size=BLOCK, steps=GEN,
                             strategy=strategy)
         for b in batches:
             prompts = jnp.ones((b, PROMPT_LEN), jnp.int32)
-            host = _steps_per_sec(model_fn, prompts, cfg,
+            host = _steps_per_sec(params, prompts, cfg,
                                   dataclasses.replace(base,
                                                       fused_loop=False))
-            fused = _steps_per_sec(model_fn, prompts, cfg,
+            fused = _steps_per_sec(params, prompts, cfg,
                                    dataclasses.replace(base,
                                                        fused_loop=True))
             rows.append({

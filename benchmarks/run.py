@@ -6,8 +6,64 @@ Env knobs: REPRO_BENCH_TRAIN_STEPS (default 1200), REPRO_BENCH_EVAL_N (64),
 REPRO_BENCH_ARCH (llada-8b).
 """
 import argparse
+import json
+import os
 import sys
 import time
+
+
+def _loop_with_regression_gate(batches=None):
+    """Run the decode-loop benchmark and assert fused steps/sec has not
+    regressed >10% vs. the recorded ``BENCH_decode_loop.json`` baseline
+    (loop-bound batch-1, the ISSUE-1 acceptance number).
+
+    ``loop_overhead.run`` rewrites the baseline file unconditionally, so
+    the old contents are snapshotted first and RESTORED whenever the new
+    numbers must not become the baseline: on a failed gate (a regression
+    may not ratchet its own baseline down) and on partial ``--fast`` runs
+    (which would destroy the full batch sweep future PRs regress
+    against)."""
+    from benchmarks import loop_overhead
+
+    baseline = raw_baseline = None
+    if os.path.exists(loop_overhead.OUT_PATH):
+        with open(loop_overhead.OUT_PATH) as f:
+            raw_baseline = f.read()
+        baseline = json.loads(raw_baseline)
+    partial = batches is not None
+
+    def restore():
+        if raw_baseline is not None:
+            with open(loop_overhead.OUT_PATH, "w") as f:
+                f.write(raw_baseline)
+
+    try:
+        rows = loop_overhead.run(batches=batches)
+    except BaseException:
+        restore()                      # an aborted run is no baseline
+        raise
+    if baseline and baseline.get("backend") == \
+            __import__("jax").default_backend():
+        old = next((r["fused_steps_per_sec"] for r in baseline["rows"]
+                    if r["model"] == "loop-bound" and r["batch"] == 1),
+                   None)
+        new = next(r["fused_steps_per_sec"] for r in rows
+                   if r["model"] == "loop-bound" and r["batch"] == 1)
+        if old:
+            if new < 0.9 * old:
+                restore()
+                raise AssertionError(
+                    f"decode-loop regression: fused loop-bound batch-1 "
+                    f"{new:.1f} steps/s vs. recorded baseline {old:.1f} "
+                    f"(>10% slower) — baseline file left unchanged; "
+                    f"investigate before re-recording "
+                    f"BENCH_decode_loop.json")
+            print(f"[loop regression gate OK: {new:.1f} vs. baseline "
+                  f"{old:.1f} steps/s]")
+    if partial:
+        restore()
+        print("[--fast loop run: full-sweep baseline file restored]")
+    return rows
 
 
 def main() -> None:
@@ -43,7 +99,7 @@ def main() -> None:
         "table5": lambda: table5_cached_serving.run(
             n_eval=16 if args.fast else 32),
         "kernel": kernel_confidence.run,
-        "loop": lambda: loop_overhead.run(
+        "loop": lambda: _loop_with_regression_gate(
             batches=(1, 4) if args.fast else None),
     }
     chosen = (args.only.split(",") if args.only else list(suites))

@@ -12,15 +12,13 @@ import numpy as np
 
 from benchmarks.common import fmt, print_table, trained_model
 from repro.configs import DecodeConfig
-from repro.core import generate, generate_cached
-from repro.models.model import forward
+from repro.core import Decoder
 
 TASK = "sort"
 
 
 def run(n_eval: int = 32):
     params, cfg, ds, tok = trained_model(TASK)
-    model_fn = jax.jit(lambda x: forward(params, x, cfg)[0])
     batch = ds.eval_batch(n_eval or 32)
     prompts = jnp.asarray(ds.prompts_only(batch))
     gen = ds.seq_len - prompts.shape[1]
@@ -29,10 +27,9 @@ def run(n_eval: int = 32):
     for strat in ["probability", "fdm", "fdm_a"]:
         dcfg = DecodeConfig(gen_length=gen, block_size=bs, steps=gen,
                             strategy=strat)
-        o1, s1 = generate(jax.random.PRNGKey(0), model_fn, prompts, cfg,
-                          dcfg)
-        o2, s2 = generate_cached(jax.random.PRNGKey(0), params, prompts,
-                                 cfg, dcfg)
+        decoder = Decoder(params, cfg, dcfg)
+        o1, s1 = decoder.generate(jax.random.PRNGKey(0), prompts)
+        o2, s2 = decoder.generate_cached(jax.random.PRNGKey(0), prompts)
         agree = float(jnp.mean((o1 == o2).astype(jnp.float32)))
         rows.append({
             "strategy": strat,

@@ -8,9 +8,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import DecodeConfig, TrainConfig, get_config
-from repro.core import generate
+from repro.core import Decoder
 from repro.data import CharTokenizer, TaskDataset
-from repro.models.model import forward
 from repro.training import train
 
 
@@ -28,16 +27,17 @@ def main():
     print(f"training {cfg.param_count() / 1e6:.1f} M-param LLDM on 'sum' …")
     params, _ = train(cfg, tcfg, ds.batches(tcfg.batch_size))
 
-    # 3. decode held-out prompts with two strategies
-    model_fn = jax.jit(lambda x: forward(params, x, cfg)[0])
+    # 3. decode held-out prompts with two strategies through the
+    # first-class Decoder (strategies are registry names; compiled
+    # runners are shared across calls via the params-keyed cache)
     batch = ds.eval_batch(32)
     prompts = jnp.asarray(ds.prompts_only(batch))
     gen = ds.seq_len - prompts.shape[1]
     for strategy in ["probability", "fdm"]:
         dcfg = DecodeConfig(gen_length=gen, block_size=gen, steps=gen,
                             strategy=strategy, k=3)
-        out, stats = generate(jax.random.PRNGKey(0), model_fn, prompts,
-                              cfg, dcfg)
+        decoder = Decoder(params, cfg, dcfg)
+        out, stats = decoder.generate(jax.random.PRNGKey(0), prompts)
         em = ds.exact_match(np.asarray(jax.device_get(out)), batch)
         print(f"{strategy:12s} exact-match {em:.2%}  "
               f"({stats.tokens_per_forward:.2f} tokens/forward)")

@@ -15,9 +15,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import DecodeConfig, TrainConfig, get_config
-from repro.core import generate
+from repro.core import Decoder
 from repro.data import CharTokenizer, TaskDataset
-from repro.models.model import forward
 from repro.training import train
 
 
@@ -52,11 +51,10 @@ def main():
     gen = ds.seq_len - prompts.shape[1]
 
     def eval_fn(params, step):
-        model_fn = jax.jit(lambda x: forward(params, x, cfg)[0])
         dcfg = DecodeConfig(gen_length=gen, block_size=gen, steps=gen,
                             strategy="fdm_a")
-        out, stats = generate(jax.random.PRNGKey(0), model_fn, prompts,
-                              cfg, dcfg)
+        out, stats = Decoder(params, cfg, dcfg).generate(
+            jax.random.PRNGKey(0), prompts)
         em = ds.exact_match(np.asarray(jax.device_get(out)), eval_batch)
         print(f"  [eval @ {step}] fdm_a exact-match {em:.2%} "
               f"tps {stats.tps:.1f}")

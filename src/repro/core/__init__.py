@@ -4,28 +4,41 @@ Public API:
   masking     — forward (noising) process, inference start states
   loss        — Eq. 4 masked cross-entropy
   confidence  — C_local metrics + the C_global (foreseeing) estimator
-  strategies  — Random/Probability/Margin/Entropy + EB + WINO baselines
+  strategies  — the Strategy protocol + registry; Random/Probability/
+                Margin/Entropy + EB + WINO baselines
   fdm         — Algorithm 1 (FDM)
   fdm_a       — Algorithm 2 (FDM-A, three-phase adaptive)
-  sampler     — semi-autoregressive block sampler driving any strategy
+  decoder     — the first-class Decoder: block orchestration (plain +
+                frozen-prefix cached), cross-call runner cache, streaming
   loop        — device-resident fused block driver (one XLA program/block)
+  sampler     — deprecated function-style shims over Decoder
 """
 from repro.core.confidence import (Scores, global_confidence,
                                    local_confidence, score_logits)
-from repro.core.fdm import fdm_select, fdm_step
-from repro.core.fdm_a import fdm_a_plan, fdm_a_step, fdm_a_step_fused
+from repro.core.decoder import (CacheInfo, Decoder, SampleStats,
+                                clear_decode_cache, decode_cache_info)
+from repro.core.fdm import FDMStrategy, fdm_select, fdm_step
+from repro.core.fdm_a import (FDMAStrategy, fdm_a_plan, fdm_a_step,
+                              fdm_a_step_fused)
 from repro.core.loop import block_runner, drive_block
 from repro.core.loss import masked_cross_entropy, token_accuracy
 from repro.core.masking import (apply_mask, fully_masked, mask_positions,
                                 sample_mask_ratio)
-from repro.core.sampler import (SampleStats, generate,
-                               generate_cached, make_model_fn)
-from repro.core.strategies import commit_topn, get_strategy, rank_desc
+from repro.core.sampler import generate, generate_cached, make_model_fn
+from repro.core.strategies import (StatelessStrategy, Strategy,
+                                   available_strategies, commit_topn,
+                                   get_strategy, rank_desc,
+                                   register_strategy, resolve_strategy,
+                                   unregister_strategy)
 
 __all__ = [
     "Scores", "score_logits", "local_confidence", "global_confidence",
-    "fdm_step", "fdm_select", "fdm_a_step", "fdm_a_step_fused",
-    "fdm_a_plan", "block_runner", "drive_block",
+    "Strategy", "StatelessStrategy", "register_strategy",
+    "unregister_strategy", "resolve_strategy", "available_strategies",
+    "Decoder", "CacheInfo", "decode_cache_info", "clear_decode_cache",
+    "FDMStrategy", "fdm_step", "fdm_select",
+    "FDMAStrategy", "fdm_a_step", "fdm_a_step_fused", "fdm_a_plan",
+    "block_runner", "drive_block",
     "masked_cross_entropy", "token_accuracy",
     "apply_mask", "fully_masked", "mask_positions", "sample_mask_ratio",
     "SampleStats", "generate", "generate_cached", "make_model_fn",

@@ -1,0 +1,526 @@
+"""The first-class decoding API: ``Decoder`` + the cross-call runner cache.
+
+The paper's whole contribution is the *strategy* (FDM / FDM-A vs. the
+heuristic and dynamic baselines), so the strategy and the machinery that
+drives it are first-class objects here, mirroring the
+``DiffusionLLM(model, decoder, …)`` composition of the dInfer line of
+work:
+
+* ``Strategy`` (``core/strategies.py``) — carries per-decode state
+  (``init_carry``), declares its own fused form, registers by name.
+* ``Decoder`` (this module) — owns the semi-AR block loop for BOTH
+  execution modes (plain full-sequence re-forward, and frozen-prefix
+  cached decoding), the RNG threading, ``SampleStats`` accounting,
+  per-block streaming callbacks, and the compiled-runner cache.
+
+``Decoder(params_or_model_fn, cfg, dcfg)``:
+
+* **params mode** (pass a params pytree) — the Decoder builds its own
+  forwards.  Compiled runners take ``params`` as a *traced argument*, so
+  model weights are never baked into an executable: new params with the
+  same structure reuse the compilation, and dropping the last user
+  reference to the params actually frees everything.
+* **model_fn mode** (pass a callable ``tokens -> logits``) — for
+  callers that already own a (jitted) forward.  The runner holds the
+  callable only through a weakref, dereferenced at trace time.
+
+The runner cache (``RunnerCache``) is module-global and *weak*: entries
+are keyed on the identity of the params leaves (or the model_fn) and
+evicted by a ``weakref.finalize`` when the keying object is collected.
+This replaces two seed-era idioms with one mechanism: ``block_runner``'s
+``lru_cache`` (which pinned model_fns/params forever — a leak for
+long-lived multi-model serving) and ``generate_cached``'s per-call re-jit
+of the window forwards and the fused block runner (params pytrees don't
+hash, so the seed simply recompiled every call).  Repeat decodes with the
+same weights now compile nothing, in both the plain and cached paths;
+``decode_cache_info()`` exposes hit/miss/trace counters so tests and
+benchmarks can assert exactly that.
+
+Streaming: ``generate``/``generate_cached`` accept
+``on_block_committed(block_index, lo, hi, x)``, fired after each block
+commits (the natural streaming grain of blockwise diffusion decoding —
+tokens inside a block finalize together).  ``x`` is the live device
+canvas; don't block in the callback.
+"""
+from __future__ import annotations
+
+import time
+import weakref
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import DecodeConfig, ModelConfig
+from repro.core.loop import drive_block
+from repro.core.masking import fully_masked
+from repro.core.strategies import Strategy, resolve_strategy
+
+
+@dataclass
+class SampleStats:
+    steps: int = 0
+    forward_equivalents: int = 0   # batched-forward count (K-search = K)
+    wall_time: float = 0.0
+    tokens_generated: int = 0
+    phase_counts: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def tps(self) -> float:
+        return self.tokens_generated / max(self.wall_time, 1e-9)
+
+    @property
+    def tokens_per_forward(self) -> float:
+        return self.tokens_generated / max(self.forward_equivalents, 1)
+
+
+class CacheInfo(NamedTuple):
+    entries: int     # distinct params/model_fn identities alive
+    runners: int     # compiled-runner callables across all entries
+    hits: int        # runner lookups served without building
+    misses: int      # runner builds (new jit wrapper created)
+    traces: int      # actual XLA traces of cached runners (recompiles)
+
+
+class RunnerCache:
+    """Weak, identity-keyed cache of compiled decode runners.
+
+    Key = the identity of the model weights (every params leaf) or of the
+    model_fn callable; a ``weakref.finalize`` on the anchor object evicts
+    the whole entry when the caller drops it.  Values never reference the
+    keying object strongly (params are runner *arguments*; model_fns are
+    weakref'd), so eviction genuinely fires — unlike an ``lru_cache``,
+    nothing here can pin model weights.
+    """
+
+    def __init__(self):
+        self._entries: Dict[tuple, Dict[tuple, Callable]] = {}
+        self._finalizers: Dict[tuple, weakref.finalize] = {}
+        self.hits = 0
+        self.misses = 0
+        self.traces = 0
+
+    @staticmethod
+    def key_for(model) -> Tuple[tuple, Any]:
+        """(cache key, weakref anchor) for a params pytree or callable."""
+        if callable(model):
+            return ("fn", id(model)), model
+        leaves = jax.tree.leaves(model)
+        if not leaves:
+            raise ValueError("params pytree has no array leaves")
+        return ("params", tuple(map(id, leaves))), leaves[0]
+
+    def get(self, key: tuple, anchor, subkey: tuple,
+            builder: Callable[[], Callable]) -> Callable:
+        entry = self._entries.get(key)
+        if entry is None:
+            entry = self._entries[key] = {}
+            self._finalizers[key] = weakref.finalize(
+                anchor, self._evict, key)
+        runner = entry.get(subkey)
+        if runner is None:
+            self.misses += 1
+            runner = entry[subkey] = builder()
+        else:
+            self.hits += 1
+        return runner
+
+    def _evict(self, key: tuple) -> None:
+        self._entries.pop(key, None)
+        self._finalizers.pop(key, None)
+
+    def note_trace(self) -> None:
+        """Called from inside runner bodies: the side effect executes only
+        while jax is tracing, so this counts real (re)compilations."""
+        self.traces += 1
+
+    def info(self) -> CacheInfo:
+        return CacheInfo(entries=len(self._entries),
+                         runners=sum(len(e) for e in self._entries.values()),
+                         hits=self.hits, misses=self.misses,
+                         traces=self.traces)
+
+    def clear(self) -> None:
+        for fin in list(self._finalizers.values()):
+            fin.detach()
+        self._entries.clear()
+        self._finalizers.clear()
+        self.hits = self.misses = self.traces = 0
+
+
+_GLOBAL_CACHE = RunnerCache()
+
+
+def decode_cache_info() -> CacheInfo:
+    """Counters of the process-wide Decoder runner cache."""
+    return _GLOBAL_CACHE.info()
+
+
+def clear_decode_cache() -> None:
+    _GLOBAL_CACHE.clear()
+
+
+def _tiling_forward(params, cfg: ModelConfig, extras: Dict[str, Any]):
+    """tokens (B', L) -> logits, tiling conditioning inputs (enc_embeds /
+    patch_embeds) candidate-major to match a K·B folded batch."""
+    from repro.models.model import forward
+
+    def mf(t):
+        kw = {}
+        for k, v in extras.items():
+            reps = t.shape[0] // v.shape[0]
+            kw[k] = jnp.tile(v, (reps,) + (1,) * (v.ndim - 1)) \
+                if reps > 1 else v
+        return forward(params, t, cfg, **kw)[0]
+
+    return mf
+
+
+def _tile_state(st, reps: int):
+    """Replicate a DecodeState candidate-major along its batch axis."""
+    if reps == 1:
+        return st
+    from repro.models.model import DecodeState
+    ls = jax.tree.map(
+        lambda a: jnp.tile(a, (1, reps) + (1,) * (a.ndim - 2))
+        if a.ndim >= 2 else a, st.layer_states)
+    eo = None if st.enc_out is None else jnp.tile(st.enc_out, (reps, 1, 1))
+    return DecodeState(layer_states=ls, enc_out=eo)
+
+
+class Decoder:
+    """One composable decode stack: block orchestration for any registered
+    ``Strategy``, plain or cached execution, shared compiled-runner cache.
+
+    See the module docstring for the two construction modes.  Typical use::
+
+        dec = Decoder(params, cfg, dcfg)
+        tokens, stats = dec.generate(rng, prompt)
+        tokens, stats = dec.generate_cached(rng, prompt)   # frozen-prefix
+
+    ``Decoder`` objects are cheap: compiled runners live in the shared
+    module-level cache keyed on the weights' identity, so constructing a
+    fresh ``Decoder`` per request (as the deprecation shims do) still
+    compiles nothing after the first decode.
+    """
+
+    def __init__(self, model, cfg: ModelConfig, dcfg: DecodeConfig, *,
+                 cache: Optional[RunnerCache] = None):
+        self.cfg = cfg
+        self.dcfg = dcfg
+        self._cache = _GLOBAL_CACHE if cache is None else cache
+        if callable(model):
+            self._model_fn, self._params = model, None
+        else:
+            self._model_fn, self._params = None, model
+        self._key, self._anchor = RunnerCache.key_for(model)
+
+    # -- geometry ----------------------------------------------------------
+    def _geometry(self) -> Tuple[int, int, int, int]:
+        dcfg = self.dcfg
+        gen, bs = dcfg.gen_length, dcfg.block_size
+        assert gen % bs == 0, (gen, bs)
+        num_blocks = gen // bs
+        steps_per_block = max(dcfg.steps // num_blocks, 1)
+        n_per_step = max(bs // steps_per_block, 1)   # heuristic commit width
+        return gen, bs, num_blocks, n_per_step
+
+    # -- runner construction (all cached cross-call) -----------------------
+    def _plain_runner(self, strat: Strategy, n_per_step: int,
+                      extras: Optional[Dict[str, Any]] = None) -> Callable:
+        """Fused block runner with uniform signature
+        ``run(x, rng, lo, steps, fwd, carry) -> 5-tuple``; ``lo`` is a
+        traced int32 so all blocks (and all later decodes with the same
+        weights) share one executable per shape."""
+        cfg, dcfg, cache = self.cfg, self.dcfg, self._cache
+        bs = dcfg.block_size
+        subkey = ("block", strat, cfg, dcfg, n_per_step)
+        if self._model_fn is not None:
+            if extras:
+                raise ValueError("extras require a params-mode Decoder "
+                                 "(a model_fn already owns its "
+                                 "conditioning)")
+            mf_ref = weakref.ref(self._model_fn)
+
+            def build():
+                @jax.jit
+                def run(x, rng, lo, steps, fwd, carry):
+                    cache.note_trace()
+                    mf = mf_ref()       # trace-time only; caller holds it
+                    if mf is None:
+                        raise RuntimeError("model_fn was garbage-collected")
+                    pos = jnp.arange(x.shape[1])
+                    in_block = (pos >= lo) & (pos < lo + bs)
+                    return drive_block(strat, mf, cfg, dcfg, n_per_step,
+                                       x, rng, in_block, steps, fwd, carry)
+                return run
+
+            return cache.get(self._key, self._anchor, subkey, build)
+
+        def build():
+            @jax.jit
+            def run(params, ex, x, rng, lo, steps, fwd, carry):
+                cache.note_trace()
+                pos = jnp.arange(x.shape[1])
+                in_block = (pos >= lo) & (pos < lo + bs)
+                mf = _tiling_forward(params, cfg, ex)
+                return drive_block(strat, mf, cfg, dcfg, n_per_step,
+                                   x, rng, in_block, steps, fwd, carry)
+            return run
+
+        raw = self._cache.get(self._key, self._anchor, subkey, build)
+        params, ex = self._params, dict(extras or {})
+        return lambda x, rng, lo, steps, fwd, carry: \
+            raw(params, ex, x, rng, lo, steps, fwd, carry)
+
+    def _host_model_fn(self, extras: Optional[Dict[str, Any]]) -> Callable:
+        """tokens -> logits for the legacy host step loop."""
+        if self._model_fn is not None:
+            if extras:
+                raise ValueError("extras require a params-mode Decoder")
+            return self._model_fn
+        cfg, cache = self.cfg, self._cache
+
+        def build():
+            @jax.jit
+            def fwd(params, ex, t):
+                cache.note_trace()
+                return _tiling_forward(params, cfg, ex)(t)
+            return fwd
+
+        raw = cache.get(self._key, self._anchor, ("fwd", cfg), build)
+        params, ex = self._params, dict(extras or {})
+        return lambda t: raw(params, ex, t)
+
+    def _window_fn(self, extend: Optional[str]) -> Callable:
+        """Cached-path window forward ``(tokens, positions, state)`` with
+        params bound as a traced argument underneath."""
+        cfg, cache = self.cfg, self._cache
+
+        def build():
+            from repro.models.model import forward_window
+
+            @jax.jit
+            def wf(params, tokens, positions, state):
+                cache.note_trace()
+                return forward_window(params, tokens, positions, state,
+                                      cfg=cfg, extend=extend)
+            return wf
+
+        raw = cache.get(self._key, self._anchor, ("window", cfg, extend),
+                        build)
+        params = self._params
+        return lambda tokens, positions, state: \
+            raw(params, tokens, positions, state)
+
+    def _cached_runner(self, strat: Strategy, n_per_step: int) -> Callable:
+        """Fused block runner for the cached path.  One callable serves
+        every block: the per-block window arrays (positions, in-block
+        mask, fwd scale) are traced arguments, so the jit cache under it
+        holds one compilation per window shape — reused across calls
+        (the seed re-jitted this per ``generate_cached`` call)."""
+        cfg, dcfg, cache = self.cfg, self.dcfg, self._cache
+        subkey = ("cached_block", strat, cfg, dcfg, n_per_step)
+
+        def build():
+            from repro.models.model import forward_window
+
+            @jax.jit
+            def run(params, x_win, key, st, steps, fwd, carry,
+                    win_pos, in_block, fwd_scale):
+                cache.note_trace()
+                b = x_win.shape[0]
+
+                def mfn(w):
+                    reps = w.shape[0] // b
+                    p = jnp.tile(win_pos, (reps, 1)) if reps > 1 else win_pos
+                    return forward_window(params, w, p, _tile_state(st, reps),
+                                          cfg=cfg)[0]
+
+                return drive_block(strat, mfn, cfg, dcfg, n_per_step,
+                                   x_win, key, in_block, steps, fwd, carry,
+                                   fwd_scale=fwd_scale)
+            return run
+
+        raw = cache.get(self._key, self._anchor, subkey, build)
+        params = self._params
+        return lambda x_win, key, st, steps, fwd, carry, win_pos, in_block, \
+            fwd_scale: raw(params, x_win, key, st, steps, fwd, carry,
+                           win_pos, in_block, fwd_scale)
+
+    # -- decoding ----------------------------------------------------------
+    def generate(self, rng, prompt: jnp.ndarray,
+                 strategy: Optional[str] = None,
+                 on_block_committed: Optional[Callable] = None,
+                 **extras) -> Tuple[jnp.ndarray, SampleStats]:
+        """Decode ``gen_length`` tokens after ``prompt`` (B, Lp) with full
+        re-forwards per step.  Returns (tokens (B, Lp+gen), SampleStats).
+
+        ``strategy``: registered name or ``Strategy``; defaults to
+        ``dcfg.strategy``.  ``extras`` (params mode only): conditioning
+        arrays forwarded to the model (enc_embeds / patch_embeds).
+        ``on_block_committed(block_index, lo, hi, x)`` fires after each
+        committed block.
+        """
+        cfg, dcfg = self.cfg, self.dcfg
+        strat = resolve_strategy(strategy or dcfg.strategy)
+        b, lp = prompt.shape
+        gen, bs, num_blocks, n_per_step = self._geometry()
+        x = fully_masked(cfg, prompt, gen)
+        carry = strat.init_carry(cfg, dcfg)
+        stats = SampleStats(tokens_generated=b * gen)
+        t0 = time.perf_counter()
+
+        if dcfg.fused_loop and strat.supports_fused:
+            run = self._plain_runner(strat, n_per_step, extras)
+            steps = jnp.zeros((), jnp.int32)
+            fwd = jnp.zeros((), jnp.float32)
+            for blk in range(num_blocks):
+                lo = lp + blk * bs
+                x, rng, steps, fwd, carry = run(x, rng, jnp.int32(lo),
+                                                steps, fwd, carry)
+                if on_block_committed is not None:
+                    on_block_committed(blk, lo, lo + bs, x)
+            # one sync for the whole decode: canvas + both stats counters
+            x.block_until_ready()
+            stats.steps = int(jax.device_get(steps))
+            stats.forward_equivalents = float(jax.device_get(fwd))
+        else:
+            mf = self._host_model_fn(extras)
+            for blk in range(num_blocks):
+                lo, hi = lp + blk * bs, lp + (blk + 1) * bs
+                in_block = (jnp.arange(x.shape[1]) >= lo) & \
+                    (jnp.arange(x.shape[1]) < hi)
+                # guard: a strategy always commits ≥1 token/example/step,
+                # so a block can never need more than bs·4 steps
+                for _ in range(bs * 4):
+                    active = in_block[None, :] & (x == cfg.mask_token_id)
+                    if not bool(jax.device_get(jnp.any(active))):
+                        break
+                    rng, step_rng = jax.random.split(rng)
+                    x, carry, fwd_n = strat.step(step_rng, carry, x, active,
+                                                 mf, cfg, dcfg, n_per_step)
+                    stats.steps += 1
+                    stats.forward_equivalents += fwd_n
+                if on_block_committed is not None:
+                    on_block_committed(blk, lo, hi, x)
+            x.block_until_ready()
+        stats.wall_time = time.perf_counter() - t0
+        return x, stats
+
+    def generate_cached(self, rng, prompt: jnp.ndarray,
+                        strategy: Optional[str] = None,
+                        enc_embeds=None, state_dtype=None,
+                        on_block_committed: Optional[Callable] = None
+                        ) -> Tuple[jnp.ndarray, SampleStats]:
+        """Frozen-prefix cached decoding (the Fast-dLLM-style acceleration
+        the paper's related work ships, §3).
+
+        Committed blocks live in per-layer KV caches / recurrent states;
+        each denoising step forwards only the LIVE WINDOW — the active
+        block plus the still-masked future blocks — against the frozen
+        prefix (DESIGN.md §3: the suffix must stay live, masked-diffusion
+        models read the future mask tokens as a length signal).  Per-step
+        cost drops from O(L²) toward O((L−prefix)·L) as blocks commit.
+
+        Requires a params-mode Decoder (window forwards need raw weights).
+        """
+        if self._params is None:
+            raise ValueError("generate_cached requires a Decoder built "
+                             "from params (a bare model_fn cannot drive "
+                             "the window forwards)")
+        from repro.models.model import (encode, init_decode_state,
+                                        set_valid_length)
+
+        cfg, dcfg = self.cfg, self.dcfg
+        strat = resolve_strategy(strategy or dcfg.strategy)
+        b, lp = prompt.shape
+        gen, bs, num_blocks, n_per_step = self._geometry()
+        total = lp + gen
+        dtype = state_dtype or jnp.float32
+
+        win_fwd = self._window_fn(None)
+        extend_kv = self._window_fn("kv")
+        extend_rec = self._window_fn("recurrent")
+
+        enc_out = None
+        if cfg.is_encdec and enc_embeds is not None:
+            enc_out = encode(self._params, enc_embeds, cfg)
+        state = init_decode_state(cfg, b, total, dtype, enc_out=enc_out,
+                                  valid_length=0)
+
+        # prefill: k/v of the prompt must be encoded WITH the masked
+        # answer region visible (bidirectional context carries the length
+        # signal), so the kv-extend runs over [prompt | masks] and the
+        # valid length is reset to the prompt; causal recurrent states
+        # advance over the prompt only (they never see the future).
+        stats = SampleStats(tokens_generated=b * gen)
+        t0 = time.perf_counter()
+        x = fully_masked(cfg, prompt, gen)
+        all_pos = jnp.arange(total, dtype=jnp.int32)[None].repeat(b, 0)
+        _, state = extend_kv(x, all_pos, state)
+        state = set_valid_length(state, lp)
+        _, state = extend_rec(prompt, all_pos[:, :lp], state)
+        stats.forward_equivalents += 1
+
+        carry = strat.init_carry(cfg, dcfg)
+        steps_c = jnp.zeros((), jnp.int32)
+        fwd_c = jnp.zeros((), jnp.float32)
+        fused = dcfg.fused_loop and strat.supports_fused
+        run_blk = self._cached_runner(strat, n_per_step) if fused else None
+        for blk in range(num_blocks):
+            lo, hi = lp + blk * bs, lp + (blk + 1) * bs
+            # live window = active block + still-masked future blocks
+            win_pos = jnp.arange(lo, total, dtype=jnp.int32)[None] \
+                .repeat(b, 0)
+            wlen = total - lo
+            in_block = jnp.arange(wlen) < bs
+            scale = wlen / (total - lp)
+
+            if fused:
+                new_win, rng, steps_c, fwd_c, carry = run_blk(
+                    x[:, lo:], rng, state, steps_c, fwd_c, carry,
+                    win_pos, in_block, jnp.float32(scale))
+                x = jax.lax.dynamic_update_slice_in_dim(x, new_win, lo,
+                                                        axis=1)
+            else:
+                def model_fn(w, _state=state, _pos=win_pos):
+                    reps = w.shape[0] // b
+                    pos = jnp.tile(_pos, (reps, 1)) if reps > 1 else _pos
+                    return win_fwd(w, pos, _tile_state(_state, reps))[0]
+
+                for _ in range(bs * 4):
+                    x_win = x[:, lo:]
+                    active = in_block[None, :] & \
+                        (x_win == cfg.mask_token_id)
+                    if not bool(jax.device_get(jnp.any(active))):
+                        break
+                    rng, step_rng = jax.random.split(rng)
+                    new_win, carry, fwd_n = strat.step(
+                        step_rng, carry, x_win, active, model_fn, cfg,
+                        dcfg, n_per_step)
+                    x = jax.lax.dynamic_update_slice_in_dim(x, new_win, lo,
+                                                            axis=1)
+                    stats.steps += 1
+                    stats.forward_equivalents += fwd_n * scale
+            # block committed: k/v from the live window (future context
+            # kept), then valid length clipped to the committed block;
+            # recurrent states advance over the block only
+            _, state = extend_kv(x[:, lo:], win_pos, state)
+            state = set_valid_length(state, hi)
+            _, state = extend_rec(x[:, lo:hi], win_pos[:, :bs], state)
+            stats.forward_equivalents += 1
+            if on_block_committed is not None:
+                on_block_committed(blk, lo, hi, x)
+        x.block_until_ready()
+        if fused:
+            stats.steps = int(jax.device_get(steps_c))
+            stats.forward_equivalents += float(jax.device_get(fwd_c))
+        stats.wall_time = time.perf_counter() - t0
+        return x, stats
+
+    # -- introspection -----------------------------------------------------
+    def cache_info(self) -> CacheInfo:
+        """Counters of the runner cache this Decoder resolves against."""
+        return self._cache.info()

@@ -29,7 +29,8 @@ import jax.numpy as jnp
 from repro.configs.base import DecodeConfig, ModelConfig
 from repro.core.confidence import (global_confidence, pallas_enabled,
                                    score_logits)
-from repro.core.strategies import NEG, ModelFn, commit_topn, rank_desc
+from repro.core.strategies import (NEG, ModelFn, StatelessStrategy,
+                                   commit_topn, rank_desc, register_strategy)
 
 
 def fdm_select(x: jnp.ndarray, logits: jnp.ndarray, active: jnp.ndarray,
@@ -95,3 +96,17 @@ def fdm_step(rng, x, active, model_fn: ModelFn, cfg: ModelConfig,
                               k=dcfg.k, gamma=dcfg.gamma, n=1,
                               use_kernel=pallas_enabled(dcfg))
     return new_x, 1 + extra
+
+
+class FDMStrategy(StatelessStrategy):
+    """Algorithm 1 as a registered ``Strategy`` (stateless; the step is
+    fully traceable, so the fused form is the step itself)."""
+
+    def __init__(self):
+        super().__init__("fdm", fdm_step)
+
+    def forwards_per_step(self, dcfg: DecodeConfig) -> float:
+        return 1.0 + dcfg.k        # scoring forward + K-candidate search
+
+
+register_strategy(FDMStrategy())

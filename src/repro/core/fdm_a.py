@@ -36,7 +36,8 @@ import jax.numpy as jnp
 from repro.configs.base import DecodeConfig, ModelConfig
 from repro.core.confidence import pallas_enabled, score_logits
 from repro.core.fdm import fdm_select
-from repro.core.strategies import ModelFn, commit_topn
+from repro.core.strategies import (ModelFn, StatelessStrategy, commit_topn,
+                                   register_strategy)
 
 
 def fdm_a_plan(logits: jnp.ndarray, active: jnp.ndarray,
@@ -102,3 +103,18 @@ def fdm_a_step_fused(rng, x, active, model_fn: ModelFn, cfg: ModelConfig,
 
     return jax.lax.cond(jnp.any(need_search), with_search, local_only,
                         operand=None)
+
+
+class FDMAStrategy(StatelessStrategy):
+    """Algorithm 2 as a registered ``Strategy``: the strategy itself
+    declares its fused form (the ``lax.cond`` early-out) instead of the
+    loop driver special-casing ``fdm_a_step_fused`` by name."""
+
+    def __init__(self):
+        super().__init__("fdm_a", fdm_a_step, fused_fn=fdm_a_step_fused)
+
+    def forwards_per_step(self, dcfg: DecodeConfig) -> float:
+        return 1.0 + dcfg.k1       # upper bound; the accel phase uses 1
+
+
+register_strategy(FDMAStrategy())

@@ -7,7 +7,7 @@ decode loop dispatch-bound, not FLOP-bound, hiding exactly the efficiency
 gains FDM/FDM-A exist to demonstrate (Table 3 / §5.3).
 
 This module fuses a whole block into ONE compiled XLA program: a
-``jax.lax.while_loop`` whose carry is ``(x, rng, steps, fwd)`` —
+``jax.lax.while_loop`` whose carry is ``(x, rng, steps, fwd, carry)`` —
 
   x      (B, L) int32   — the token canvas (or the live window, cached path)
   rng    PRNG key       — split *inside* the carry, one split per executed
@@ -16,18 +16,23 @@ This module fuses a whole block into ONE compiled XLA program: a
   steps  () int32       — device step counter
   fwd    () float32     — device forward-equivalents counter (f32 because
                           the cached path pro-rates by window length)
+  carry  pytree         — the strategy's own state (``Strategy.init_carry``;
+                          ``()`` for the stateless builtins)
 
 Termination is "no active masks left in the block" plus a ``block_size·4``
-safety cap matching the host loop's guard.  Every strategy step is fully
-traceable (FDM-A's host early-out becomes a ``lax.cond`` — see
-``fdm_a_step_fused``), so a block executes with ZERO host round-trips; the
-host touches the device once per block to hand over the carry, and the
-stats counters come back in a single ``device_get`` at the end of decode.
+safety cap matching the host loop's guard.  The step comes from
+``Strategy.fused_step`` — each strategy declares its own trace-safe form
+(FDM-A's host early-out is a ``lax.cond`` there), so a block executes with
+ZERO host round-trips; the host touches the device once per block to hand
+over the carry, and the stats counters come back in a single
+``device_get`` at the end of decode.
 
-``block_runner`` is memoized on (model_fn, strategy, configs, n) so repeat
-decodes — the serving engine, benchmark warmup+measure pairs — reuse one
-compilation per strategy × shape; the block offset ``lo`` is a traced
-scalar, so all blocks of a sequence share the same executable.
+Runner construction and cross-call caching live in ``core/decoder.py``:
+the ``Decoder`` owns a params-keyed, weak-referenced runner cache so
+repeat decodes — the serving engine, benchmark warmup+measure pairs —
+reuse one compilation per strategy × shape without pinning model weights
+in an ``lru_cache``.  ``block_runner`` below survives as a deprecation
+shim over that cache.
 
 When is the host loop still right?  Set ``DecodeConfig.fused_loop=False``
 to step-debug a strategy (prints / pdb inside step functions), to inspect
@@ -36,27 +41,30 @@ slowly; ``benchmarks/loop_overhead.py`` A/Bs the two drivers.
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import DecodeConfig, ModelConfig
-from repro.core.strategies import get_strategy
+from repro.core.strategies import Strategy, as_strategy
 
 
-def drive_block(step_fn: Callable, model_fn: Callable, cfg: ModelConfig,
+def drive_block(strategy, model_fn: Callable, cfg: ModelConfig,
                 dcfg: DecodeConfig, n_per_step: int, x: jnp.ndarray,
-                rng, in_block: jnp.ndarray, steps, fwd,
-                fwd_scale: float = 1.0):
+                rng, in_block: jnp.ndarray, steps, fwd, carry=(),
+                fwd_scale=1.0):
     """Run one block's denoising steps as a single ``lax.while_loop``.
 
-    Traceable building block (call under jit): ``in_block`` is a (L,) bool
-    marking the current block's columns of ``x``; ``steps``/``fwd`` are the
-    running device counters, returned advanced.  ``fwd_scale`` pro-rates
-    forward-equivalents for the cached path (window / full-seq cost ratio).
+    Traceable building block (call under jit): ``strategy`` is a
+    ``Strategy`` (a registered name or a legacy step callable is coerced);
+    ``in_block`` is a (L,) bool marking the current block's columns of
+    ``x``; ``steps``/``fwd`` are the running device counters and ``carry``
+    the strategy's own state, all returned advanced.  ``fwd_scale``
+    pro-rates forward-equivalents for the cached path (window / full-seq
+    cost ratio).  Returns ``(x, rng, steps, fwd, carry)``.
     """
+    strategy = as_strategy(strategy)
     mask_id = cfg.mask_token_id
     max_steps = dcfg.block_size * 4           # matches the host-loop guard
     start = steps
@@ -64,41 +72,43 @@ def drive_block(step_fn: Callable, model_fn: Callable, cfg: ModelConfig,
     def active_of(canvas):
         return in_block[None, :] & (canvas == mask_id)
 
-    def cond(carry):
-        canvas, _, s, _ = carry
+    def cond(c):
+        canvas, _, s, _, _ = c
         return jnp.any(active_of(canvas)) & (s - start < max_steps)
 
-    def body(carry):
-        canvas, key, s, f = carry
+    def body(c):
+        canvas, key, s, f, sc = c
         key, step_key = jax.random.split(key)
-        new_canvas, df = step_fn(step_key, canvas, active_of(canvas),
-                                 model_fn, cfg, dcfg, n_per_step)
+        new_canvas, new_sc, df = strategy.fused_step(
+            step_key, sc, canvas, active_of(canvas), model_fn, cfg, dcfg,
+            n_per_step)
         return (new_canvas, key, s + 1,
-                f + jnp.asarray(df, jnp.float32) * fwd_scale)
+                f + jnp.asarray(df, jnp.float32) * fwd_scale, new_sc)
 
-    return jax.lax.while_loop(cond, body, (x, rng, steps, fwd))
+    return jax.lax.while_loop(cond, body, (x, rng, steps, fwd, carry))
 
 
-@functools.lru_cache(maxsize=256)
 def block_runner(model_fn: Callable, strategy: str, cfg: ModelConfig,
                  dcfg: DecodeConfig, n_per_step: int) -> Callable:
-    """One-compilation-per-(strategy × shape) jitted block driver.
+    """Deprecated pre-Decoder entry point, kept for one release.
 
-    Returns ``run(x, rng, lo, steps, fwd) -> (x, rng, steps, fwd)`` where
-    ``lo`` (traced int32) is the block's start column — all blocks of a
-    decode, and all later decodes with the same model_fn/configs, share the
-    executable.  Memoized so the jit cache survives across ``generate``
-    calls (the host loop got this for free from the caller-owned jitted
-    model_fn; the fused driver owns the outer jit, so it must cache too).
+    Returns ``run(x, rng, lo, steps, fwd) -> (x, rng, steps, fwd)`` with
+    ``lo`` (traced int32) the block's start column.  Backed by the
+    ``Decoder`` runner cache, so it shares compilations with the new API
+    — and, unlike the old ``lru_cache``, drops them when ``model_fn`` is
+    garbage-collected instead of pinning it forever.
     """
-    step_fn = get_strategy(strategy, fused=True)
-    bs = dcfg.block_size
+    from repro.core.decoder import Decoder
+    from repro.core.strategies import resolve_strategy
 
-    @jax.jit
-    def run(x, rng, lo, steps, fwd):
-        pos = jnp.arange(x.shape[1])
-        in_block = (pos >= lo) & (pos < lo + bs)
-        return drive_block(step_fn, model_fn, cfg, dcfg, n_per_step,
-                           x, rng, in_block, steps, fwd)
+    strat = resolve_strategy(strategy)
+    run5 = Decoder(model_fn, cfg, dcfg)._plain_runner(strat, n_per_step)
+    carry0 = strat.init_carry(cfg, dcfg)
+
+    # the cache only weakrefs model_fn; the returned runner must pin it
+    # (matching the seed contract — callers pass the jit expression inline)
+    def run(x, rng, lo, steps, fwd, _model_fn=model_fn):
+        x, rng, steps, fwd, _ = run5(x, rng, lo, steps, fwd, carry0)
+        return x, rng, steps, fwd
 
     return run

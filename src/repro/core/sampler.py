@@ -1,30 +1,39 @@
-"""The semi-autoregressive block sampler (paper §5.1 pipeline).
+"""Deprecated function-style sampler entry points (paper §5.1 pipeline).
 
-Generation length 256 in blocks of 64 (defaults from the paper): the answer
-region is decoded block by block left-to-right, but *within* a block the
-decoding order is free — that is where the strategy (heuristic / EB / WINO /
-FDM / FDM-A) earns its keep.
+The semi-autoregressive block sampler — generation length 256 in blocks of
+64, free decoding order *within* a block (where the strategy earns its
+keep) — now lives in the first-class ``Decoder`` object
+(``core/decoder.py``), which owns the block loop for both execution modes,
+the cross-call compiled-runner cache, RNG threading, stats, and per-block
+streaming callbacks.  Strategies are ``Strategy`` objects in an extensible
+registry (``core/strategies.py``).
 
-The intra-block step loop is device-resident by default
-(``DecodeConfig.fused_loop``): ``core/loop.py`` compiles each block's
-denoising steps into a single ``lax.while_loop`` program with zero per-step
-host syncs; fixed shapes throughout keep it at exactly one compilation per
-(strategy × shape).  ``fused_loop=False`` falls back to the legacy host
-step loop (one dispatch + one scalar sync + one host RNG split per step) —
-the debugging / A/B path, measured by ``benchmarks/loop_overhead.py``.
+This module keeps the original free functions as thin deprecation shims
+for one release::
+
+    generate(rng, model_fn, prompt, cfg, dcfg)         # plain decoding
+    generate_cached(rng, params, prompt, cfg, dcfg)    # frozen-prefix
+
+are token-for-token equivalent to::
+
+    Decoder(model_fn, cfg, dcfg).generate(rng, prompt)
+    Decoder(params, cfg, dcfg).generate_cached(rng, prompt)
+
+and share the same runner cache, so mixing old and new call styles costs
+no extra compilations.  ``make_model_fn`` remains the supported helper
+for building a conditioned forward from params.  New code should construct
+a ``Decoder`` directly.
 """
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass, field
-from typing import Callable, Dict, Optional
+import warnings
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import DecodeConfig, ModelConfig
-from repro.core.masking import fully_masked
-from repro.core.strategies import get_strategy
+from repro.core.decoder import Decoder, SampleStats  # noqa: F401 (re-export)
 
 
 def make_model_fn(params, cfg: ModelConfig, **extras) -> Callable:
@@ -48,210 +57,34 @@ def make_model_fn(params, cfg: ModelConfig, **extras) -> Callable:
     return model_fn
 
 
-@dataclass
-class SampleStats:
-    steps: int = 0
-    forward_equivalents: int = 0   # batched-forward count (K-search = K)
-    wall_time: float = 0.0
-    tokens_generated: int = 0
-    phase_counts: Dict[str, int] = field(default_factory=dict)
-
-    @property
-    def tps(self) -> float:
-        return self.tokens_generated / max(self.wall_time, 1e-9)
-
-    @property
-    def tokens_per_forward(self) -> float:
-        return self.tokens_generated / max(self.forward_equivalents, 1)
-
-
 def generate(rng, model_fn: Callable, prompt: jnp.ndarray,
              cfg: ModelConfig, dcfg: DecodeConfig,
              strategy: Optional[str] = None) -> tuple:
-    """Decode ``gen_length`` tokens after ``prompt`` (B, Lp).
+    """Deprecated: use ``Decoder(model_fn, cfg, dcfg).generate(...)``.
 
-    Returns (tokens (B, Lp+gen), SampleStats).
+    Decode ``gen_length`` tokens after ``prompt`` (B, Lp).  Returns
+    (tokens (B, Lp+gen), SampleStats).  Token-for-token equivalent to the
+    Decoder path (it *is* the Decoder path) and shares its runner cache.
     """
-    strategy = strategy or dcfg.strategy
-    step_fn = get_strategy(strategy)
-    b, lp = prompt.shape
-    gen, bs = dcfg.gen_length, dcfg.block_size
-    assert gen % bs == 0
-    num_blocks = gen // bs
-    steps_per_block = max(dcfg.steps // num_blocks, 1)
-    n_per_step = max(bs // steps_per_block, 1)     # heuristic commit width
-
-    x = fully_masked(cfg, prompt, gen)
-    stats = SampleStats(tokens_generated=b * gen)
-    t0 = time.perf_counter()
-
-    if dcfg.fused_loop:
-        from repro.core.loop import block_runner
-        run = block_runner(model_fn, strategy, cfg, dcfg, n_per_step)
-        steps = jnp.zeros((), jnp.int32)
-        fwd = jnp.zeros((), jnp.float32)
-        for blk in range(num_blocks):
-            x, rng, steps, fwd = run(x, rng, jnp.int32(lp + blk * bs),
-                                     steps, fwd)
-        # one sync for the whole decode: canvas + both stats counters
-        x.block_until_ready()
-        stats.steps = int(jax.device_get(steps))
-        stats.forward_equivalents = float(jax.device_get(fwd))
-    else:
-        for blk in range(num_blocks):
-            lo, hi = lp + blk * bs, lp + (blk + 1) * bs
-            in_block = (jnp.arange(x.shape[1]) >= lo) & \
-                (jnp.arange(x.shape[1]) < hi)
-            # guard: a strategy always commits ≥1 token/example/step, so a
-            # block can never need more than B-agnostic bs steps
-            for it in range(bs * 4):
-                active = in_block[None, :] & (x == cfg.mask_token_id)
-                if not bool(jax.device_get(jnp.any(active))):
-                    break
-                rng, step_rng = jax.random.split(rng)
-                x, fwd = step_fn(step_rng, x, active, model_fn, cfg, dcfg,
-                                 n_per_step)
-                stats.steps += 1
-                stats.forward_equivalents += fwd
-        x.block_until_ready()
-    stats.wall_time = time.perf_counter() - t0
-    return x, stats
+    warnings.warn("repro.core.generate() is deprecated; use "
+                  "Decoder(model_fn, cfg, dcfg).generate(rng, prompt)",
+                  DeprecationWarning, stacklevel=2)
+    return Decoder(model_fn, cfg, dcfg).generate(rng, prompt,
+                                                 strategy=strategy)
 
 
 def generate_cached(rng, params, prompt: jnp.ndarray, cfg: ModelConfig,
                     dcfg: DecodeConfig, strategy: Optional[str] = None,
                     enc_embeds=None, state_dtype=None) -> tuple:
-    """Frozen-prefix cached decoding (the Fast-dLLM-style acceleration the
-    paper's related work ships, §3).
+    """Deprecated: use ``Decoder(params, cfg, dcfg).generate_cached(...)``.
 
-    Committed blocks live in per-layer KV caches / recurrent states; each
-    denoising step forwards only the LIVE WINDOW — the active block plus
-    the still-masked future blocks — against the frozen prefix.  (A
-    block-only window was measured to collapse quality 81% → 19% on the
-    sort testbed: masked-diffusion models read the future mask tokens as
-    a length/position signal, so the suffix must stay live; this is the
-    "prefix cache" half of Fast-dLLM's DualCache.)  The single remaining
-    approximation is the standard frozen-prefix one (DESIGN.md §3); per-
-    step cost drops from O(L²) toward O((L−prefix)·L) as blocks commit.
+    Frozen-prefix cached decoding (DESIGN.md §3).  Unlike the seed-era
+    implementation, window forwards and the fused block runner come from
+    the params-keyed cross-call cache — repeat calls compile nothing.
     """
-    import functools
-    import jax.numpy as jnp  # noqa: F811
-
-    from repro.models.model import (encode, forward_window,
-                                    init_decode_state, set_valid_length)
-
-    strategy = strategy or dcfg.strategy
-    step_fn = get_strategy(strategy, fused=dcfg.fused_loop)
-    b, lp = prompt.shape
-    gen, bs = dcfg.gen_length, dcfg.block_size
-    assert gen % bs == 0
-    num_blocks = gen // bs
-    steps_per_block = max(dcfg.steps // num_blocks, 1)
-    n_per_step = max(bs // steps_per_block, 1)
-    total = lp + gen
-    dtype = state_dtype or jnp.float32
-
-    enc_out = None
-    if cfg.is_encdec and enc_embeds is not None:
-        enc_out = encode(params, enc_embeds, cfg)
-    state = init_decode_state(cfg, b, total, dtype, enc_out=enc_out,
-                              valid_length=0)
-
-    win_fwd = jax.jit(functools.partial(forward_window, params, cfg=cfg))
-    extend_kv = jax.jit(functools.partial(forward_window, params, cfg=cfg,
-                                          extend="kv"))
-    extend_rec = jax.jit(functools.partial(forward_window, params, cfg=cfg,
-                                           extend="recurrent"))
-
-    def tile_state(st: "DecodeState", reps: int):
-        if reps == 1:
-            return st
-        ls = jax.tree.map(
-            lambda a: jnp.tile(a, (1, reps) + (1,) * (a.ndim - 2))
-            if a.ndim >= 2 else a, st.layer_states)
-        eo = None if st.enc_out is None else \
-            jnp.tile(st.enc_out, (reps, 1, 1))
-        from repro.models.model import DecodeState
-        return DecodeState(layer_states=ls, enc_out=eo)
-
-    # prefill: k/v of the prompt must be encoded WITH the masked answer
-    # region visible (bidirectional context carries the length signal), so
-    # the kv-extend runs over [prompt | masks] and the valid length is
-    # reset to the prompt; causal recurrent states advance over the
-    # prompt only (they never see the future by construction).
-    stats = SampleStats(tokens_generated=b * gen)
-    t0 = time.perf_counter()
-    x = fully_masked(cfg, prompt, gen)
-    all_pos = jnp.arange(total, dtype=jnp.int32)[None].repeat(b, 0)
-    _, state = extend_kv(x, all_pos, state)
-    state = set_valid_length(state, lp)
-    prompt_pos = all_pos[:, :lp]
-    _, state = extend_rec(prompt, prompt_pos, state)
-    stats.forward_equivalents += 1
-    steps_c = jnp.zeros((), jnp.int32)
-    fwd_c = jnp.zeros((), jnp.float32)
-    for blk in range(num_blocks):
-        lo, hi = lp + blk * bs, lp + (blk + 1) * bs
-        # live window = active block + still-masked future blocks
-        win_pos = jnp.arange(lo, total, dtype=jnp.int32)[None].repeat(b, 0)
-        blk_pos = jnp.arange(lo, hi, dtype=jnp.int32)[None].repeat(b, 0)
-        wlen = total - lo
-        in_block = jnp.arange(wlen) < bs
-
-        if dcfg.fused_loop:
-            # fuse everything inside the block: the per-block host boundary
-            # stays (KV extension below re-shapes the state) but the whole
-            # denoising loop is one compiled while_loop program, with the
-            # decode state a traced argument rather than a baked constant.
-            # Like the seed's per-call win_fwd jits, run_blk recompiles per
-            # generate_cached call (window shapes also differ per block) —
-            # a params-keyed cross-call runner cache is a ROADMAP item.
-            from repro.core.loop import drive_block
-
-            @jax.jit
-            def run_blk(x_win, key, st, steps, fwd, _pos=win_pos,
-                        _in=in_block, _scale=wlen / (total - lp)):
-                def mfn(w):
-                    reps = w.shape[0] // b
-                    p = jnp.tile(_pos, (reps, 1)) if reps > 1 else _pos
-                    return win_fwd(w, p, tile_state(st, reps))[0]
-                return drive_block(step_fn, mfn, cfg, dcfg, n_per_step,
-                                   x_win, key, _in, steps, fwd,
-                                   fwd_scale=_scale)
-
-            new_win, rng, steps_c, fwd_c = run_blk(x[:, lo:], rng, state,
-                                                   steps_c, fwd_c)
-            x = jax.lax.dynamic_update_slice_in_dim(x, new_win, lo, axis=1)
-        else:
-            cur_state = state
-
-            def model_fn(w):
-                reps = w.shape[0] // b
-                pos = jnp.tile(win_pos, (reps, 1)) if reps > 1 else win_pos
-                return win_fwd(w, pos, tile_state(cur_state, reps))[0]
-
-            for it in range(bs * 4):
-                x_win = x[:, lo:]
-                active = in_block[None, :] & (x_win == cfg.mask_token_id)
-                if not bool(jax.device_get(jnp.any(active))):
-                    break
-                rng, step_rng = jax.random.split(rng)
-                new_win, fwd = step_fn(step_rng, x_win, active, model_fn,
-                                       cfg, dcfg, n_per_step)
-                x = jax.lax.dynamic_update_slice_in_dim(x, new_win, lo,
-                                                        axis=1)
-                stats.steps += 1
-                stats.forward_equivalents += fwd * wlen / (total - lp)
-        # block committed: k/v from the live window (future context kept),
-        # then valid length clipped to the committed block; recurrent
-        # states advance over the block only
-        _, state = extend_kv(x[:, lo:], win_pos, state)
-        state = set_valid_length(state, hi)
-        _, state = extend_rec(x[:, lo:hi], blk_pos, state)
-        stats.forward_equivalents += 1
-    x.block_until_ready()
-    if dcfg.fused_loop:
-        stats.steps = int(jax.device_get(steps_c))
-        stats.forward_equivalents += float(jax.device_get(fwd_c))
-    stats.wall_time = time.perf_counter() - t0
-    return x, stats
+    warnings.warn("repro.core.generate_cached() is deprecated; use "
+                  "Decoder(params, cfg, dcfg).generate_cached(rng, prompt)",
+                  DeprecationWarning, stacklevel=2)
+    return Decoder(params, cfg, dcfg).generate_cached(
+        rng, prompt, strategy=strategy, enc_embeds=enc_embeds,
+        state_dtype=state_dtype)

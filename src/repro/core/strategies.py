@@ -1,23 +1,45 @@
-"""Baseline decoding-order strategies (the paper's comparison set).
+"""Decoding strategies: the ``Strategy`` protocol, the registry, and the
+paper's comparison set.
 
-Heuristics (§2, Table 2): Random / Probability / Margin / Entropy — commit
-the n most confident masked positions per step, confidence judged locally.
+A strategy is a first-class object (not a bare step function) so it can
+carry per-decode state, declare its own fused (trace-safe) form, and plug
+into the ``Decoder`` block loop (``core/decoder.py``) without touching the
+sampler.  The protocol:
 
-Dynamic baselines (§5, Table 3):
-* **EB** (Ben-Hamu et al., 2025): entropy-bounded parallel unmasking —
-  commit every position whose predictive entropy is below a bound (always
-  at least the single most confident one).
-* **WINO** (Hong et al., 2025): wide-in narrow-out — greedily commit every
-  position above τ₁, then re-verify with one extra forward pass and revoke
-  (re-mask) commitments whose re-scored confidence drops below τ₂ (the top
-  confidence token is always kept so progress is guaranteed).
+  * ``init_carry(cfg, dcfg) -> carry`` — per-decode state threaded through
+    every step and across blocks.  Must be a fixed-shape pytree (it rides
+    the ``lax.while_loop`` carry on the fused path); ``()`` for stateless
+    strategies.
+  * ``step(rng, carry, x, active, model_fn, cfg, dcfg, n)
+    -> (new_x, new_carry, forwards)`` — one denoising step.  May touch the
+    host (sync, early-out) — this is the variant the legacy host loop runs.
+  * ``fused_step(...)`` — same signature, fully traceable (safe inside
+    ``lax.while_loop``); defaults to ``step``.  Override when ``step``
+    needs host control flow (FDM-A's early-out becomes a ``lax.cond``).
+  * metadata: ``supports_fused`` (has a trace-safe form at all) and
+    ``forwards_per_step(dcfg)`` (nominal batched-forward count per step —
+    an upper bound for adaptive strategies).
+
+Registered strategies (``register_strategy`` / ``resolve_strategy``):
+
+* Heuristics (§2, Table 2): Random / Probability / Margin / Entropy —
+  commit the n most confident masked positions per step, judged locally.
+* Dynamic baselines (§5, Table 3): **EB** (Ben-Hamu et al., 2025)
+  entropy-bounded parallel unmasking; **WINO** (Hong et al., 2025)
+  wide-in narrow-out commit-then-revoke.
+* **FDM / FDM-A** (the paper's contribution) register themselves from
+  ``core/fdm.py`` / ``core/fdm_a.py``.
+
+Third-party strategies can register via ``register_strategy`` directly or
+through the ``repro.strategies`` entry-point group — no edits to ``core/``
+required.
 
 All strategies share the same jit-friendly primitive: a per-example top-n
 masked commit with fixed shapes (ranking instead of dynamic gather).
 """
 from __future__ import annotations
 
-from typing import Callable, Tuple
+from typing import Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -53,12 +75,196 @@ def commit_topn(x: jnp.ndarray, conf: jnp.ndarray, cand: jnp.ndarray,
 
 
 # --------------------------------------------------------------------------
-# strategy step functions
+# the Strategy protocol
 # --------------------------------------------------------------------------
-# signature: step(rng, x, active, model_fn, cfg, dcfg, n) ->
-#   (new_x, extra_forwards) — `active` marks the current semi-AR block's
-#   still-masked positions; the caller already ran one forward whose logits
-#   we recompute inside model_fn for jit friendliness (the sampler fuses).
+
+class Strategy:
+    """Base class for decoding strategies (see module docstring).
+
+    Subclasses implement ``step`` (and ``fused_step`` when ``step`` needs
+    host control flow).  ``active`` marks the current semi-AR block's
+    still-masked positions; ``n`` is the caller's nominal commit width.
+    """
+
+    name: str = ""
+    supports_fused: bool = True      # fused_step is lax.while_loop-safe
+
+    def forwards_per_step(self, dcfg: DecodeConfig) -> float:
+        """Nominal batched-forward count per step (upper bound for
+        adaptive strategies); used for budgeting, not accounting — the
+        step functions return the exact count."""
+        return 1.0
+
+    def init_carry(self, cfg: ModelConfig, dcfg: DecodeConfig):
+        """Per-decode strategy state.  Fixed-shape pytree; ``()`` = none."""
+        return ()
+
+    def step(self, rng, carry, x, active, model_fn: ModelFn,
+             cfg: ModelConfig, dcfg: DecodeConfig, n) -> Tuple:
+        raise NotImplementedError
+
+    def fused_step(self, rng, carry, x, active, model_fn: ModelFn,
+                   cfg: ModelConfig, dcfg: DecodeConfig, n) -> Tuple:
+        """Trace-safe variant; default assumes ``step`` already is."""
+        return self.step(rng, carry, x, active, model_fn, cfg, dcfg, n)
+
+    def __repr__(self):
+        return f"<{type(self).__name__} {self.name!r}>"
+
+
+class StatelessStrategy(Strategy):
+    """Adapter lifting a carry-less step function into the protocol.
+
+    ``step_fn(rng, x, active, model_fn, cfg, dcfg, n) -> (x, forwards)``
+    is the pre-Decoder signature; ``fused_fn`` (optional) is its
+    trace-safe form.
+    """
+
+    def __init__(self, name: str, step_fn: Callable,
+                 fused_fn: Optional[Callable] = None,
+                 forwards: float = 1.0, supports_fused: bool = True):
+        self.name = name
+        self._step_fn = step_fn
+        self._fused_fn = fused_fn or step_fn
+        self._forwards = forwards
+        self.supports_fused = supports_fused
+
+    def forwards_per_step(self, dcfg: DecodeConfig) -> float:
+        return float(self._forwards)
+
+    def step(self, rng, carry, x, active, model_fn, cfg, dcfg, n):
+        new_x, fwd = self._step_fn(rng, x, active, model_fn, cfg, dcfg, n)
+        return new_x, carry, fwd
+
+    def fused_step(self, rng, carry, x, active, model_fn, cfg, dcfg, n):
+        new_x, fwd = self._fused_fn(rng, x, active, model_fn, cfg, dcfg, n)
+        return new_x, carry, fwd
+
+
+def as_strategy(obj) -> Strategy:
+    """Coerce a Strategy, registered name, or legacy step callable."""
+    if isinstance(obj, Strategy):
+        return obj
+    if isinstance(obj, str):
+        return resolve_strategy(obj)
+    if callable(obj):
+        return StatelessStrategy(getattr(obj, "__name__", "anonymous"), obj)
+    raise TypeError(f"cannot interpret {obj!r} as a decoding strategy")
+
+
+# --------------------------------------------------------------------------
+# registry
+# --------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, Strategy] = {}
+_BUILTINS_LOADED = False
+_ENTRY_POINTS_LOADED = False
+
+
+def register_strategy(strategy=None, *, name: Optional[str] = None,
+                      replace: bool = False):
+    """Register a ``Strategy`` (instance or zero-arg class).
+
+    Usable as a decorator::
+
+        @register_strategy
+        class MyStrategy(Strategy):
+            name = "mine"
+            ...
+
+    Third-party packages can also publish strategies under the
+    ``repro.strategies`` entry-point group; they are loaded lazily on the
+    first unresolved lookup.
+    """
+    if strategy is None:                       # decorator-with-args form
+        return lambda s: register_strategy(s, name=name, replace=replace)
+    obj = strategy() if isinstance(strategy, type) else strategy
+    if not isinstance(obj, Strategy):
+        raise TypeError(f"{strategy!r} is not a Strategy")
+    key = name or obj.name
+    if not key:
+        raise ValueError(f"{obj!r} has no name")
+    if key in _REGISTRY and not replace and _REGISTRY[key] is not obj:
+        raise ValueError(f"strategy {key!r} already registered "
+                         "(pass replace=True to override)")
+    _REGISTRY[key] = obj
+    return strategy
+
+
+def unregister_strategy(name: str) -> None:
+    _REGISTRY.pop(name, None)
+
+
+def _ensure_builtins() -> None:
+    """FDM/FDM-A live in their own modules and register at import."""
+    global _BUILTINS_LOADED
+    if _BUILTINS_LOADED:
+        return
+    _BUILTINS_LOADED = True
+    import repro.core.fdm            # noqa: F401  (registers "fdm")
+    import repro.core.fdm_a          # noqa: F401  (registers "fdm_a")
+
+
+def _load_entry_points() -> None:
+    global _ENTRY_POINTS_LOADED
+    if _ENTRY_POINTS_LOADED:
+        return
+    _ENTRY_POINTS_LOADED = True
+    try:
+        from importlib.metadata import entry_points
+        eps = entry_points(group="repro.strategies")
+    except Exception:
+        return
+    for ep in eps:
+        try:
+            obj = ep.load()
+            register_strategy(obj, name=ep.name, replace=False)
+        except Exception:
+            continue                  # a broken plugin must not kill decode
+
+
+def resolve_strategy(name: str) -> Strategy:
+    """Look up a registered ``Strategy`` object by name."""
+    if isinstance(name, Strategy):
+        return name
+    _ensure_builtins()
+    if name not in _REGISTRY:
+        _load_entry_points()
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown strategy {name!r}; "
+                       f"have {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def available_strategies() -> Tuple[str, ...]:
+    _ensure_builtins()
+    return tuple(sorted(_REGISTRY))
+
+
+def get_strategy(name: str, fused: bool = False) -> Callable:
+    """Deprecated pre-Decoder lookup: returns a carry-less step callable
+    ``(rng, x, active, model_fn, cfg, dcfg, n) -> (x, forwards)``.
+
+    Kept for one release; use ``resolve_strategy`` (Strategy objects) or
+    the ``Decoder`` instead.  Only valid for stateless strategies — the
+    legacy signature has nowhere to thread a carry.
+    """
+    strat = resolve_strategy(name)
+    bound = strat.fused_step if fused else strat.step
+
+    def legacy_step(rng, x, active, model_fn, cfg, dcfg, n):
+        new_x, _, fwd = bound(rng, strat.init_carry(cfg, dcfg), x, active,
+                              model_fn, cfg, dcfg, n)
+        return new_x, fwd
+
+    return legacy_step
+
+
+# --------------------------------------------------------------------------
+# baseline step functions (kept as plain functions; adapters register them)
+# --------------------------------------------------------------------------
+# legacy signature: step(rng, x, active, model_fn, cfg, dcfg, n) ->
+#   (new_x, extra_forwards)
 
 def heuristic_step(metric: str):
     def step(rng, x, active, model_fn: ModelFn, cfg: ModelConfig,
@@ -103,23 +309,7 @@ def wino_step(rng, x, active, model_fn: ModelFn, cfg: ModelConfig,
     return jnp.where(revoke, cfg.mask_token_id, x_wide), 2
 
 
-def get_strategy(name: str, fused: bool = False):
-    """Look up a step function.  ``fused=True`` returns the fully traceable
-    variant (safe inside ``lax.while_loop``): identical for every strategy
-    except FDM-A, whose host-side early-out becomes a ``lax.cond``.
-    """
-    from repro.core.fdm import fdm_step
-    from repro.core.fdm_a import fdm_a_step, fdm_a_step_fused
-    table = {
-        "random": heuristic_step("random"),
-        "probability": heuristic_step("probability"),
-        "margin": heuristic_step("margin"),
-        "entropy": heuristic_step("entropy"),
-        "eb": eb_step,
-        "wino": wino_step,
-        "fdm": fdm_step,
-        "fdm_a": fdm_a_step_fused if fused else fdm_a_step,
-    }
-    if name not in table:
-        raise KeyError(f"unknown strategy {name!r}; have {sorted(table)}")
-    return table[name]
+for _metric in ("random", "probability", "margin", "entropy"):
+    register_strategy(StatelessStrategy(_metric, heuristic_step(_metric)))
+register_strategy(StatelessStrategy("eb", eb_step))
+register_strategy(StatelessStrategy("wino", wino_step, forwards=2.0))

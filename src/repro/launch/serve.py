@@ -1,7 +1,12 @@
 """Serving launcher: train a small LLDM then serve batched requests with a
-chosen decoding strategy through the ServingEngine.
+chosen decoding strategy through the ServingEngine (which decodes through
+the first-class ``repro.core.Decoder`` stack).
 
 ``python -m repro.launch.serve --strategy fdm_a --requests 16``
+
+``--stream`` prints each committed block as it lands (the engine's
+``on_block_committed`` hook — the SSE grain of blockwise diffusion
+decoding).
 """
 from __future__ import annotations
 
@@ -24,6 +29,8 @@ def main() -> None:
     ap.add_argument("--train-steps", type=int, default=200)
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--stream", action="store_true",
+                    help="print per-block commit events while decoding")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -39,7 +46,13 @@ def main() -> None:
     block = max(gen // 2, 1)
     dcfg = DecodeConfig(gen_length=gen, block_size=block, steps=gen,
                         strategy=args.strategy)
-    engine = ServingEngine(params, cfg, dcfg, max_batch=args.max_batch)
+    stream_cb = None
+    if args.stream:
+        def stream_cb(reqs, blk, lo, hi, x):
+            print(f"  [stream] batch of {len(reqs)} committed block {blk} "
+                  f"(cols {lo}:{hi})")
+    engine = ServingEngine(params, cfg, dcfg, max_batch=args.max_batch,
+                           on_block_committed=stream_cb)
 
     batch = ds.eval_batch(args.requests)
     prompts = ds.prompts_only(batch)

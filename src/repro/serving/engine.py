@@ -2,34 +2,33 @@
 
 A miniature vLLM-style front end adapted to the *blockwise* execution model
 of masked-diffusion decoding: requests are queued, grouped into fixed-shape
-batches (padding to the bucket size keeps one jit compilation alive), and
-each batch is decoded with the configured strategy through the semi-AR
-sampler — which runs the device-resident fused block loop by default
-(``DecodeConfig.fused_loop``), so a batch's whole decode issues one program
-per block with no per-step host syncs.  Diffusion decode is
-batch-synchronous (every sequence in the batch advances through the same
-denoising steps), so the natural scheduling unit is the *batch*, not the
-token — continuous batching applies between blocks, not between tokens.
+batches, and each batch is decoded through a single ``repro.core.Decoder``
+— the first-class decode stack that owns the device-resident fused block
+loop, the strategy registry, and the params-keyed cross-call runner cache.
+Because that cache is shared and weak, the engine no longer keeps its own
+per-sequence-length jit table: repeat batches of any shape reuse the
+Decoder's compilations, and dropping an engine (or hot-swapping weights by
+building a new one) releases them — the prerequisite for long-lived
+multi-model serving.  Diffusion decode is batch-synchronous (every
+sequence in the batch advances through the same denoising steps), so the
+natural scheduling unit is the *batch*, not the token — continuous
+batching applies between blocks, not between tokens.
 
 Scheduling is *prompt-length bucketed*: the queue is scanned into buckets
 (prompt length rounded up to ``length_bucket``), shorter prompts in the
 chosen batch left-padded with mask tokens — the natural pad for a
 masked-diffusion LM, which reads mask as "unknown context" — and the
 bucket holding the oldest request is served first.  A single odd-length
-prompt at the head therefore cannot strand the rest of the queue (the old
-scheduler batched only *consecutive* same-length requests).  Padding
+prompt at the head therefore cannot strand the rest of the queue.  Padding
 stops at the batch's max real length, not the bucket ceiling: mask pads
 carry a measurable quality cost (DESIGN.md), so uniform-length workloads
 see zero padding.
 
-The engine also owns the per-batch model function cache, keyed on the
-batch's padded sequence length (batch max prompt + gen).  Because padding
-stops at the batch max rather than the bucket ceiling, a bucket can
-produce up to ``length_bucket`` distinct compile keys — the deliberate
-price of the quality finding above; workloads that prefer one compile per
-bucket can pre-pad their prompts.  This cache is the serving analogue of
-a KV-cache manager for bidirectional models where the cache is the
-*committed prefix* itself.
+Streaming: pass ``on_block_committed(requests, block_index, lo, hi, x)``
+to the constructor to observe each committed block of a batch as it lands
+(the natural SSE grain for diffusion decoding — tokens inside a block
+finalize together).  ``x`` is the live device canvas; don't block in the
+callback.
 """
 from __future__ import annotations
 
@@ -43,8 +42,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import DecodeConfig, ModelConfig
-from repro.core.sampler import SampleStats, generate
-from repro.models.model import forward
+from repro.core.decoder import Decoder, SampleStats
 
 
 @dataclasses.dataclass
@@ -64,17 +62,19 @@ class Request:
 class ServingEngine:
     def __init__(self, params, cfg: ModelConfig, dcfg: DecodeConfig,
                  max_batch: int = 8, seed: int = 0,
-                 length_bucket: int = 8):
+                 length_bucket: int = 8,
+                 on_block_committed: Optional[Callable] = None):
         self.params = params
         self.cfg = cfg
         self.dcfg = dcfg
+        self.decoder = Decoder(params, cfg, dcfg)
         self.max_batch = max_batch
         self.length_bucket = max(length_bucket, 1)
+        self.on_block_committed = on_block_committed
         self.queue: Deque[Request] = deque()
         self.done: Dict[int, Request] = {}
         self._next_id = 0
         self._rng = jax.random.PRNGKey(seed)
-        self._model_fns: Dict[int, Callable] = {}
 
     # -- client API --------------------------------------------------------
     def submit(self, prompt: np.ndarray) -> int:
@@ -88,14 +88,6 @@ class ServingEngine:
         return self.done[rid]
 
     # -- scheduler ---------------------------------------------------------
-    def _model_fn(self, seq_len: int) -> Callable:
-        if seq_len not in self._model_fns:
-            cfg = self.cfg
-            params = self.params
-            self._model_fns[seq_len] = jax.jit(
-                lambda x: forward(params, x, cfg)[0])
-        return self._model_fns[seq_len]
-
     def _bucket_len(self, lp: int) -> int:
         """Round a prompt length up to its bucket ceiling."""
         q = self.length_bucket
@@ -139,10 +131,13 @@ class ServingEngine:
         if pad:
             prompts = np.concatenate(
                 [prompts, np.repeat(prompts[-1:], pad, 0)])
-        model_fn = self._model_fn(lp + self.dcfg.gen_length)
         self._rng, rng = jax.random.split(self._rng)
-        out, stats = generate(rng, model_fn, jnp.asarray(prompts),
-                              self.cfg, self.dcfg)
+        cb = None
+        if self.on_block_committed is not None:
+            cb = lambda blk, lo, hi, x: \
+                self.on_block_committed(batch, blk, lo, hi, x)
+        out, stats = self.decoder.generate(rng, jnp.asarray(prompts),
+                                           on_block_committed=cb)
         out = np.asarray(jax.device_get(out))
         now = time.perf_counter()
         real = len(batch)

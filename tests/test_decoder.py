@@ -1,0 +1,253 @@
+"""The first-class Decoder / Strategy API (core/decoder.py,
+core/strategies.py): registry round-trip with a custom carry-ful strategy,
+cross-call runner-cache hits and weak eviction, deprecation-shim parity,
+and per-block streaming callbacks."""
+import dataclasses
+import gc
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import DecodeConfig, get_config
+from repro.core import (Decoder, Strategy, available_strategies,
+                        commit_topn, decode_cache_info, generate,
+                        generate_cached, get_strategy, register_strategy,
+                        resolve_strategy, score_logits, unregister_strategy)
+from repro.core.decoder import RunnerCache
+from repro.models.model import forward, init_model
+
+CFG = get_config("llada-8b").reduced()
+
+
+@pytest.fixture(scope="module")
+def model():
+    params = init_model(jax.random.PRNGKey(0), CFG)
+    model_fn = jax.jit(lambda x: forward(params, x, CFG)[0])
+    return params, model_fn
+
+
+def _dcfg(**over):
+    base = dict(gen_length=16, block_size=8, steps=16, k=2, k1=2,
+                strategy="probability")
+    base.update(over)
+    return DecodeConfig(**base)
+
+
+# --------------------------------------------------------------------------
+# registry round-trip: a custom strategy decodes end-to-end, no core edits
+# --------------------------------------------------------------------------
+
+class AlternatingStrategy(Strategy):
+    """Toy carry-ful strategy: alternates between committing 1 and 2
+    tokens per step (the carry is a device step counter), exercising both
+    init_carry threading and fused/host parity for out-of-tree code."""
+
+    name = "alternating"
+
+    def init_carry(self, cfg, dcfg):
+        return jnp.zeros((), jnp.int32)
+
+    def step(self, rng, carry, x, active, model_fn, cfg, dcfg, n):
+        logits = model_fn(x)
+        s = score_logits(logits)
+        take = jnp.where(carry % 2 == 0, 1, 2)
+        new_x = commit_topn(x, s.max_prob, s.argmax, active,
+                            jnp.full((x.shape[0],), take))
+        return new_x, carry + 1, 1
+
+
+@pytest.fixture()
+def alternating():
+    register_strategy(AlternatingStrategy(), replace=True)
+    yield
+    unregister_strategy("alternating")
+
+
+def test_custom_strategy_registry_roundtrip(model, alternating):
+    assert "alternating" in available_strategies()
+    assert resolve_strategy("alternating").name == "alternating"
+    params, _ = model
+    prompts = jnp.full((2, 6), 2, jnp.int32)
+    dcfg = _dcfg(strategy="alternating")
+    dec = Decoder(params, CFG, dcfg)
+    out_f, s_f = dec.generate(jax.random.PRNGKey(0), prompts)
+    assert out_f.shape == (2, 22)
+    assert not (np.asarray(out_f) == CFG.mask_token_id).any()
+    # the carry made commit widths alternate 1,2,1,2… -> fewer steps than
+    # the 16 a 1-per-step strategy needs, more than the 8 of 2-per-step
+    assert 8 < s_f.steps < 16
+    # fused/host parity holds for out-of-tree strategies too
+    out_h, s_h = Decoder(params, CFG,
+                         dataclasses.replace(dcfg, fused_loop=False)
+                         ).generate(jax.random.PRNGKey(0), prompts)
+    np.testing.assert_array_equal(np.asarray(out_f), np.asarray(out_h))
+    assert s_f.steps == s_h.steps
+
+
+def test_custom_strategy_carry_survives_cached_path(model, alternating):
+    params, _ = model
+    prompts = jnp.full((2, 6), 2, jnp.int32)
+    dec = Decoder(params, CFG, _dcfg(strategy="alternating"))
+    out, _ = dec.generate_cached(jax.random.PRNGKey(0), prompts)
+    assert not (np.asarray(out) == CFG.mask_token_id).any()
+
+
+def test_register_strategy_rejects_duplicates(alternating):
+    with pytest.raises(ValueError):
+        register_strategy(AlternatingStrategy())
+    with pytest.raises(KeyError):
+        resolve_strategy("definitely-not-registered")
+
+
+def test_get_strategy_legacy_shim_still_callable(model):
+    """The pre-Decoder lookup keeps its carry-less call signature."""
+    _, model_fn = model
+    step = get_strategy("probability")
+    x = jnp.full((1, 8), CFG.mask_token_id, jnp.int32)
+    active = jnp.ones((1, 8), bool)
+    new_x, fwd = step(jax.random.PRNGKey(0), x, active, model_fn, CFG,
+                      _dcfg(), 2)
+    assert int((new_x != CFG.mask_token_id).sum()) == 2
+    assert fwd == 1
+
+
+# --------------------------------------------------------------------------
+# cross-call cache: zero recompiles on repeat, weak eviction on GC
+# --------------------------------------------------------------------------
+
+def test_cross_call_cache_zero_recompiles(model):
+    """A second decode with the same params — even through a *new*
+    Decoder, as the shims do — must neither build nor trace anything,
+    in both the plain and cached paths."""
+    params, _ = model
+    prompts = jnp.full((2, 6), 2, jnp.int32)
+    dcfg = _dcfg()
+    d1 = Decoder(params, CFG, dcfg)
+    d1.generate(jax.random.PRNGKey(0), prompts)
+    d1.generate_cached(jax.random.PRNGKey(0), prompts)
+    before = decode_cache_info()
+    d2 = Decoder(params, CFG, _dcfg())          # fresh but equal config
+    d2.generate(jax.random.PRNGKey(1), prompts)
+    d2.generate_cached(jax.random.PRNGKey(1), prompts)
+    after = decode_cache_info()
+    assert after.traces == before.traces, "recompiled on repeat decode"
+    assert after.misses == before.misses, "rebuilt a cached runner"
+    assert after.hits > before.hits
+
+
+def test_cache_entry_evicted_when_params_dropped():
+    """New params after GC must not leak the old entry: the cache keys
+    weakly on the weights' identity and runners never bake them in."""
+    cache = RunnerCache()                      # private cache: no
+    prompts = jnp.full((1, 4), 2, jnp.int32)   # interference from fixtures
+    dcfg = _dcfg(gen_length=8, block_size=8, steps=8)
+    p1 = init_model(jax.random.PRNGKey(1), CFG)
+    Decoder(p1, CFG, dcfg, cache=cache).generate(jax.random.PRNGKey(0),
+                                                 prompts)
+    assert cache.info().entries == 1
+    del p1
+    gc.collect()
+    assert cache.info().entries == 0, "dropped params still cached"
+    p2 = init_model(jax.random.PRNGKey(2), CFG)
+    Decoder(p2, CFG, dcfg, cache=cache).generate(jax.random.PRNGKey(0),
+                                                 prompts)
+    assert cache.info().entries == 1
+
+
+def test_cache_evicts_model_fn_entries_too(model):
+    params, _ = model
+    cache = RunnerCache()
+    prompts = jnp.full((1, 4), 2, jnp.int32)
+    dcfg = _dcfg(gen_length=8, block_size=8, steps=8)
+    mf = jax.jit(lambda x: forward(params, x, CFG)[0])
+    Decoder(mf, CFG, dcfg, cache=cache).generate(jax.random.PRNGKey(0),
+                                                 prompts)
+    assert cache.info().entries == 1
+    del mf
+    gc.collect()
+    assert cache.info().entries == 0
+
+
+# --------------------------------------------------------------------------
+# deprecation shims: token-for-token parity with the Decoder path
+# --------------------------------------------------------------------------
+
+def test_generate_shim_matches_decoder(model):
+    params, model_fn = model
+    prompts = jnp.full((3, 6), 2, jnp.int32)
+    dcfg = _dcfg(strategy="fdm_a")
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        out_shim, s_shim = generate(jax.random.PRNGKey(0), model_fn,
+                                    prompts, CFG, dcfg)
+    out_dec, s_dec = Decoder(model_fn, CFG, dcfg).generate(
+        jax.random.PRNGKey(0), prompts)
+    np.testing.assert_array_equal(np.asarray(out_shim), np.asarray(out_dec))
+    assert s_shim.steps == s_dec.steps
+    assert s_shim.forward_equivalents == \
+        pytest.approx(s_dec.forward_equivalents)
+
+
+def test_generate_cached_shim_matches_decoder(model):
+    params, _ = model
+    prompts = jnp.full((2, 6), 2, jnp.int32)
+    dcfg = _dcfg()
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        out_shim, s_shim = generate_cached(jax.random.PRNGKey(0), params,
+                                           prompts, CFG, dcfg)
+    out_dec, s_dec = Decoder(params, CFG, dcfg).generate_cached(
+        jax.random.PRNGKey(0), prompts)
+    np.testing.assert_array_equal(np.asarray(out_shim), np.asarray(out_dec))
+    assert s_shim.steps == s_dec.steps
+    assert s_shim.forward_equivalents == \
+        pytest.approx(s_dec.forward_equivalents)
+
+
+def test_shims_emit_deprecation_warning(model):
+    _, model_fn = model
+    prompts = jnp.full((1, 4), 2, jnp.int32)
+    with pytest.warns(DeprecationWarning):
+        generate(jax.random.PRNGKey(0), model_fn, prompts, CFG,
+                 _dcfg(gen_length=8, block_size=8, steps=8))
+
+
+# --------------------------------------------------------------------------
+# streaming: on_block_committed fires once per block, in order
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fused", [True, False])
+def test_on_block_committed_callback(model, fused):
+    params, _ = model
+    prompts = jnp.full((2, 6), 2, jnp.int32)
+    events = []
+    dec = Decoder(params, CFG, _dcfg(fused_loop=fused))
+    out, _ = dec.generate(
+        jax.random.PRNGKey(0), prompts,
+        on_block_committed=lambda blk, lo, hi, x: events.append(
+            (blk, lo, hi, bool((np.asarray(x[:, lo:hi])
+                                != CFG.mask_token_id).all()))))
+    assert [(e[0], e[1], e[2]) for e in events] == [(0, 6, 14), (1, 14, 22)]
+    # at each event the just-committed block is fully decoded
+    assert all(e[3] for e in events)
+
+
+def test_on_block_committed_cached_path(model):
+    params, _ = model
+    prompts = jnp.full((2, 6), 2, jnp.int32)
+    events = []
+    dec = Decoder(params, CFG, _dcfg())
+    dec.generate_cached(jax.random.PRNGKey(0), prompts,
+                        on_block_committed=lambda blk, lo, hi, x:
+                        events.append((blk, lo, hi)))
+    assert events == [(0, 6, 14), (1, 14, 22)]
+
+
+def test_model_fn_decoder_rejects_cached(model):
+    _, model_fn = model
+    with pytest.raises(ValueError):
+        Decoder(model_fn, CFG, _dcfg()).generate_cached(
+            jax.random.PRNGKey(0), jnp.full((1, 4), 2, jnp.int32))

@@ -2,7 +2,12 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="hypothesis is not installed in this container (see ROADMAP)")
+from hypothesis import given, settings, strategies as st   # noqa: E402
 
 from repro.configs import DecodeConfig, get_config
 from repro.core import commit_topn, rank_desc, score_logits
