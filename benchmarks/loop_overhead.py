@@ -1,12 +1,16 @@
-"""Decode-loop overhead: legacy host step loop vs device-resident fused loop.
+"""Decode-loop overhead: host step loop vs per-block fused vs whole-request.
 
-Measures steps/sec of the SAME strategy under the two drivers
-(``DecodeConfig.fused_loop``) across batch sizes.  The decode math is
-identical (parity-tested in tests/test_loop.py), so any gap is pure loop
-overhead: the per-step jitted dispatches (the host-mode strategy body runs
-~30 un-jitted jnp ops), the host RNG split, and the blocking
-``bool(device_get(any(active)))`` sync — all of which the fused
-``lax.while_loop`` driver eliminates.
+Measures steps/sec of the SAME strategy under the three drivers
+(``DecodeConfig.fused_loop`` / ``fused_blocks``) across batch sizes.  The
+decode math is identical (parity-tested in tests/test_loop.py), so any gap
+is pure loop overhead:
+
+* host → per-block fused removes the per-STEP costs: the jitted dispatch,
+  the host RNG split, ~30 un-jitted jnp ops in the strategy body, and the
+  blocking ``bool(device_get(any(active)))`` termination sync;
+* per-block fused → whole-request removes the per-BLOCK costs: one
+  dispatch + carry handover per block, leaving a single compiled dispatch
+  per request (the O(1)-dispatch regime §5.3's acceleration phase wants).
 
 Two model points, same llada-8b family:
 
@@ -80,21 +84,32 @@ def run(strategy: str = "probability", batches=None) -> List[Dict]:
             host = _steps_per_sec(params, prompts, cfg,
                                   dataclasses.replace(base,
                                                       fused_loop=False))
-            fused = _steps_per_sec(params, prompts, cfg,
-                                   dataclasses.replace(base,
-                                                       fused_loop=True))
+            block = _steps_per_sec(params, prompts, cfg,
+                                   dataclasses.replace(
+                                       base, fused_loop=True,
+                                       fused_blocks=False))
+            request = _steps_per_sec(params, prompts, cfg,
+                                     dataclasses.replace(
+                                         base, fused_loop=True,
+                                         fused_blocks=True))
             rows.append({
                 "model": model_key, "batch": b, "strategy": strategy,
-                "steps": fused["steps"],
+                "steps": request["steps"],
                 "host_steps_per_sec": round(host["steps_per_sec"], 1),
-                "fused_steps_per_sec": round(fused["steps_per_sec"], 1),
-                "speedup": round(fused["steps_per_sec"]
+                "fused_steps_per_sec": round(block["steps_per_sec"], 1),
+                "request_steps_per_sec": round(request["steps_per_sec"], 1),
+                "speedup": round(block["steps_per_sec"]
                                  / max(host["steps_per_sec"], 1e-9), 2),
+                "request_speedup": round(request["steps_per_sec"]
+                                         / max(host["steps_per_sec"],
+                                               1e-9), 2),
             })
-    print("\n== decode-loop overhead: host step loop vs fused while_loop ==")
+    print("\n== decode-loop overhead: host loop vs per-block fused vs "
+          "whole-request ==")
     print_table(rows, ["model", "batch", "strategy", "steps",
                        "host_steps_per_sec", "fused_steps_per_sec",
-                       "speedup"])
+                       "request_steps_per_sec", "speedup",
+                       "request_speedup"])
     batch1 = next(r for r in rows
                   if r["model"] == "loop-bound" and r["batch"] == 1)
     payload = {
@@ -103,12 +118,14 @@ def run(strategy: str = "probability", batches=None) -> List[Dict]:
         "backend": jax.default_backend(),
         "gen_length": GEN, "block_size": BLOCK,
         "batch1_speedup": batch1["speedup"],
+        "batch1_request_speedup": batch1["request_speedup"],
         "rows": rows,
     }
     with open(OUT_PATH, "w") as f:
         json.dump(payload, f, indent=2)
-    print(f"[wrote {OUT_PATH}; loop-bound batch-1 fused/host = "
-          f"{payload['batch1_speedup']}x]")
+    print(f"[wrote {OUT_PATH}; loop-bound batch-1: per-block fused/host = "
+          f"{payload['batch1_speedup']}x, whole-request/host = "
+          f"{payload['batch1_request_speedup']}x]")
     return rows
 
 

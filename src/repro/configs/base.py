@@ -227,6 +227,14 @@ class DecodeConfig:
                                        # driver (core/loop.py); False = the
                                        # legacy host step loop (debugging /
                                        # A/B: benchmarks/loop_overhead.py)
+    fused_blocks: bool = True          # fuse the OUTER block loop too: one
+                                       # lax.scan over blocks = one compiled
+                                       # dispatch per request (plain path
+                                       # only; the cached path keeps its
+                                       # per-block host driver — see
+                                       # DESIGN.md).  False = per-block
+                                       # dispatches, for debugging.  Only
+                                       # meaningful with fused_loop=True.
     use_pallas_kernel: Optional[bool] = None
                                        # route score_logits through the fused
                                        # Pallas confidence kernel; None =

@@ -20,7 +20,7 @@ from repro.core.decoder import (CacheInfo, Decoder, SampleStats,
 from repro.core.fdm import FDMStrategy, fdm_select, fdm_step
 from repro.core.fdm_a import (FDMAStrategy, fdm_a_plan, fdm_a_step,
                               fdm_a_step_fused)
-from repro.core.loop import block_runner, drive_block
+from repro.core.loop import block_runner, drive_block, drive_request
 from repro.core.loss import masked_cross_entropy, token_accuracy
 from repro.core.masking import (apply_mask, fully_masked, mask_positions,
                                 sample_mask_ratio)
@@ -38,7 +38,7 @@ __all__ = [
     "Decoder", "CacheInfo", "decode_cache_info", "clear_decode_cache",
     "FDMStrategy", "fdm_step", "fdm_select",
     "FDMAStrategy", "fdm_a_step", "fdm_a_step_fused", "fdm_a_plan",
-    "block_runner", "drive_block",
+    "block_runner", "drive_block", "drive_request",
     "masked_cross_entropy", "token_accuracy",
     "apply_mask", "fully_masked", "mask_positions", "sample_mask_ratio",
     "SampleStats", "generate", "generate_cached", "make_model_fn",

@@ -51,9 +51,10 @@ from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import DecodeConfig, ModelConfig
-from repro.core.loop import drive_block
+from repro.core.loop import drive_block, drive_request
 from repro.core.masking import fully_masked
 from repro.core.strategies import Strategy, resolve_strategy
 
@@ -64,7 +65,11 @@ class SampleStats:
     forward_equivalents: int = 0   # batched-forward count (K-search = K)
     wall_time: float = 0.0
     tokens_generated: int = 0
-    phase_counts: Dict[str, int] = field(default_factory=dict)
+    phase_counts: Dict[str, float] = field(default_factory=dict)
+    # per-phase step counts (FDM-A: explore/accel/local_only/balance),
+    # accumulated on device in the strategy carry; ints from Decoder
+    # (one flag per batch row per step), per-example averages — possibly
+    # fractional, still summing to `steps` — from ServingEngine
 
     @property
     def tps(self) -> float:
@@ -87,37 +92,42 @@ class RunnerCache:
     """Weak, identity-keyed cache of compiled decode runners.
 
     Key = the identity of the model weights (every params leaf) or of the
-    model_fn callable; a ``weakref.finalize`` on the anchor object evicts
-    the whole entry when the caller drops it.  Values never reference the
-    keying object strongly (params are runner *arguments*; model_fns are
-    weakref'd), so eviction genuinely fires — unlike an ``lru_cache``,
-    nothing here can pin model weights.
+    model_fn callable; ``weakref.finalize`` anchors on **every** keying
+    object evict the whole entry as soon as *any* of them is collected
+    (first finalizer wins).  Anchoring only the first leaf would be a
+    correctness bug, not just a leak: the key is a tuple of ``id()``s,
+    which are only unique while the objects are alive — if a non-first
+    leaf dies (e.g. a partial weight swap) while leaf 0 survives, a
+    recycled id could silently collide into a false cache hit.  Values
+    never reference the keying objects strongly (params are runner
+    *arguments*; model_fns are weakref'd), so eviction genuinely fires —
+    unlike an ``lru_cache``, nothing here can pin model weights.
     """
 
     def __init__(self):
-        self._entries: Dict[tuple, Dict[tuple, Callable]] = {}
-        self._finalizers: Dict[tuple, weakref.finalize] = {}
+        self._entries: Dict[tuple, Dict[tuple, Any]] = {}
+        self._finalizers: Dict[tuple, list] = {}
         self.hits = 0
         self.misses = 0
         self.traces = 0
 
     @staticmethod
-    def key_for(model) -> Tuple[tuple, Any]:
-        """(cache key, weakref anchor) for a params pytree or callable."""
+    def key_for(model) -> Tuple[tuple, tuple]:
+        """(cache key, weakref anchors) for a params pytree or callable."""
         if callable(model):
-            return ("fn", id(model)), model
+            return ("fn", id(model)), (model,)
         leaves = jax.tree.leaves(model)
         if not leaves:
             raise ValueError("params pytree has no array leaves")
-        return ("params", tuple(map(id, leaves))), leaves[0]
+        return ("params", tuple(map(id, leaves))), tuple(leaves)
 
-    def get(self, key: tuple, anchor, subkey: tuple,
-            builder: Callable[[], Callable]) -> Callable:
+    def get(self, key: tuple, anchors: tuple, subkey: tuple,
+            builder: Callable[[], Any]) -> Any:
         entry = self._entries.get(key)
         if entry is None:
             entry = self._entries[key] = {}
-            self._finalizers[key] = weakref.finalize(
-                anchor, self._evict, key)
+            self._finalizers[key] = [
+                weakref.finalize(a, self._evict, key) for a in anchors]
         runner = entry.get(subkey)
         if runner is None:
             self.misses += 1
@@ -128,7 +138,10 @@ class RunnerCache:
 
     def _evict(self, key: tuple) -> None:
         self._entries.pop(key, None)
-        self._finalizers.pop(key, None)
+        # detach the surviving finalizers: a stale one firing later could
+        # evict a NEW entry that reused the (recycled-id) key tuple
+        for fin in self._finalizers.pop(key, ()):
+            fin.detach()
 
     def note_trace(self) -> None:
         """Called from inside runner bodies: the side effect executes only
@@ -142,14 +155,20 @@ class RunnerCache:
                          traces=self.traces)
 
     def clear(self) -> None:
-        for fin in list(self._finalizers.values()):
-            fin.detach()
+        for fins in list(self._finalizers.values()):
+            for fin in fins:
+                fin.detach()
         self._entries.clear()
         self._finalizers.clear()
         self.hits = self.misses = self.traces = 0
 
 
 _GLOBAL_CACHE = RunnerCache()
+
+# conditioning inputs forward() accepts; generate(**extras) validates
+# against this so a typo'd keyword fails at the call site instead of
+# surfacing as an opaque trace error (or a bogus model input)
+_CONDITIONING_KEYS = frozenset({"enc_embeds", "patch_embeds"})
 
 
 def decode_cache_info() -> CacheInfo:
@@ -217,25 +236,59 @@ class Decoder:
         self._key, self._anchor = RunnerCache.key_for(model)
 
     # -- geometry ----------------------------------------------------------
-    def _geometry(self) -> Tuple[int, int, int, int]:
+    def _geometry(self) -> Tuple[int, int, int, np.ndarray]:
+        """Block layout + the per-block commit-width schedules.
+
+        Returns ``(gen, block_size, num_blocks, schedules)`` where
+        ``schedules`` is ``(num_blocks, S)`` int32: row ``b``, entry ``i``
+        is the nominal commit width handed to the strategy at step ``i``
+        of block ``b`` (the index clamps to the row end in the drivers).
+
+        ``dcfg.steps`` is distributed EXACTLY whenever it is feasible
+        (``num_blocks ≤ steps ≤ gen_length``): the per-block step budgets
+        spread ``steps`` across blocks with the remainder going to the
+        leading blocks, and each block's widths spread ``block_size``
+        tokens across its budget likewise (the seed floored both
+        divisions, so ``steps=10, num_blocks=4`` quietly ran 8 steps).
+        When both divisions are exact this degenerates to the seed's
+        constant ``n_per_step`` — bit-identical decodes.  A budget below
+        ``num_blocks`` is infeasible (each block takes ≥ 1 step) and
+        raises; a budget above ``gen_length`` is a CAP, not a target —
+        each step commits ≥ 1 token, so a block's zero-width schedule
+        tail is unreachable and the decode runs ``gen_length`` steps.
+        Rows padded with trailing zeros are never reached by
+        width-respecting strategies (their widths sum to ``block_size``);
+        width-ignoring strategies never read ``n`` at all.
+        """
         dcfg = self.dcfg
         gen, bs = dcfg.gen_length, dcfg.block_size
         assert gen % bs == 0, (gen, bs)
         num_blocks = gen // bs
-        steps_per_block = max(dcfg.steps // num_blocks, 1)
-        n_per_step = max(bs // steps_per_block, 1)   # heuristic commit width
-        return gen, bs, num_blocks, n_per_step
+        if dcfg.steps < num_blocks:
+            raise ValueError(
+                f"DecodeConfig.steps={dcfg.steps} is infeasible: semi-AR "
+                f"decoding runs at least one step per block and "
+                f"gen_length={gen} / block_size={bs} gives {num_blocks} "
+                f"blocks — raise steps or shrink the block count")
+        base, rem = divmod(dcfg.steps, num_blocks)
+        budgets = [base + (1 if b < rem else 0) for b in range(num_blocks)]
+        sched = np.zeros((num_blocks, max(budgets)), np.int32)
+        for b, spb in enumerate(budgets):
+            w, wr = divmod(bs, spb)
+            sched[b, :spb] = [w + 1] * wr + [w] * (spb - wr)
+        return gen, bs, num_blocks, sched
 
     # -- runner construction (all cached cross-call) -----------------------
-    def _plain_runner(self, strat: Strategy, n_per_step: int,
+    def _plain_runner(self, strat: Strategy,
                       extras: Optional[Dict[str, Any]] = None) -> Callable:
-        """Fused block runner with uniform signature
-        ``run(x, rng, lo, steps, fwd, carry) -> 5-tuple``; ``lo`` is a
-        traced int32 so all blocks (and all later decodes with the same
-        weights) share one executable per shape."""
+        """Per-block fused runner with uniform signature
+        ``run(x, rng, lo, sched, steps, fwd, carry) -> 5-tuple``; ``lo``
+        (block start) and ``sched`` (per-step commit widths) are traced,
+        so all blocks (and all later decodes with the same weights) share
+        one executable per shape."""
         cfg, dcfg, cache = self.cfg, self.dcfg, self._cache
         bs = dcfg.block_size
-        subkey = ("block", strat, cfg, dcfg, n_per_step)
+        subkey = ("block", strat, cfg, dcfg)
         if self._model_fn is not None:
             if extras:
                 raise ValueError("extras require a params-mode Decoder "
@@ -245,14 +298,14 @@ class Decoder:
 
             def build():
                 @jax.jit
-                def run(x, rng, lo, steps, fwd, carry):
+                def run(x, rng, lo, sched, steps, fwd, carry):
                     cache.note_trace()
                     mf = mf_ref()       # trace-time only; caller holds it
                     if mf is None:
                         raise RuntimeError("model_fn was garbage-collected")
                     pos = jnp.arange(x.shape[1])
                     in_block = (pos >= lo) & (pos < lo + bs)
-                    return drive_block(strat, mf, cfg, dcfg, n_per_step,
+                    return drive_block(strat, mf, cfg, dcfg, sched,
                                        x, rng, in_block, steps, fwd, carry)
                 return run
 
@@ -260,19 +313,91 @@ class Decoder:
 
         def build():
             @jax.jit
-            def run(params, ex, x, rng, lo, steps, fwd, carry):
+            def run(params, ex, x, rng, lo, sched, steps, fwd, carry):
                 cache.note_trace()
                 pos = jnp.arange(x.shape[1])
                 in_block = (pos >= lo) & (pos < lo + bs)
                 mf = _tiling_forward(params, cfg, ex)
-                return drive_block(strat, mf, cfg, dcfg, n_per_step,
+                return drive_block(strat, mf, cfg, dcfg, sched,
                                    x, rng, in_block, steps, fwd, carry)
             return run
 
         raw = self._cache.get(self._key, self._anchor, subkey, build)
         params, ex = self._params, dict(extras or {})
-        return lambda x, rng, lo, steps, fwd, carry: \
-            raw(params, ex, x, rng, lo, steps, fwd, carry)
+        return lambda x, rng, lo, sched, steps, fwd, carry: \
+            raw(params, ex, x, rng, lo, sched, steps, fwd, carry)
+
+    def _request_runner(self, strat: Strategy, stream: bool,
+                        extras: Optional[Dict[str, Any]] = None
+                        ) -> Tuple[Callable, Optional[dict]]:
+        """Whole-request fused runner: ONE compiled dispatch drives every
+        block (``core/loop.py:drive_request``).  Signature
+        ``run(x, rng, block_los, schedules, steps, fwd, carry)`` with the
+        block offsets and commit schedules traced, so one executable per
+        strategy × shape serves every prompt length / step budget of that
+        shape.
+
+        Streaming: compiled programs outlive any single ``generate`` call,
+        so the per-call ``on_block_committed`` cannot be baked in.  The
+        streaming variant (``stream=True``, its own cache subkey) routes
+        an ordered ``io_callback`` through a mutable holder dict owned by
+        the cached runner; ``generate`` installs the live callback before
+        dispatch and clears it after the canvas syncs.  Returns
+        ``(run, holder)`` — ``holder`` is ``None`` for the plain variant.
+        """
+        cfg, dcfg, cache = self.cfg, self.dcfg, self._cache
+        subkey = ("request", strat, cfg, dcfg, bool(stream))
+
+        def make_emit(holder):
+            def emit(blk, lo, hi, canvas):
+                cb = holder.get("cb")
+                if cb is not None:
+                    cb(int(blk), int(lo), int(hi), canvas)
+            return emit
+
+        if self._model_fn is not None:
+            if extras:
+                raise ValueError("extras require a params-mode Decoder "
+                                 "(a model_fn already owns its "
+                                 "conditioning)")
+            mf_ref = weakref.ref(self._model_fn)
+
+            def build():
+                holder = {"cb": None} if stream else None
+                emit = make_emit(holder) if stream else None
+
+                @jax.jit
+                def run(x, rng, los, scheds, steps, fwd, carry):
+                    cache.note_trace()
+                    mf = mf_ref()
+                    if mf is None:
+                        raise RuntimeError("model_fn was garbage-collected")
+                    return drive_request(strat, mf, cfg, dcfg, x, rng,
+                                         los, scheds, steps, fwd, carry,
+                                         emit=emit)
+                return run, holder
+
+            return cache.get(self._key, self._anchor, subkey, build)
+
+        def build():
+            holder = {"cb": None} if stream else None
+            emit = make_emit(holder) if stream else None
+
+            @jax.jit
+            def run(params, ex, x, rng, los, scheds, steps, fwd, carry):
+                cache.note_trace()
+                mf = _tiling_forward(params, cfg, ex)
+                return drive_request(strat, mf, cfg, dcfg, x, rng,
+                                     los, scheds, steps, fwd, carry,
+                                     emit=emit)
+            return run, holder
+
+        raw, holder = self._cache.get(self._key, self._anchor, subkey,
+                                      build)
+        params, ex = self._params, dict(extras or {})
+        return (lambda x, rng, los, scheds, steps, fwd, carry:
+                raw(params, ex, x, rng, los, scheds, steps, fwd, carry),
+                holder)
 
     def _host_model_fn(self, extras: Optional[Dict[str, Any]]) -> Callable:
         """tokens -> logits for the legacy host step loop."""
@@ -314,20 +439,21 @@ class Decoder:
         return lambda tokens, positions, state: \
             raw(params, tokens, positions, state)
 
-    def _cached_runner(self, strat: Strategy, n_per_step: int) -> Callable:
+    def _cached_runner(self, strat: Strategy) -> Callable:
         """Fused block runner for the cached path.  One callable serves
         every block: the per-block window arrays (positions, in-block
-        mask, fwd scale) are traced arguments, so the jit cache under it
-        holds one compilation per window shape — reused across calls
-        (the seed re-jitted this per ``generate_cached`` call)."""
+        mask, commit schedule, fwd scale) are traced arguments, so the jit
+        cache under it holds one compilation per window shape — reused
+        across calls (the seed re-jitted this per ``generate_cached``
+        call)."""
         cfg, dcfg, cache = self.cfg, self.dcfg, self._cache
-        subkey = ("cached_block", strat, cfg, dcfg, n_per_step)
+        subkey = ("cached_block", strat, cfg, dcfg)
 
         def build():
             from repro.models.model import forward_window
 
             @jax.jit
-            def run(params, x_win, key, st, steps, fwd, carry,
+            def run(params, x_win, key, st, sched, steps, fwd, carry,
                     win_pos, in_block, fwd_scale):
                 cache.note_trace()
                 b = x_win.shape[0]
@@ -338,16 +464,17 @@ class Decoder:
                     return forward_window(params, w, p, _tile_state(st, reps),
                                           cfg=cfg)[0]
 
-                return drive_block(strat, mfn, cfg, dcfg, n_per_step,
+                return drive_block(strat, mfn, cfg, dcfg, sched,
                                    x_win, key, in_block, steps, fwd, carry,
                                    fwd_scale=fwd_scale)
             return run
 
         raw = cache.get(self._key, self._anchor, subkey, build)
         params = self._params
-        return lambda x_win, key, st, steps, fwd, carry, win_pos, in_block, \
-            fwd_scale: raw(params, x_win, key, st, steps, fwd, carry,
-                           win_pos, in_block, fwd_scale)
+        return lambda x_win, key, st, sched, steps, fwd, carry, win_pos, \
+            in_block, fwd_scale: raw(params, x_win, key, st, sched, steps,
+                                     fwd, carry, win_pos, in_block,
+                                     fwd_scale)
 
     # -- decoding ----------------------------------------------------------
     def generate(self, rng, prompt: jnp.ndarray,
@@ -362,24 +489,76 @@ class Decoder:
         arrays forwarded to the model (enc_embeds / patch_embeds).
         ``on_block_committed(block_index, lo, hi, x)`` fires after each
         committed block.
+
+        Three drivers, bit-identical tokens/steps/forwards (parity-tested
+        for every registered strategy):
+
+        * ``fused_loop ∧ fused_blocks`` (default) — the whole request is
+          ONE compiled dispatch (``drive_request``); streaming callbacks
+          fire via ordered ``io_callback``.
+        * ``fused_loop ∧ ¬fused_blocks`` — one dispatch per block
+          (``drive_block``), callbacks from host between blocks.
+        * ``¬fused_loop`` — the legacy host step loop, for debugging.
         """
+        unknown = set(extras) - _CONDITIONING_KEYS
+        if unknown:
+            raise TypeError(
+                f"generate() got unexpected keyword argument(s) "
+                f"{sorted(unknown)}; conditioning extras must be one of "
+                f"{sorted(_CONDITIONING_KEYS)}")
         cfg, dcfg = self.cfg, self.dcfg
         strat = resolve_strategy(strategy or dcfg.strategy)
         b, lp = prompt.shape
-        gen, bs, num_blocks, n_per_step = self._geometry()
+        gen, bs, num_blocks, sched = self._geometry()
         x = fully_masked(cfg, prompt, gen)
         carry = strat.init_carry(cfg, dcfg)
         stats = SampleStats(tokens_generated=b * gen)
         t0 = time.perf_counter()
 
-        if dcfg.fused_loop and strat.supports_fused:
-            run = self._plain_runner(strat, n_per_step, extras)
+        fused = dcfg.fused_loop and strat.supports_fused
+        if fused and dcfg.fused_blocks:
+            stream = on_block_committed is not None
+            run, holder = self._request_runner(strat, stream, extras)
+            if holder is not None:
+                # the holder is shared through the runner cache by every
+                # Decoder on the same weights: refuse to clobber a live
+                # callback (concurrent/re-entrant streaming decode) —
+                # silent event misdelivery would be far worse
+                if holder["cb"] is not None:
+                    raise RuntimeError(
+                        "concurrent streaming decodes with the same "
+                        "weights and DecodeConfig are not supported: "
+                        "another generate(on_block_committed=...) is "
+                        "still in flight for this compiled runner")
+                holder["cb"] = on_block_committed
+            try:
+                los = lp + bs * jnp.arange(num_blocks, dtype=jnp.int32)
+                x, rng, steps, fwd, carry = run(
+                    x, rng, los, jnp.asarray(sched),
+                    jnp.zeros((), jnp.int32), jnp.zeros((), jnp.float32),
+                    carry)
+                # one sync for the whole decode
+                x.block_until_ready()
+            finally:
+                if holder is not None:
+                    # output readiness does NOT imply host-callback
+                    # completion on async backends: drain the ordered
+                    # io_callbacks before releasing the holder, or the
+                    # tail events would be dropped (or delivered to the
+                    # next streaming decode's callback)
+                    jax.effects_barrier()
+                    holder["cb"] = None
+            stats.steps = int(jax.device_get(steps))
+            stats.forward_equivalents = float(jax.device_get(fwd))
+        elif fused:
+            run = self._plain_runner(strat, extras)
             steps = jnp.zeros((), jnp.int32)
             fwd = jnp.zeros((), jnp.float32)
             for blk in range(num_blocks):
                 lo = lp + blk * bs
-                x, rng, steps, fwd, carry = run(x, rng, jnp.int32(lo),
-                                                steps, fwd, carry)
+                x, rng, steps, fwd, carry = run(
+                    x, rng, jnp.int32(lo), jnp.asarray(sched[blk]),
+                    steps, fwd, carry)
                 if on_block_committed is not None:
                     on_block_committed(blk, lo, lo + bs, x)
             # one sync for the whole decode: canvas + both stats counters
@@ -388,24 +567,29 @@ class Decoder:
             stats.forward_equivalents = float(jax.device_get(fwd))
         else:
             mf = self._host_model_fn(extras)
+            last = sched.shape[1] - 1
             for blk in range(num_blocks):
                 lo, hi = lp + blk * bs, lp + (blk + 1) * bs
                 in_block = (jnp.arange(x.shape[1]) >= lo) & \
                     (jnp.arange(x.shape[1]) < hi)
                 # guard: a strategy always commits ≥1 token/example/step,
                 # so a block can never need more than bs·4 steps
-                for _ in range(bs * 4):
+                for i in range(bs * 4):
                     active = in_block[None, :] & (x == cfg.mask_token_id)
                     if not bool(jax.device_get(jnp.any(active))):
                         break
                     rng, step_rng = jax.random.split(rng)
+                    n = int(sched[blk, min(i, last)])
                     x, carry, fwd_n = strat.step(step_rng, carry, x, active,
-                                                 mf, cfg, dcfg, n_per_step)
+                                                 mf, cfg, dcfg, n)
                     stats.steps += 1
                     stats.forward_equivalents += fwd_n
                 if on_block_committed is not None:
                     on_block_committed(blk, lo, hi, x)
             x.block_until_ready()
+        pc = strat.phase_counts(carry)
+        if pc:
+            stats.phase_counts = pc
         stats.wall_time = time.perf_counter() - t0
         return x, stats
 
@@ -425,6 +609,11 @@ class Decoder:
         cost drops from O(L²) toward O((L−prefix)·L) as blocks commit.
 
         Requires a params-mode Decoder (window forwards need raw weights).
+
+        This path always drives blocks from host (``dcfg.fused_blocks``
+        does not apply): the live window shrinks block by block, so the
+        window shapes are block-varying and cannot ride a fixed-shape
+        ``lax.scan`` carry — see DESIGN.md "one dispatch per request".
         """
         if self._params is None:
             raise ValueError("generate_cached requires a Decoder built "
@@ -436,7 +625,7 @@ class Decoder:
         cfg, dcfg = self.cfg, self.dcfg
         strat = resolve_strategy(strategy or dcfg.strategy)
         b, lp = prompt.shape
-        gen, bs, num_blocks, n_per_step = self._geometry()
+        gen, bs, num_blocks, sched = self._geometry()
         total = lp + gen
         dtype = state_dtype or jnp.float32
 
@@ -468,7 +657,8 @@ class Decoder:
         steps_c = jnp.zeros((), jnp.int32)
         fwd_c = jnp.zeros((), jnp.float32)
         fused = dcfg.fused_loop and strat.supports_fused
-        run_blk = self._cached_runner(strat, n_per_step) if fused else None
+        run_blk = self._cached_runner(strat) if fused else None
+        last = sched.shape[1] - 1
         for blk in range(num_blocks):
             lo, hi = lp + blk * bs, lp + (blk + 1) * bs
             # live window = active block + still-masked future blocks
@@ -480,8 +670,9 @@ class Decoder:
 
             if fused:
                 new_win, rng, steps_c, fwd_c, carry = run_blk(
-                    x[:, lo:], rng, state, steps_c, fwd_c, carry,
-                    win_pos, in_block, jnp.float32(scale))
+                    x[:, lo:], rng, state, jnp.asarray(sched[blk]),
+                    steps_c, fwd_c, carry, win_pos, in_block,
+                    jnp.float32(scale))
                 x = jax.lax.dynamic_update_slice_in_dim(x, new_win, lo,
                                                         axis=1)
             else:
@@ -490,7 +681,7 @@ class Decoder:
                     pos = jnp.tile(_pos, (reps, 1)) if reps > 1 else _pos
                     return win_fwd(w, pos, _tile_state(_state, reps))[0]
 
-                for _ in range(bs * 4):
+                for i in range(bs * 4):
                     x_win = x[:, lo:]
                     active = in_block[None, :] & \
                         (x_win == cfg.mask_token_id)
@@ -499,7 +690,7 @@ class Decoder:
                     rng, step_rng = jax.random.split(rng)
                     new_win, carry, fwd_n = strat.step(
                         step_rng, carry, x_win, active, model_fn, cfg,
-                        dcfg, n_per_step)
+                        dcfg, int(sched[blk, min(i, last)]))
                     x = jax.lax.dynamic_update_slice_in_dim(x, new_win, lo,
                                                             axis=1)
                     stats.steps += 1
@@ -517,6 +708,9 @@ class Decoder:
         if fused:
             stats.steps = int(jax.device_get(steps_c))
             stats.forward_equivalents += float(jax.device_get(fwd_c))
+        pc = strat.phase_counts(carry)
+        if pc:
+            stats.phase_counts = pc
         stats.wall_time = time.perf_counter() - t0
         return x, stats
 

@@ -19,16 +19,22 @@ search result and the local-only result.  The search forward is skipped
 entirely when every example is in the acceleration phase — this is where
 the paper's >3× TPS comes from.  Two implementations of that skip:
 
-  * ``fdm_a_step`` — host early-out (``bool(device_get(...))``), one scalar
-    sync per step; used by the legacy host step loop.
-  * ``fdm_a_step_fused`` — a ``lax.cond`` over the batched phase plan; fully
-    traceable, so the device-resident block driver (``core/loop.py``) can
-    run it inside ``lax.while_loop`` with zero host syncs while XLA still
-    executes only the taken branch at runtime.
+  * ``FDMAStrategy.step`` — host early-out (``bool(device_get(...))``), one
+    scalar sync per step; used by the legacy host step loop.
+  * ``FDMAStrategy.fused_step`` — a ``lax.cond`` over the batched phase
+    plan; fully traceable, so the device-resident drivers
+    (``core/loop.py``) can run it inside ``lax.while_loop`` with zero host
+    syncs while XLA still executes only the taken branch at runtime.
+
+Both variants accumulate the per-step phase histogram into the strategy
+carry (a ``(4,)`` int32; see ``FDMAStrategy``), which is how
+``SampleStats.phase_counts`` gets populated without extra device syncs.
+``fdm_a_step`` / ``fdm_a_step_fused`` survive as carry-less wrappers for
+the legacy step-function signature.
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -36,7 +42,7 @@ import jax.numpy as jnp
 from repro.configs.base import DecodeConfig, ModelConfig
 from repro.core.confidence import pallas_enabled, score_logits
 from repro.core.fdm import fdm_select
-from repro.core.strategies import (ModelFn, StatelessStrategy, commit_topn,
+from repro.core.strategies import (ModelFn, Strategy, commit_topn,
                                    register_strategy)
 
 
@@ -59,62 +65,104 @@ def fdm_a_plan(logits: jnp.ndarray, active: jnp.ndarray,
     return s, n, gamma, need_search, (explore, accel, local_only, balance)
 
 
+PHASES = ("explore", "accel", "local_only", "balance")
+
+
+def _phase_flags(phases) -> jnp.ndarray:
+    """(4,) int32 per-step phase histogram: how many batch examples landed
+    in each of Algorithm 2's phases this step (each example is in exactly
+    one, so the flags sum to B)."""
+    return jnp.stack([jnp.sum(p, dtype=jnp.int32) for p in phases])
+
+
 def fdm_a_step(rng, x, active, model_fn: ModelFn, cfg: ModelConfig,
                dcfg: DecodeConfig, n_unused) -> Tuple[jnp.ndarray, int]:
-    logits = model_fn(x)
-    s, n, gamma, need_search, _ = fdm_a_plan(logits, active, dcfg)
-
-    # acceleration/local phases: plain local top-n commit (Eq. 18 / K=1)
-    x_local = commit_topn(x, s.max_prob, s.argmax, active, n)
-
-    # host early-out: skip the K-forward entirely if no example searches
-    if not bool(jax.device_get(jnp.any(need_search))):
-        return x_local, 1
-
-    x_search, extra = fdm_select(x, logits, active, model_fn, cfg,
-                                 k=dcfg.k1, gamma=gamma, n=n,
-                                 use_kernel=pallas_enabled(dcfg))
-    new_x = jnp.where(need_search[:, None], x_search, x_local)
-    return new_x, 1 + extra
+    """Legacy carry-less entry point (host early-out variant)."""
+    new_x, _, fwd = FDM_A.step(rng, jnp.zeros((4,), jnp.int32), x, active,
+                               model_fn, cfg, dcfg, n_unused)
+    return new_x, fwd
 
 
 def fdm_a_step_fused(rng, x, active, model_fn: ModelFn, cfg: ModelConfig,
                      dcfg: DecodeConfig, n_unused
                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Traceable FDM-A step: the acceleration-phase skip is a ``lax.cond``
-    on the batched phase plan instead of a host sync, so the whole step
-    lives inside the device-resident block loop.  Returns the forward
-    count as a traced f32 scalar (1 when the search branch is skipped,
-    1 + K₁ when it runs) for the carry's stats counters.
-    """
-    logits = model_fn(x)
-    s, n, gamma, need_search, _ = fdm_a_plan(logits, active, dcfg)
-    x_local = commit_topn(x, s.max_prob, s.argmax, active, n)
-
-    def with_search(_):
-        x_search, extra = fdm_select(x, logits, active, model_fn, cfg,
-                                     k=dcfg.k1, gamma=gamma, n=n,
-                                     use_kernel=pallas_enabled(dcfg))
-        new_x = jnp.where(need_search[:, None], x_search, x_local)
-        return new_x, jnp.float32(1 + extra)
-
-    def local_only(_):
-        return x_local, jnp.float32(1)
-
-    return jax.lax.cond(jnp.any(need_search), with_search, local_only,
-                        operand=None)
+    """Legacy carry-less entry point (trace-safe ``lax.cond`` variant)."""
+    new_x, _, fwd = FDM_A.fused_step(rng, jnp.zeros((4,), jnp.int32), x,
+                                     active, model_fn, cfg, dcfg, n_unused)
+    return new_x, fwd
 
 
-class FDMAStrategy(StatelessStrategy):
+class FDMAStrategy(Strategy):
     """Algorithm 2 as a registered ``Strategy``: the strategy itself
     declares its fused form (the ``lax.cond`` early-out) instead of the
-    loop driver special-casing ``fdm_a_step_fused`` by name."""
+    loop driver special-casing it by name.
 
-    def __init__(self):
-        super().__init__("fdm_a", fdm_a_step, fused_fn=fdm_a_step_fused)
+    The carry is a ``(4,)`` int32 per-phase step counter — each step adds
+    the batch's phase histogram, so it rides the fused block/request
+    carries to the end of decode and ``Decoder`` reads it back into
+    ``SampleStats.phase_counts`` with zero extra syncs.  With batch 1 the
+    counts sum to ``stats.steps`` exactly.
+    """
+
+    name = "fdm_a"
+    carry_is_observational = True    # the counter never steers decoding
+
+    def init_carry(self, cfg: ModelConfig, dcfg: DecodeConfig):
+        return jnp.zeros((4,), jnp.int32)
 
     def forwards_per_step(self, dcfg: DecodeConfig) -> float:
         return 1.0 + dcfg.k1       # upper bound; the accel phase uses 1
 
+    def phase_counts(self, carry) -> Dict[str, int]:
+        vals = jax.device_get(carry)
+        return {k: int(v) for k, v in zip(PHASES, vals)}
 
-register_strategy(FDMAStrategy())
+    def step(self, rng, carry, x, active, model_fn: ModelFn,
+             cfg: ModelConfig, dcfg: DecodeConfig, n) -> Tuple:
+        logits = model_fn(x)
+        s, nn, gamma, need_search, phases = fdm_a_plan(logits, active, dcfg)
+        carry = carry + _phase_flags(phases)
+
+        # acceleration/local phases: plain local top-n commit (Eq. 18/K=1)
+        x_local = commit_topn(x, s.max_prob, s.argmax, active, nn)
+
+        # host early-out: skip the K-forward entirely if nobody searches
+        if not bool(jax.device_get(jnp.any(need_search))):
+            return x_local, carry, 1
+
+        x_search, extra = fdm_select(x, logits, active, model_fn, cfg,
+                                     k=dcfg.k1, gamma=gamma, n=nn,
+                                     use_kernel=pallas_enabled(dcfg))
+        new_x = jnp.where(need_search[:, None], x_search, x_local)
+        return new_x, carry, 1 + extra
+
+    def fused_step(self, rng, carry, x, active, model_fn: ModelFn,
+                   cfg: ModelConfig, dcfg: DecodeConfig, n) -> Tuple:
+        """Traceable FDM-A step: the acceleration-phase skip is a
+        ``lax.cond`` on the batched phase plan instead of a host sync, so
+        the whole step lives inside the device-resident loops.  Returns
+        the forward count as a traced f32 scalar (1 when the search branch
+        is skipped, 1 + K₁ when it runs) for the carry's stats counters.
+        """
+        logits = model_fn(x)
+        s, nn, gamma, need_search, phases = fdm_a_plan(logits, active, dcfg)
+        carry = carry + _phase_flags(phases)
+        x_local = commit_topn(x, s.max_prob, s.argmax, active, nn)
+
+        def with_search(_):
+            x_search, extra = fdm_select(x, logits, active, model_fn, cfg,
+                                         k=dcfg.k1, gamma=gamma, n=nn,
+                                         use_kernel=pallas_enabled(dcfg))
+            new_x = jnp.where(need_search[:, None], x_search, x_local)
+            return new_x, jnp.float32(1 + extra)
+
+        def local_only(_):
+            return x_local, jnp.float32(1)
+
+        new_x, fwd = jax.lax.cond(jnp.any(need_search), with_search,
+                                  local_only, operand=None)
+        return new_x, carry, fwd
+
+
+FDM_A = FDMAStrategy()
+register_strategy(FDM_A)

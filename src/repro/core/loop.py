@@ -27,6 +27,16 @@ ZERO host round-trips; the host touches the device once per block to hand
 over the carry, and the stats counters come back in a single
 ``device_get`` at the end of decode.
 
+``drive_request`` goes one level further: the OUTER block loop becomes a
+``lax.scan`` over block indices, so a plain-path decode is ONE compiled
+dispatch per request — the block start offsets and per-step commit-width
+schedules are scanned arrays, the strategy carry rides the scan carry
+across blocks, and per-block streaming survives as an *ordered*
+``jax.experimental.io_callback`` (see DESIGN.md "one dispatch per
+request").  ``DecodeConfig.fused_blocks=False`` keeps the per-block host
+driver for debugging; the cached path always uses it (its window shapes
+are block-varying).
+
 Runner construction and cross-call caching live in ``core/decoder.py``:
 the ``Decoder`` owns a params-keyed, weak-referenced runner cache so
 repeat decodes — the serving engine, benchmark warmup+measure pairs —
@@ -41,17 +51,18 @@ slowly; ``benchmarks/loop_overhead.py`` A/Bs the two drivers.
 """
 from __future__ import annotations
 
-from typing import Callable
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
+from jax.experimental import io_callback
 
 from repro.configs.base import DecodeConfig, ModelConfig
 from repro.core.strategies import Strategy, as_strategy
 
 
 def drive_block(strategy, model_fn: Callable, cfg: ModelConfig,
-                dcfg: DecodeConfig, n_per_step: int, x: jnp.ndarray,
+                dcfg: DecodeConfig, n_per_step, x: jnp.ndarray,
                 rng, in_block: jnp.ndarray, steps, fwd, carry=(),
                 fwd_scale=1.0):
     """Run one block's denoising steps as a single ``lax.while_loop``.
@@ -63,10 +74,18 @@ def drive_block(strategy, model_fn: Callable, cfg: ModelConfig,
     the strategy's own state, all returned advanced.  ``fwd_scale``
     pro-rates forward-equivalents for the cached path (window / full-seq
     cost ratio).  Returns ``(x, rng, steps, fwd, carry)``.
+
+    ``n_per_step`` is the commit-width hand the strategy is dealt each
+    step: either a scalar (constant width) or a ``(S,)`` int32 *schedule*
+    indexed by the step-within-block (``Decoder._geometry`` emits one that
+    spreads ``dcfg.steps`` exactly across blocks, remainders included).
+    The index clamps to the last entry, so overrunning the schedule —
+    strategies that ignore ``n`` commit at their own pace — stays safe.
     """
     strategy = as_strategy(strategy)
     mask_id = cfg.mask_token_id
     max_steps = dcfg.block_size * 4           # matches the host-loop guard
+    sched = jnp.asarray(n_per_step, jnp.int32)
     start = steps
 
     def active_of(canvas):
@@ -79,13 +98,58 @@ def drive_block(strategy, model_fn: Callable, cfg: ModelConfig,
     def body(c):
         canvas, key, s, f, sc = c
         key, step_key = jax.random.split(key)
+        n = sched if sched.ndim == 0 else \
+            sched[jnp.minimum(s - start, sched.shape[0] - 1)]
         new_canvas, new_sc, df = strategy.fused_step(
             step_key, sc, canvas, active_of(canvas), model_fn, cfg, dcfg,
-            n_per_step)
+            n)
         return (new_canvas, key, s + 1,
                 f + jnp.asarray(df, jnp.float32) * fwd_scale, new_sc)
 
     return jax.lax.while_loop(cond, body, (x, rng, steps, fwd, carry))
+
+
+def drive_request(strategy, model_fn: Callable, cfg: ModelConfig,
+                  dcfg: DecodeConfig, x: jnp.ndarray, rng,
+                  block_los: jnp.ndarray, schedules: jnp.ndarray,
+                  steps, fwd, carry=(),
+                  emit: Optional[Callable] = None):
+    """Run the WHOLE request — every semi-AR block — as one ``lax.scan``.
+
+    Traceable building block (call under jit).  ``block_los`` is the
+    ``(num_blocks,)`` int32 array of block start columns and ``schedules``
+    the ``(num_blocks, S)`` per-block commit-width schedules; both are
+    traced, so one executable serves every prompt length and step budget
+    of the same shape.  Each scan iteration computes ``in_block`` from the
+    scanned ``lo``, runs ``drive_block``'s ``while_loop``, and — when
+    ``emit`` is given — fires ``emit(block_index, lo, hi, canvas)`` as an
+    *ordered* ``io_callback``, so streaming observers see blocks in commit
+    order without breaking the single dispatch.  The strategy carry rides
+    the scan carry across blocks.  Returns ``(x, rng, steps, fwd, carry)``
+    exactly like ``drive_block``; the decode math is bit-identical to
+    driving the blocks from host (parity-tested for all strategies).
+    """
+    strategy = as_strategy(strategy)
+    bs = dcfg.block_size
+    pos = jnp.arange(x.shape[1])
+
+    def scan_body(c, xs):
+        blk, lo, sched = xs
+        canvas, key, s, f, sc = c
+        in_block = (pos >= lo) & (pos < lo + bs)
+        canvas, key, s, f, sc = drive_block(
+            strategy, model_fn, cfg, dcfg, sched, canvas, key, in_block,
+            s, f, sc)
+        if emit is not None:
+            io_callback(emit, None, blk, lo, lo + bs, canvas, ordered=True)
+        return (canvas, key, s, f, sc), None
+
+    num_blocks = block_los.shape[0]
+    xs = (jnp.arange(num_blocks, dtype=jnp.int32),
+          jnp.asarray(block_los, jnp.int32),
+          jnp.asarray(schedules, jnp.int32))
+    out, _ = jax.lax.scan(scan_body, (x, rng, steps, fwd, carry), xs)
+    return out
 
 
 def block_runner(model_fn: Callable, strategy: str, cfg: ModelConfig,
@@ -102,13 +166,15 @@ def block_runner(model_fn: Callable, strategy: str, cfg: ModelConfig,
     from repro.core.strategies import resolve_strategy
 
     strat = resolve_strategy(strategy)
-    run5 = Decoder(model_fn, cfg, dcfg)._plain_runner(strat, n_per_step)
+    run6 = Decoder(model_fn, cfg, dcfg)._plain_runner(strat)
     carry0 = strat.init_carry(cfg, dcfg)
+    # constant commit width: a length-1 schedule (the step index clamps)
+    sched = jnp.full((1,), n_per_step, jnp.int32)
 
     # the cache only weakrefs model_fn; the returned runner must pin it
     # (matching the seed contract — callers pass the jit expression inline)
     def run(x, rng, lo, steps, fwd, _model_fn=model_fn):
-        x, rng, steps, fwd, _ = run5(x, rng, lo, steps, fwd, carry0)
+        x, rng, steps, fwd, _ = run6(x, rng, lo, sched, steps, fwd, carry0)
         return x, rng, steps, fwd
 
     return run

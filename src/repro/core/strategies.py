@@ -88,6 +88,10 @@ class Strategy:
 
     name: str = ""
     supports_fused: bool = True      # fused_step is lax.while_loop-safe
+    carry_is_observational: bool = False
+    # True = the carry only *records* (stats counters like FDM-A's phase
+    # histogram) and never changes the decode; safe to drop/reset.  False
+    # (default) = the carry steers decoding and must be threaded intact.
 
     def forwards_per_step(self, dcfg: DecodeConfig) -> float:
         """Nominal batched-forward count per step (upper bound for
@@ -98,6 +102,13 @@ class Strategy:
     def init_carry(self, cfg: ModelConfig, dcfg: DecodeConfig):
         """Per-decode strategy state.  Fixed-shape pytree; ``()`` = none."""
         return ()
+
+    def phase_counts(self, carry) -> Dict[str, int]:
+        """Host-side: per-phase step counts extracted from the *final*
+        carry, for ``SampleStats.phase_counts``.  Strategies that count
+        phases on-device (FDM-A accumulates a ``(4,)`` int32 in its carry)
+        override this; the default reports none."""
+        return {}
 
     def step(self, rng, carry, x, active, model_fn: ModelFn,
              cfg: ModelConfig, dcfg: DecodeConfig, n) -> Tuple:
@@ -238,6 +249,7 @@ def resolve_strategy(name: str) -> Strategy:
 
 def available_strategies() -> Tuple[str, ...]:
     _ensure_builtins()
+    _load_entry_points()     # list what resolve_strategy would accept
     return tuple(sorted(_REGISTRY))
 
 
@@ -253,7 +265,17 @@ def get_strategy(name: str, fused: bool = False) -> Callable:
     bound = strat.fused_step if fused else strat.step
 
     def legacy_step(rng, x, active, model_fn, cfg, dcfg, n):
-        new_x, _, fwd = bound(rng, strat.init_carry(cfg, dcfg), x, active,
+        carry = strat.init_carry(cfg, dcfg)
+        if jax.tree.leaves(carry) and not strat.carry_is_observational:
+            # a fresh carry per step would silently freeze the strategy
+            # in its step-0 behavior — refuse (observational carries,
+            # e.g. FDM-A's phase counters, are safe to drop: the legacy
+            # signature has nowhere to report stats anyway)
+            raise TypeError(
+                f"strategy {strat.name!r} carries per-decode state; the "
+                f"deprecated get_strategy() signature cannot thread it — "
+                f"use resolve_strategy()/Decoder instead")
+        new_x, _, fwd = bound(rng, carry, x, active,
                               model_fn, cfg, dcfg, n)
         return new_x, fwd
 

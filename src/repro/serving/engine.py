@@ -143,13 +143,30 @@ class ServingEngine:
         real = len(batch)
         for i, req in enumerate(batch):
             req.result = out[i, pads[i]:]
-            # per-request stats copy: tokens/forwards pro-rated to the real
-            # (non-pad-replicated) batch members, never a shared object
+            # per-request stats copy: each request gets its SHARE of the
+            # batch's work — tokens (its own gen_length), forwards, and
+            # wall time all divided across the real (non-pad-replicated)
+            # members, so derived rates (tps, tokens_per_forward) come out
+            # consistent: a request's tps equals the batch's aggregate
+            # decode throughput, the rate it actually experienced.  The
+            # seed pro-rated forwards only, leaving tps wrong by a factor
+            # of `real`.  `steps` stays the true batch step count (every
+            # request genuinely went through all of them — diffusion
+            # decode is batch-synchronous); end-to-end latency lives in
+            # Request.latency.
+            # phase counts accumulate one flag per BATCH ROW per step —
+            # pad replicas included — so normalise by the padded row
+            # count: the per-example histogram, which keeps the
+            # sum(phase_counts) == steps invariant per request and keeps
+            # replica rows from inflating the reported phase work
+            rows = len(prompts)
             req.stats = dataclasses.replace(
                 stats,
                 tokens_generated=self.dcfg.gen_length,
                 forward_equivalents=stats.forward_equivalents / real,
-                phase_counts=dict(stats.phase_counts))
+                wall_time=stats.wall_time / real,
+                phase_counts={k: v / rows
+                              for k, v in stats.phase_counts.items()})
             req.finish_time = now
             self.done[req.rid] = req
         return [r.rid for r in batch]
@@ -160,14 +177,26 @@ class ServingEngine:
 
     # -- metrics -----------------------------------------------------------
     def summary(self) -> Dict[str, float]:
+        """Aggregate serving metrics over finished requests.
+
+        Throughput accounting counts REAL requests only: `done` never
+        holds pad replicas, and the per-request stats summed here were
+        pro-rated across real batch members in `step()`, so replicated
+        rows (batches padded to `max_batch`) and mask pad columns inflate
+        neither tokens nor forward-equivalents.
+        """
         reqs = list(self.done.values())
         if not reqs:
             return {}
         lat = [r.latency for r in reqs]
-        toks = sum(self.dcfg.gen_length for _ in reqs)
+        toks = sum(r.stats.tokens_generated for r in reqs)
+        fwds = sum(r.stats.forward_equivalents for r in reqs)
+        decode_s = sum(r.stats.wall_time for r in reqs)
         span = max(r.finish_time for r in reqs) - \
             min(r.submit_time for r in reqs)
         return {"requests": len(reqs),
                 "mean_latency_s": float(np.mean(lat)),
                 "p95_latency_s": float(np.percentile(lat, 95)),
-                "throughput_tps": toks / max(span, 1e-9)}
+                "throughput_tps": toks / max(span, 1e-9),
+                "decode_tps": toks / max(decode_s, 1e-9),
+                "forward_equivalents": float(fwds)}

@@ -102,6 +102,29 @@ def test_register_strategy_rejects_duplicates(alternating):
         resolve_strategy("definitely-not-registered")
 
 
+def test_get_strategy_rejects_stateful_strategies(model, alternating):
+    """The deprecated carry-less signature would silently re-zero a
+    decode-steering carry every step — it must refuse instead.  FDM-A's
+    carry is observational-only (phase counters), so it stays allowed."""
+    from repro.core.strategies import get_strategy as gs
+    _, model_fn = model
+    step = gs("alternating")
+    x = jnp.full((1, 8), CFG.mask_token_id, jnp.int32)
+    active = jnp.ones((1, 8), bool)
+    with pytest.raises(TypeError, match="per-decode state"):
+        step(jax.random.PRNGKey(0), x, active, model_fn, CFG, _dcfg(), 2)
+    gs("fdm_a")(jax.random.PRNGKey(0), x, active, model_fn, CFG,
+                _dcfg(), 2)                     # does not raise
+
+
+def test_generate_rejects_unknown_extras(model):
+    params, _ = model
+    with pytest.raises(TypeError, match="unexpected keyword"):
+        Decoder(params, CFG, _dcfg()).generate(
+            jax.random.PRNGKey(0), jnp.full((1, 4), 2, jnp.int32),
+            on_block_comitted=lambda *a: None)      # the typo'd spelling
+
+
 def test_get_strategy_legacy_shim_still_callable(model):
     """The pre-Decoder lookup keeps its carry-less call signature."""
     _, model_fn = model
@@ -155,6 +178,30 @@ def test_cache_entry_evicted_when_params_dropped():
     Decoder(p2, CFG, dcfg, cache=cache).generate(jax.random.PRNGKey(0),
                                                  prompts)
     assert cache.info().entries == 1
+
+
+def test_cache_evicts_when_any_leaf_dropped():
+    """Eviction must anchor on EVERY params leaf, not just the first: the
+    key is a tuple of leaf ids, which are only unique while the leaves
+    are alive — if a non-first leaf dies (partial weight swap) while leaf
+    0 survives, a recycled id could alias a stale entry into a false
+    cache hit.  First finalizer wins."""
+    cache = RunnerCache()
+    prompts = jnp.full((1, 4), 2, jnp.int32)
+    dcfg = _dcfg(gen_length=8, block_size=8, steps=8)
+    p1 = init_model(jax.random.PRNGKey(1), CFG)
+    leaf0 = jax.tree.leaves(p1)[0]
+    assert len(jax.tree.leaves(p1)) > 1, "test needs a multi-leaf pytree"
+    Decoder(p1, CFG, dcfg, cache=cache).generate(jax.random.PRNGKey(0),
+                                                 prompts)
+    assert cache.info().entries == 1
+    del p1                       # every leaf except leaf0 dies ...
+    gc.collect()
+    assert cache.info().entries == 0, \
+        "non-first leaf died but the entry survived"
+    del leaf0                    # ... and the stale finalizers are
+    gc.collect()                 # detached: leaf0's can't double-evict
+    assert cache.info().entries == 0
 
 
 def test_cache_evicts_model_fn_entries_too(model):
@@ -216,34 +263,65 @@ def test_shims_emit_deprecation_warning(model):
 
 
 # --------------------------------------------------------------------------
-# streaming: on_block_committed fires once per block, in order
+# streaming: on_block_committed fires once per block, in order, under all
+# three drivers (host / per-block fused / whole-request io_callback)
 # --------------------------------------------------------------------------
 
-@pytest.mark.parametrize("fused", [True, False])
-def test_on_block_committed_callback(model, fused):
+DRIVERS = {
+    "host": dict(fused_loop=False),
+    "block": dict(fused_loop=True, fused_blocks=False),
+    "request": dict(fused_loop=True, fused_blocks=True),
+}
+
+
+@pytest.mark.parametrize("driver", sorted(DRIVERS))
+def test_on_block_committed_ordering(model, driver):
+    """Exactly num_blocks events, in block order, with the right (lo, hi)
+    — including the whole-request driver, where the callback arrives via
+    an ordered io_callback from inside the single compiled dispatch."""
     params, _ = model
     prompts = jnp.full((2, 6), 2, jnp.int32)
     events = []
-    dec = Decoder(params, CFG, _dcfg(fused_loop=fused))
+    dec = Decoder(params, CFG, _dcfg(gen_length=16, block_size=4,
+                                     **DRIVERS[driver]))
     out, _ = dec.generate(
         jax.random.PRNGKey(0), prompts,
         on_block_committed=lambda blk, lo, hi, x: events.append(
-            (blk, lo, hi, bool((np.asarray(x[:, lo:hi])
+            (blk, lo, hi, bool((np.asarray(x)[:, lo:hi]
                                 != CFG.mask_token_id).all()))))
-    assert [(e[0], e[1], e[2]) for e in events] == [(0, 6, 14), (1, 14, 22)]
+    assert [(e[0], e[1], e[2]) for e in events] == \
+        [(0, 6, 10), (1, 10, 14), (2, 14, 18), (3, 18, 22)]
     # at each event the just-committed block is fully decoded
     assert all(e[3] for e in events)
 
 
-def test_on_block_committed_cached_path(model):
+@pytest.mark.parametrize("driver", sorted(DRIVERS))
+def test_on_block_committed_cached_path(model, driver):
+    """The cached path keeps its per-block host driver in every mode
+    (block-varying window shapes — DESIGN.md), but the streaming contract
+    is identical: num_blocks ordered events with correct bounds."""
     params, _ = model
     prompts = jnp.full((2, 6), 2, jnp.int32)
     events = []
-    dec = Decoder(params, CFG, _dcfg())
+    dec = Decoder(params, CFG, _dcfg(**DRIVERS[driver]))
     dec.generate_cached(jax.random.PRNGKey(0), prompts,
                         on_block_committed=lambda blk, lo, hi, x:
                         events.append((blk, lo, hi)))
     assert events == [(0, 6, 14), (1, 14, 22)]
+
+
+def test_streaming_and_plain_request_decodes_match(model):
+    """The streaming whole-request variant (its own compiled program, with
+    io_callbacks woven in) must not perturb the decode itself."""
+    params, _ = model
+    prompts = jnp.full((2, 6), 2, jnp.int32)
+    dec = Decoder(params, CFG, _dcfg())
+    out_plain, s_plain = dec.generate(jax.random.PRNGKey(0), prompts)
+    out_stream, s_stream = dec.generate(jax.random.PRNGKey(0), prompts,
+                                        on_block_committed=lambda *a: None)
+    np.testing.assert_array_equal(np.asarray(out_plain),
+                                  np.asarray(out_stream))
+    assert s_plain.steps == s_stream.steps
 
 
 def test_model_fn_decoder_rejects_cached(model):

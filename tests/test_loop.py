@@ -1,5 +1,6 @@
-"""Device-resident fused block loop (core/loop.py): fused-vs-host parity
-for every registered strategy, compile-count guarantees, the Pallas
+"""Device-resident decode loops (core/loop.py): three-driver parity
+(host step loop / per-block fused / whole-request fused) for every
+registered strategy, compile-count guarantees, the Pallas
 confidence-kernel wiring, and the bucketed serving scheduler."""
 import dataclasses
 
@@ -19,6 +20,13 @@ CFG = get_config("llada-8b").reduced()
 STRATEGIES = ["random", "probability", "margin", "entropy", "eb", "wino",
               "fdm", "fdm_a"]
 
+# the three decode drivers (DecodeConfig overrides)
+DRIVERS = {
+    "host": dict(fused_loop=False),
+    "block": dict(fused_loop=True, fused_blocks=False),
+    "request": dict(fused_loop=True, fused_blocks=True),
+}
+
 
 @pytest.fixture(scope="module")
 def model():
@@ -36,22 +44,117 @@ def _dcfg(**over):
 
 
 # --------------------------------------------------------------------------
-# parity: fused while_loop ≡ host step loop, bit-for-bit
+# parity: host step loop ≡ per-block fused ≡ whole-request fused, bit-for-bit
 # --------------------------------------------------------------------------
 
 @pytest.mark.parametrize("strategy", STRATEGIES)
-def test_fused_host_parity(model, strategy):
+def test_three_driver_parity(model, strategy):
+    """All 8 strategies must produce bit-identical tokens, step counts,
+    and forward counts under the host loop, the per-block fused driver,
+    and the single-dispatch whole-request driver."""
     _, model_fn = model
     prompts = jnp.full((3, 6), 2, jnp.int32)
     dcfg = _dcfg(strategy=strategy)
-    out_f, s_f = generate(jax.random.PRNGKey(0), model_fn, prompts, CFG,
-                          dataclasses.replace(dcfg, fused_loop=True))
-    out_h, s_h = generate(jax.random.PRNGKey(0), model_fn, prompts, CFG,
-                          dataclasses.replace(dcfg, fused_loop=False))
-    np.testing.assert_array_equal(np.asarray(out_f), np.asarray(out_h))
-    assert s_f.steps == s_h.steps
-    assert s_f.forward_equivalents == pytest.approx(s_h.forward_equivalents)
-    assert not (np.asarray(out_f) == CFG.mask_token_id).any()
+    runs = {}
+    for name, over in DRIVERS.items():
+        with pytest.warns(DeprecationWarning):
+            runs[name] = generate(jax.random.PRNGKey(0), model_fn, prompts,
+                                  CFG, dataclasses.replace(dcfg, **over))
+    out_ref, s_ref = runs["host"]
+    for name in ("block", "request"):
+        out, s = runs[name]
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(out_ref),
+                                      err_msg=f"{strategy}/{name}")
+        assert s.steps == s_ref.steps, (strategy, name)
+        assert s.forward_equivalents == \
+            pytest.approx(s_ref.forward_equivalents), (strategy, name)
+        assert s.phase_counts == s_ref.phase_counts, (strategy, name)
+    assert not (np.asarray(out_ref) == CFG.mask_token_id).any()
+
+
+@pytest.mark.parametrize("driver", sorted(DRIVERS))
+def test_remainder_steps_are_not_dropped(model, driver):
+    """steps=10 over 4 blocks used to floor to 2 steps/block and quietly
+    run 8; the schedule now spreads the remainder ([3,3,2,2] budgets,
+    commit widths summing to block_size inside each) so the request runs
+    exactly its configured step budget — under every driver."""
+    params, _ = model
+    from repro.core import Decoder
+    prompts = jnp.full((2, 6), 2, jnp.int32)
+    dcfg = _dcfg(gen_length=16, block_size=4, steps=10,
+                 strategy="probability", **DRIVERS[driver])
+    out, stats = Decoder(params, CFG, dcfg).generate(jax.random.PRNGKey(0),
+                                                     prompts)
+    assert stats.steps == 10
+    assert not (np.asarray(out) == CFG.mask_token_id).any()
+
+
+def test_remainder_steps_three_driver_parity(model):
+    """The remainder schedule must stay bit-identical across drivers."""
+    params, _ = model
+    from repro.core import Decoder
+    prompts = jnp.full((2, 6), 2, jnp.int32)
+    outs = []
+    for over in DRIVERS.values():
+        dcfg = _dcfg(gen_length=16, block_size=4, steps=10,
+                     strategy="probability", **over)
+        out, stats = Decoder(params, CFG, dcfg).generate(
+            jax.random.PRNGKey(0), prompts)
+        outs.append((np.asarray(out), stats.steps))
+    for out, steps in outs[1:]:
+        np.testing.assert_array_equal(out, outs[0][0])
+        assert steps == outs[0][1]
+
+
+@pytest.mark.parametrize("driver", sorted(DRIVERS))
+def test_fdm_a_phase_counts_sum_to_steps(model, driver):
+    """The (explore, accel, local_only, balance) histogram is populated
+    from the device-side carry; with batch 1 each step lands in exactly
+    one phase, so the counts sum to stats.steps — under every driver."""
+    params, _ = model
+    from repro.core import Decoder
+    prompts = jnp.full((1, 6), 2, jnp.int32)
+    dcfg = _dcfg(strategy="fdm_a", **DRIVERS[driver])
+    _, stats = Decoder(params, CFG, dcfg).generate(jax.random.PRNGKey(0),
+                                                   prompts)
+    assert set(stats.phase_counts) == \
+        {"explore", "accel", "local_only", "balance"}
+    assert sum(stats.phase_counts.values()) == stats.steps
+    assert stats.steps > 0
+
+
+def test_infeasible_step_budget_raises(model):
+    """steps < num_blocks cannot be honoured (≥1 step per block): a clear
+    error beats silently running more steps than configured."""
+    params, _ = model
+    from repro.core import Decoder
+    dcfg = _dcfg(gen_length=16, block_size=4, steps=2)
+    with pytest.raises(ValueError, match="infeasible"):
+        Decoder(params, CFG, dcfg).generate(jax.random.PRNGKey(0),
+                                            jnp.full((1, 4), 2, jnp.int32))
+
+
+def test_serving_phase_counts_exclude_pad_replicas(model):
+    """Per-request phase histograms are per-example averages over the
+    padded batch, so replica rows don't inflate them and the
+    sum == steps invariant holds per request."""
+    params, _ = model
+    dcfg = _dcfg(gen_length=8, block_size=8, steps=8, strategy="fdm_a")
+    engine = ServingEngine(params, CFG, dcfg, max_batch=4, length_bucket=8)
+    rids = [engine.submit(np.full((6,), 3, np.int32)) for _ in range(3)]
+    engine.run_until_idle()               # batch of 3 real + 1 replica
+    for rid in rids:
+        s = engine.result(rid).stats
+        assert sum(s.phase_counts.values()) == pytest.approx(s.steps)
+
+
+def test_fdm_a_phase_counts_cached_path(model):
+    params, _ = model
+    from repro.core import Decoder
+    prompts = jnp.full((1, 6), 2, jnp.int32)
+    _, stats = Decoder(params, CFG, _dcfg(strategy="fdm_a")).generate_cached(
+        jax.random.PRNGKey(0), prompts)
+    assert sum(stats.phase_counts.values()) == stats.steps
 
 
 @pytest.mark.parametrize("strategy", ["probability", "eb", "fdm_a"])
@@ -75,13 +178,15 @@ def test_cached_fused_host_parity(model, strategy):
 # compile count: one trace per strategy × shape, across blocks AND calls
 # --------------------------------------------------------------------------
 
+@pytest.mark.parametrize("driver", ["block", "request"])
 @pytest.mark.parametrize("strategy,expected_traces",
                          [("probability", 1), ("fdm", 2)])
 def test_one_compilation_per_strategy_and_shape(model, strategy,
-                                                expected_traces):
+                                                expected_traces, driver):
     """The whole decode — 2 blocks × 8 steps × 2 generate calls — must
     trace the model exactly once per distinct forward shape: (B, L) for
-    every strategy, plus (K·B, L) for the foreseeing branch."""
+    every strategy, plus (K·B, L) for the foreseeing branch.  Holds for
+    both fused drivers (per-block and single-dispatch whole-request)."""
     params, _ = model
     traces = []
 
@@ -90,7 +195,7 @@ def test_one_compilation_per_strategy_and_shape(model, strategy,
         return forward(params, x, CFG)[0]
 
     prompts = jnp.full((2, 6), 2, jnp.int32)
-    dcfg = _dcfg(strategy=strategy, fused_loop=True)
+    dcfg = _dcfg(strategy=strategy, **DRIVERS[driver])
     generate(jax.random.PRNGKey(0), counting_fn, prompts, CFG, dcfg)
     assert len(traces) == expected_traces, traces
     generate(jax.random.PRNGKey(1), counting_fn, prompts, CFG, dcfg)
@@ -189,3 +294,28 @@ def test_serving_per_request_stats(model):
         # batch forwards split across the 3 REAL requests (batch padded
         # to 4): 8 steps × 1 fwd / 3
         assert s.forward_equivalents == pytest.approx(8 / 3)
+        # wall time pro-rated the same way, so the derived rates are
+        # consistent: tps = the batch's aggregate decode throughput and
+        # tokens_per_forward = tokens / (batch forwards / real) — the
+        # seed pro-rated forwards only, leaving tps low by a factor of 3
+        assert s.wall_time == pytest.approx(stats[0].wall_time)
+        assert s.wall_time > 0
+        assert s.tps == pytest.approx(3 * 8 / (3 * s.wall_time))
+        assert s.steps == stats[0].steps        # true batch step count
+
+
+def test_serving_summary_counts_real_requests_only(model):
+    """summary() throughput/forward accounting must exclude the
+    pad-replica rows: 3 real requests in a max_batch=4 batch report
+    3 × (8 steps / 3) = 8 forward-equivalents total, not 8 × 4/3."""
+    params, _ = model
+    engine = _engine(params, max_batch=4)
+    for _ in range(3):
+        engine.submit(np.full((6,), 3, np.int32))
+    engine.run_until_idle()
+    summ = engine.summary()
+    assert summ["requests"] == 3
+    assert summ["forward_equivalents"] == pytest.approx(8.0)
+    # decode_tps aggregates the pro-rated shares back to batch throughput
+    wall = engine.result(0).stats.wall_time
+    assert summ["decode_tps"] == pytest.approx(3 * 8 / (3 * wall))
