@@ -1,0 +1,88 @@
+"""Carry-ful strategy ablation: what does cross-step decode state buy?
+
+Two questions, both on the trained sum testbed (the task where decode
+order and forward count are most visible):
+
+* **Confidence extrapolation** (``extrapolate``, core/extrapolate.py) —
+  how many model forwards does trajectory extrapolation skip, and what
+  does the early commitment cost in exact match?  The baseline is
+  vanilla confidence decoding (``probability``): with skipping disabled
+  the two are bit-identical (tested), so the delta is PURE extrapolation
+  effect.  Swept over ``extrap_tau`` — lower thresholds skip more and
+  trust the carried candidates earlier.
+* **WINO revocation** (``wino_r``, core/wino.py) — the carry-ful variant
+  verifies pending commits on the NEXT step's regular forward (1
+  forward/step) where the stateless ``wino`` baseline re-forwards inside
+  every step (2 forwards/step): same commit-then-revoke idea, half the
+  forward bill, plus a budgeted un-commit that the stats surface as
+  ``SampleStats.revocations``.
+
+Emits ``BENCH_ablation_carry.json`` with the headline
+``extrap_fwd_reduction`` (fraction of the vanilla baseline's forwards
+that the default-τ extrapolation row avoided) so later PRs can regress
+against a recorded number.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List
+
+from benchmarks.common import evaluate_strategy, fmt, print_table
+
+OUT_PATH = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_ablation_carry.json")
+
+TASK = "sum"
+TAUS = (0.85, 0.92, 0.97)
+DEFAULT_TAU = 0.92         # DecodeConfig.extrap_tau — the headline row
+
+
+def run(n_eval: int = 0, taus=None) -> List[Dict]:
+    taus = taus or TAUS
+    # batch_size=1 throughout: a batched forward can only be skipped when
+    # EVERY batch row is skippable, so the per-request regime (serving
+    # latency) is where extrapolation's savings live — and the baseline
+    # must decode at the same batch size for the comparison to be fair
+    def ev(strategy, **kw):
+        return evaluate_strategy(TASK, strategy, n_eval=n_eval,
+                                 batch_size=1, **kw)
+
+    rows = [ev("probability")]
+    base_fwd = rows[0]["forward_equivalents"]
+    for tau in taus:
+        rows.append(ev("extrapolate", extrap_tau=tau))
+    rows.append(ev("wino"))
+    rows.append(ev("wino_r"))
+    for r in rows:
+        r["fwd_reduction"] = round(
+            1.0 - r["forward_equivalents"] / max(base_fwd, 1e-9), 3)
+
+    print("\n== carry-ful strategy ablation (sum testbed) ==")
+    print_table(fmt(rows), ["strategy", "extrap_tau", "accuracy",
+                            "forward_equivalents", "skipped_forwards",
+                            "revocations", "fwd_reduction", "tps"])
+
+    headline = next((r for r in rows if r.get("extrap_tau") == DEFAULT_TAU),
+                    rows[1])           # first extrapolate row as fallback
+    head_tau = headline["extrap_tau"]  # may differ from DEFAULT_TAU when
+    payload = {                        # the caller swept other taus
+        "benchmark": "ablation_carry",
+        "task": TASK,
+        "extrap_tau": head_tau,
+        "extrap_fwd_reduction": headline["fwd_reduction"],
+        "extrap_accuracy": headline["accuracy"],
+        "baseline_accuracy": rows[0]["accuracy"],
+        "rows": rows,
+    }
+    with open(OUT_PATH, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"[wrote {OUT_PATH}; extrapolate τ={head_tau} skipped "
+          f"{headline['skipped_forwards']:.0f} forwards = "
+          f"{headline['fwd_reduction']:.0%} of the vanilla bill at "
+          f"{headline['accuracy']:.0%} EM vs {rows[0]['accuracy']:.0%}]")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

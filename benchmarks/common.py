@@ -11,7 +11,6 @@ from __future__ import annotations
 
 import functools
 import os
-import time
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -72,8 +71,17 @@ def trained_model(task: str, arch: Optional[str] = None,
 
 def evaluate_strategy(task: str, strategy: str, n_eval: int = 0,
                       seed: int = 0, arch: Optional[str] = None,
+                      batch_size: int = 0,
                       **dcfg_over) -> Dict[str, float]:
-    """Accuracy (exact match) + TPS + tokens/forward for one strategy."""
+    """Accuracy (exact match) + TPS + tokens/forward for one strategy.
+
+    ``batch_size`` (default 0 = all of ``n_eval`` in one batch) chops the
+    eval set into smaller decode batches.  Forward-skipping strategies
+    need this: a batched forward can only be skipped when EVERY row in
+    the batch is skippable, so the per-request regime (serving latency,
+    ``batch_size=1``) is where extrapolation's savings live — and a fair
+    A/B runs the baseline at the same batch size.
+    """
     params, cfg, ds, tok = trained_model(task, arch)
     n_eval = n_eval or EVAL_N
     batch = ds.eval_batch(n_eval)
@@ -88,15 +96,32 @@ def evaluate_strategy(task: str, strategy: str, n_eval: int = 0,
     # keyed on the (lru-cached) trained params, so every strategy suite
     # over the same task model shares compilations
     decoder = Decoder(params, cfg, dcfg)
-    # warmup compile (excluded from timing)
-    decoder.generate(jax.random.PRNGKey(99), prompts[:n_eval])
-    out, stats = decoder.generate(jax.random.PRNGKey(seed), prompts)
-    em = ds.exact_match(np.asarray(jax.device_get(out)), batch)
+    bs = batch_size or n_eval
+    # warmup compile (excluded from timing) — both chunk shapes: the main
+    # batch and any trailing partial chunk, so no trace lands in the loop
+    decoder.generate(jax.random.PRNGKey(99), prompts[:bs])
+    if n_eval % bs:
+        decoder.generate(jax.random.PRNGKey(98), prompts[:n_eval % bs])
+    outs, steps, fwd, skipped, revoked, wall = [], 0, 0.0, 0.0, 0.0, 0.0
+    for i in range(0, n_eval, bs):
+        out, stats = decoder.generate(jax.random.PRNGKey(seed + i),
+                                      prompts[i:i + bs])
+        outs.append(np.asarray(jax.device_get(out)))
+        steps += stats.steps
+        fwd += stats.forward_equivalents
+        skipped += stats.skipped_forwards
+        revoked += stats.revocations
+        wall += stats.wall_time
+    out_all = np.concatenate(outs, axis=0)
+    em = ds.exact_match(out_all, batch)
     return {**{k: v for k, v in dcfg_over.items()},
             "task": task, "strategy": strategy, "accuracy": em,
-            "tps": stats.tps, "steps": stats.steps,
-            "tokens_per_forward": stats.tokens_per_forward,
-            "forward_equivalents": stats.forward_equivalents}
+            "tps": out_all.shape[0] * gen / max(wall, 1e-9),
+            "steps": steps,
+            "tokens_per_forward": out_all.shape[0] * gen / max(fwd, 1),
+            "forward_equivalents": fwd,
+            "skipped_forwards": skipped,
+            "revocations": revoked}
 
 
 def print_table(rows, cols) -> None:

@@ -11,10 +11,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import trained_model
-from repro.configs import DecodeConfig
 from repro.core import fully_masked, score_logits
 from repro.core.fdm import fdm_select
-from repro.core.strategies import NEG, rank_desc
+from repro.core.strategies import NEG
 from repro.models.model import forward
 
 TASK = "sort"
@@ -27,7 +26,6 @@ def run(n_examples: int = 16, k: int = 2, gamma: float = 0.6):
     prompts = jnp.asarray(ds.prompts_only(batch))
     gen = ds.seq_len - prompts.shape[1]
     x = fully_masked(cfg, prompts, gen)
-    rng = jax.random.PRNGKey(0)
 
     agreement = []
     for step in range(gen):

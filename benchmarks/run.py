@@ -8,7 +8,6 @@ REPRO_BENCH_ARCH (llada-8b).
 import argparse
 import json
 import os
-import sys
 import time
 
 
@@ -28,7 +27,12 @@ def _loop_with_regression_gate(batches=None):
     regression may not ratchet the baseline down, even a sub-10% one
     (otherwise repeated 9% slips would compound unnoticed).  Recording a
     deliberately slower baseline therefore requires running
-    ``benchmarks.loop_overhead`` directly."""
+    ``benchmarks.loop_overhead`` directly.
+
+    ``REPRO_BENCH_SMOKE_OUT=<path>``: also write THIS run's fresh
+    measurement there, surviving any baseline restore — how the CI
+    bench-smoke job exports its artifact without ratcheting the recorded
+    baseline from a noisy shared runner."""
     from benchmarks import loop_overhead
 
     baseline = raw_baseline = None
@@ -48,6 +52,13 @@ def _loop_with_regression_gate(batches=None):
     except BaseException:
         restore()                      # an aborted run is no baseline
         raise
+    smoke_out = os.environ.get("REPRO_BENCH_SMOKE_OUT")
+    if smoke_out:
+        with open(loop_overhead.OUT_PATH) as f:
+            fresh = f.read()
+        with open(smoke_out, "w") as f:
+            f.write(fresh)
+        print(f"[smoke copy of this run's numbers -> {smoke_out}]")
     if baseline and baseline.get("backend") == \
             __import__("jax").default_backend():
         old_row = next((r for r in baseline["rows"]
@@ -95,11 +106,12 @@ def main() -> None:
                     help="comma-separated subset, e.g. table1,fig2")
     args = ap.parse_args()
 
-    from benchmarks import (ablation_eta, ablation_gamma, ablation_k,
-                            fig2_consistency, kernel_confidence,
-                            loop_overhead, table1_decode_order,
-                            table2_fdm_scaling, table3_fdm_a,
-                            table4_arch_generality, table5_cached_serving)
+    from benchmarks import (ablation_carry, ablation_eta, ablation_gamma,
+                            ablation_k, fig2_consistency,
+                            kernel_confidence, loop_overhead,
+                            table1_decode_order, table2_fdm_scaling,
+                            table3_fdm_a, table4_arch_generality,
+                            table5_cached_serving)
     n_eval = 16 if args.fast else 0
     suites = {
         "table1": lambda: table1_decode_order.run(n_eval=n_eval),
@@ -114,6 +126,8 @@ def main() -> None:
         "ablation_gamma": lambda: ablation_gamma.run(
             n_eval=n_eval, tasks=["sort"] if args.fast else None),
         "ablation_eta": lambda: ablation_eta.run(n_eval=n_eval),
+        "ablation_carry": lambda: ablation_carry.run(
+            n_eval=n_eval, taus=(0.92,) if args.fast else None),
         "table4": lambda: table4_arch_generality.run(
             n_eval=n_eval,
             archs=["llada-8b", "xlstm-125m"] if args.fast else None),

@@ -5,7 +5,6 @@ the zoo tour.  Shows that the paper's technique is architecture-agnostic
     PYTHONPATH=src python examples/multiarch_smoke.py
 """
 import jax
-import jax.numpy as jnp
 
 from repro.configs import ASSIGNED_ARCHS, get_config
 from repro.core import fully_masked, make_model_fn, score_logits

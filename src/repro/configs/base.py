@@ -220,7 +220,8 @@ class DecodeConfig:
     gen_length: int = 256
     block_size: int = 64
     steps: int = 256                   # T
-    strategy: str = "fdm"              # random|probability|margin|entropy|eb|wino|fdm|fdm_a
+    strategy: str = "fdm"              # random|probability|margin|entropy|
+                                       # eb|wino|fdm|fdm_a|wino_r|extrapolate
     temperature: float = 0.0
     # execution
     fused_loop: bool = True            # device-resident lax.while_loop block
@@ -254,6 +255,35 @@ class DecodeConfig:
     # WINO baseline
     wino_tau1: float = 0.7
     wino_tau2: float = 0.9
+    # wino_r (carry-ful WINO revocation, core/wino.py): each step's
+    # commits stay *pending* in the carry and are re-verified against the
+    # NEXT step's regular forward (one forward per step — the stateless
+    # "wino" baseline pays a second verify forward every step); a pending
+    # token whose re-scored probability falls below `wino_revoke_tau` is
+    # re-masked and re-decoded, at most `wino_revoke_budget` times per
+    # example per request.  The threshold is deliberately FAR below the
+    # commit-time confidence scale (and below the stateless baseline's
+    # τ₂): masked-diffusion training supervises masked positions only, so
+    # re-scores at already-committed (unmasked) positions are noisy —
+    # measured on the sum testbed, stable commits re-score ≥ 0.79 while
+    # genuine contradictions re-score ≤ 0.2, so 0.3 revokes only the
+    # confident contradictions.  Keep the budget well under block_size·3:
+    # the block safety cap is block_size·4 and each revocation can add a
+    # step.
+    wino_revoke_tau: float = 0.3
+    wino_revoke_budget: int = 8
+    # extrapolate (confidence extrapolation / local determinism
+    # propagation, core/extrapolate.py): per position the carry tracks a
+    # confidence EMA (decay `extrap_beta`), its slope, and the last
+    # argmax candidate; once every example could fill its commit width
+    # with positions whose trajectory `ema + horizon·slope` crosses
+    # `extrap_tau` (after ≥ `extrap_min_obs` observations), the step
+    # commits from the carry and SKIPS the model forward entirely
+    # (surfaced as SampleStats.skipped_forwards).
+    extrap_tau: float = 0.92
+    extrap_beta: float = 0.5
+    extrap_horizon: float = 2.0
+    extrap_min_obs: int = 2
 
 
 @dataclass(frozen=True)

@@ -8,6 +8,10 @@ Public API:
                 Margin/Entropy + EB + WINO baselines
   fdm         — Algorithm 1 (FDM)
   fdm_a       — Algorithm 2 (FDM-A, three-phase adaptive)
+  wino        — carry-ful WINO revocation (cross-step verify, budgeted
+                un-commit; the pending set rides the strategy carry)
+  extrapolate — confidence extrapolation / local determinism propagation
+                (trajectory carry; skips model forwards outright)
   decoder     — the first-class Decoder: block orchestration (plain +
                 frozen-prefix cached), cross-call runner cache, streaming
   loop        — device-resident fused block driver (one XLA program/block)
@@ -16,10 +20,14 @@ Public API:
 from repro.core.confidence import (Scores, global_confidence,
                                    local_confidence, score_logits)
 from repro.core.decoder import (CacheInfo, Decoder, SampleStats,
-                                clear_decode_cache, decode_cache_info)
+                                clear_decode_cache, decode_cache_info,
+                                decode_cache_scope,
+                                reset_decode_cache_stats)
+from repro.core.extrapolate import ExtrapolationStrategy
 from repro.core.fdm import FDMStrategy, fdm_select, fdm_step
 from repro.core.fdm_a import (FDMAStrategy, fdm_a_plan, fdm_a_step,
                               fdm_a_step_fused)
+from repro.core.wino import WINORevocationStrategy
 from repro.core.loop import block_runner, drive_block, drive_request
 from repro.core.loss import masked_cross_entropy, token_accuracy
 from repro.core.masking import (apply_mask, fully_masked, mask_positions,
@@ -36,8 +44,10 @@ __all__ = [
     "Strategy", "StatelessStrategy", "register_strategy",
     "unregister_strategy", "resolve_strategy", "available_strategies",
     "Decoder", "CacheInfo", "decode_cache_info", "clear_decode_cache",
+    "decode_cache_scope", "reset_decode_cache_stats",
     "FDMStrategy", "fdm_step", "fdm_select",
     "FDMAStrategy", "fdm_a_step", "fdm_a_step_fused", "fdm_a_plan",
+    "WINORevocationStrategy", "ExtrapolationStrategy",
     "block_runner", "drive_block", "drive_request",
     "masked_cross_entropy", "token_accuracy",
     "apply_mask", "fully_masked", "mask_positions", "sample_mask_ratio",

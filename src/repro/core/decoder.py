@@ -44,6 +44,7 @@ canvas; don't block in the callback.
 """
 from __future__ import annotations
 
+import contextlib
 import time
 import weakref
 from dataclasses import dataclass, field
@@ -70,6 +71,16 @@ class SampleStats:
     # accumulated on device in the strategy carry; ints from Decoder
     # (one flag per batch row per step), per-example averages — possibly
     # fractional, still summing to `steps` — from ServingEngine
+    revocations: float = 0.0
+    # committed tokens un-committed (re-masked) by a revoking strategy
+    # (wino_r); whole-batch total from Decoder, pro-rated per request by
+    # ServingEngine.  Each revocation is extra work the step/forward
+    # counters already include (the re-decode runs as ordinary steps).
+    skipped_forwards: float = 0.0
+    # model calls AVOIDED by an extrapolating strategy: steps that
+    # committed straight from the carry.  Plain path invariant:
+    # steps == forward_equivalents + skipped_forwards (the cached path
+    # pro-rates forwards by window size but counts skips raw).
 
     @property
     def tps(self) -> float:
@@ -154,13 +165,18 @@ class RunnerCache:
                          hits=self.hits, misses=self.misses,
                          traces=self.traces)
 
+    def reset_stats(self) -> None:
+        """Zero the hit/miss/trace counters WITHOUT dropping any cached
+        runner — compiled work survives, only the accounting restarts."""
+        self.hits = self.misses = self.traces = 0
+
     def clear(self) -> None:
         for fins in list(self._finalizers.values()):
             for fin in fins:
                 fin.detach()
         self._entries.clear()
         self._finalizers.clear()
-        self.hits = self.misses = self.traces = 0
+        self.reset_stats()
 
 
 _GLOBAL_CACHE = RunnerCache()
@@ -178,6 +194,36 @@ def decode_cache_info() -> CacheInfo:
 
 def clear_decode_cache() -> None:
     _GLOBAL_CACHE.clear()
+
+
+def reset_decode_cache_stats() -> None:
+    """Zero the process-wide cache's hit/miss/trace counters, keeping its
+    compiled runners.  Compile-count assertions (`traces == N`) should
+    call this — or use ``decode_cache_scope`` — first, so they measure
+    their own work instead of whatever ran earlier in the process (under
+    CI test ordering the module-global counters are otherwise a flake
+    source)."""
+    _GLOBAL_CACHE.reset_stats()
+
+
+@contextlib.contextmanager
+def decode_cache_scope(cache: Optional[RunnerCache] = None):
+    """Swap a fresh (or caller-supplied) ``RunnerCache`` in as the
+    process-wide cache for the duration of the ``with`` block.
+
+    Decoders constructed inside the scope — including the ones the
+    deprecation shims and the ServingEngine build internally — resolve
+    against the scoped cache, so its counters see exactly the scope's
+    work and its entries drop with the scope (previously cached runners
+    reappear after exit, untouched).  Yields the scoped cache.
+    """
+    global _GLOBAL_CACHE
+    prev = _GLOBAL_CACHE
+    _GLOBAL_CACHE = cache if cache is not None else RunnerCache()
+    try:
+        yield _GLOBAL_CACHE
+    finally:
+        _GLOBAL_CACHE = prev
 
 
 def _tiling_forward(params, cfg: ModelConfig, extras: Dict[str, Any]):
@@ -206,6 +252,29 @@ def _tile_state(st, reps: int):
         if a.ndim >= 2 else a, st.layer_states)
     eo = None if st.enc_out is None else jnp.tile(st.enc_out, (reps, 1, 1))
     return DecodeState(layer_states=ls, enc_out=eo)
+
+
+def _carry_window(strat: Strategy, carry, lo: int):
+    """Cached path: slice a positional carry's per-column leaves to the
+    live window ``[:, lo:]``, exactly like the canvas itself.  Carries of
+    strategies without ``positional_carry`` pass through whole."""
+    if not strat.positional_carry:
+        return carry
+    pos, glob = carry
+    return jax.tree.map(lambda a: a[:, lo:], pos), glob
+
+
+def _carry_unwindow(strat: Strategy, carry_full, carry_win, lo: int):
+    """Write a block's updated window carry back into the full-canvas
+    positional leaves (inverse of ``_carry_window``)."""
+    if not strat.positional_carry:
+        return carry_win
+    pos_full, _ = carry_full
+    pos_win, glob = carry_win
+    pos = jax.tree.map(
+        lambda full, win: jax.lax.dynamic_update_slice_in_dim(
+            full, win, lo, axis=1), pos_full, pos_win)
+    return pos, glob
 
 
 class Decoder:
@@ -254,11 +323,18 @@ class Decoder:
         constant ``n_per_step`` — bit-identical decodes.  A budget below
         ``num_blocks`` is infeasible (each block takes ≥ 1 step) and
         raises; a budget above ``gen_length`` is a CAP, not a target —
-        each step commits ≥ 1 token, so a block's zero-width schedule
-        tail is unreachable and the decode runs ``gen_length`` steps.
-        Rows padded with trailing zeros are never reached by
-        width-respecting strategies (their widths sum to ``block_size``);
-        width-ignoring strategies never read ``n`` at all.
+        each step commits ≥ 1 token, so a block's schedule tail is
+        unreachable and the decode runs ``gen_length`` steps.
+
+        Net-committed accounting: commit schedules may UN-commit.  A
+        revoking strategy (``wino_r``) re-masks tokens, so a block's net
+        progress per step can fall below the scheduled width and the
+        block legitimately overruns its schedule row.  Rows are therefore
+        padded with their FINAL width — never zero — so overrun steps
+        (reached only by revocation, since non-revoking width-respecting
+        strategies' widths sum exactly to ``block_size``) keep committing
+        and the block still terminates inside the ``block_size·4`` safety
+        cap; width-ignoring strategies never read ``n`` at all.
         """
         dcfg = self.dcfg
         gen, bs = dcfg.gen_length, dcfg.block_size
@@ -275,7 +351,9 @@ class Decoder:
         sched = np.zeros((num_blocks, max(budgets)), np.int32)
         for b, spb in enumerate(budgets):
             w, wr = divmod(bs, spb)
-            sched[b, :spb] = [w + 1] * wr + [w] * (spb - wr)
+            widths = [w + 1] * wr + [w] * (spb - wr)
+            # pad with the final width (see docstring: revocation overrun)
+            sched[b] = widths + [widths[-1]] * (sched.shape[1] - spb)
         return gen, bs, num_blocks, sched
 
     # -- runner construction (all cached cross-call) -----------------------
@@ -511,7 +589,7 @@ class Decoder:
         b, lp = prompt.shape
         gen, bs, num_blocks, sched = self._geometry()
         x = fully_masked(cfg, prompt, gen)
-        carry = strat.init_carry(cfg, dcfg)
+        carry = strat.init_carry_shaped(cfg, dcfg, b, lp + gen)
         stats = SampleStats(tokens_generated=b * gen)
         t0 = time.perf_counter()
 
@@ -572,6 +650,7 @@ class Decoder:
                 lo, hi = lp + blk * bs, lp + (blk + 1) * bs
                 in_block = (jnp.arange(x.shape[1]) >= lo) & \
                     (jnp.arange(x.shape[1]) < hi)
+                carry = strat.begin_block(carry, x, in_block)
                 # guard: a strategy always commits ≥1 token/example/step,
                 # so a block can never need more than bs·4 steps
                 for i in range(bs * 4):
@@ -587,11 +666,24 @@ class Decoder:
                 if on_block_committed is not None:
                     on_block_committed(blk, lo, hi, x)
             x.block_until_ready()
+        self._merge_carry_stats(stats, strat, carry)
+        stats.wall_time = time.perf_counter() - t0
+        return x, stats
+
+    @staticmethod
+    def _merge_carry_stats(stats: SampleStats, strat: Strategy,
+                           carry) -> None:
+        """Read the strategy's observational counters out of the final
+        carry into SampleStats (one host sync per decode, not per step)."""
         pc = strat.phase_counts(carry)
         if pc:
             stats.phase_counts = pc
-        stats.wall_time = time.perf_counter() - t0
-        return x, stats
+        for key, val in strat.carry_stats(carry).items():
+            if not hasattr(stats, key):
+                raise AttributeError(
+                    f"strategy {strat.name!r} reported carry stat {key!r} "
+                    f"which is not a SampleStats field")
+            setattr(stats, key, val)
 
     def generate_cached(self, rng, prompt: jnp.ndarray,
                         strategy: Optional[str] = None,
@@ -653,7 +745,7 @@ class Decoder:
         _, state = extend_rec(prompt, all_pos[:, :lp], state)
         stats.forward_equivalents += 1
 
-        carry = strat.init_carry(cfg, dcfg)
+        carry = strat.init_carry_shaped(cfg, dcfg, b, total)
         steps_c = jnp.zeros((), jnp.int32)
         fwd_c = jnp.zeros((), jnp.float32)
         fused = dcfg.fused_loop and strat.supports_fused
@@ -667,11 +759,13 @@ class Decoder:
             wlen = total - lo
             in_block = jnp.arange(wlen) < bs
             scale = wlen / (total - lp)
+            # positional carries ride the live window, like x itself
+            wcarry = _carry_window(strat, carry, lo)
 
             if fused:
-                new_win, rng, steps_c, fwd_c, carry = run_blk(
+                new_win, rng, steps_c, fwd_c, wcarry = run_blk(
                     x[:, lo:], rng, state, jnp.asarray(sched[blk]),
-                    steps_c, fwd_c, carry, win_pos, in_block,
+                    steps_c, fwd_c, wcarry, win_pos, in_block,
                     jnp.float32(scale))
                 x = jax.lax.dynamic_update_slice_in_dim(x, new_win, lo,
                                                         axis=1)
@@ -681,6 +775,7 @@ class Decoder:
                     pos = jnp.tile(_pos, (reps, 1)) if reps > 1 else _pos
                     return win_fwd(w, pos, _tile_state(_state, reps))[0]
 
+                wcarry = strat.begin_block(wcarry, x[:, lo:], in_block)
                 for i in range(bs * 4):
                     x_win = x[:, lo:]
                     active = in_block[None, :] & \
@@ -688,13 +783,14 @@ class Decoder:
                     if not bool(jax.device_get(jnp.any(active))):
                         break
                     rng, step_rng = jax.random.split(rng)
-                    new_win, carry, fwd_n = strat.step(
-                        step_rng, carry, x_win, active, model_fn, cfg,
+                    new_win, wcarry, fwd_n = strat.step(
+                        step_rng, wcarry, x_win, active, model_fn, cfg,
                         dcfg, int(sched[blk, min(i, last)]))
                     x = jax.lax.dynamic_update_slice_in_dim(x, new_win, lo,
                                                             axis=1)
                     stats.steps += 1
                     stats.forward_equivalents += fwd_n * scale
+            carry = _carry_unwindow(strat, carry, wcarry, lo)
             # block committed: k/v from the live window (future context
             # kept), then valid length clipped to the committed block;
             # recurrent states advance over the block only
@@ -708,9 +804,7 @@ class Decoder:
         if fused:
             stats.steps = int(jax.device_get(steps_c))
             stats.forward_equivalents += float(jax.device_get(fwd_c))
-        pc = strat.phase_counts(carry)
-        if pc:
-            stats.phase_counts = pc
+        self._merge_carry_stats(stats, strat, carry)
         stats.wall_time = time.perf_counter() - t0
         return x, stats
 

@@ -1,0 +1,152 @@
+"""Confidence extrapolation / local determinism propagation
+(``extrapolate``) — the carry-ful strategy that SKIPS model forwards.
+
+Local Determinism Propagation (Kong et al., 2025) observes that a masked
+position whose confidence trajectory is rising steadily has, in
+practice, already settled on its argmax: re-scoring it buys nothing.
+This strategy hosts that observation on the ``Strategy.init_carry``
+protocol — the carry tracks, per canvas position,
+
+* ``ema``   (B, L) f32 — exponential moving average of the position's
+  max-probability confidence (decay ``dcfg.extrap_beta``);
+* ``slope`` (B, L) f32 — the EMA's last increment (its discrete slope);
+* ``cand``  (B, L) i32 — the argmax candidate from the last real
+  forward (what an early commit writes);
+* ``nobs``  (B, L) i32 — observation count (extrapolating off a single
+  sample is noise, not a trajectory: ``dcfg.extrap_min_obs`` gates it);
+
+plus a global observational ``skipped`` () f32 counter, surfaced as
+``SampleStats.skipped_forwards``.
+
+Per step, a position is *ready* when it has enough history and its
+extrapolated confidence ``ema + extrap_horizon · slope`` crosses
+``extrap_tau`` on a non-falling slope.  When every example in the batch
+can fill its commit width from ready positions (or is already done), the
+step commits the carried candidates straight from the carry and the
+model forward is SKIPPED outright: a ``lax.cond`` in the fused form (XLA
+executes no forward at runtime), a host ``device_get`` early-out in the
+host form — the decode's forward count genuinely drops.  Otherwise the
+step is EXACTLY vanilla confidence ("probability") decoding — one
+forward, commit the top-n by max-prob — plus the carry update, which is
+what makes the forward-reduction ablation a controlled comparison.
+
+The skip is necessarily batch-global — one batched forward serves every
+row, so a single not-ready row forces it — which makes small decode
+batches (serving latency, batch 1) the regime where the savings live;
+``benchmarks/ablation_carry.py`` measures exactly that regime.
+
+Accounting invariant (plain path): every step either pays 1 forward or
+skips 1, so ``steps == forward_equivalents + skipped_forwards``
+(parity-tested).  On the cached path forwards are window-pro-rated while
+``skipped_forwards`` stays a raw count of avoided model calls.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import DecodeConfig, ModelConfig
+from repro.core.confidence import pallas_enabled, score_logits
+from repro.core.strategies import (NEG, ModelFn, Strategy, commit_topn,
+                                   register_strategy)
+
+
+class ExtrapolationStrategy(Strategy):
+    """Confidence-trajectory extrapolation with forward skipping."""
+
+    name = "extrapolate"
+    positional_carry = True
+
+    def init_carry(self, cfg: ModelConfig, dcfg: DecodeConfig):
+        raise TypeError(
+            "strategy 'extrapolate' carries per-decode positional state; "
+            "it needs the canvas shape — decode through Decoder (which "
+            "calls init_carry_shaped), not the deprecated carry-less "
+            "entry points")
+
+    def init_carry_shaped(self, cfg: ModelConfig, dcfg: DecodeConfig,
+                          batch: int, length: int):
+        shape = (batch, length)
+        pos = (jnp.zeros(shape, jnp.float32),          # ema
+               jnp.zeros(shape, jnp.float32),          # slope
+               jnp.zeros(shape, jnp.int32),            # cand
+               jnp.zeros(shape, jnp.int32))            # nobs
+        return pos, (jnp.zeros((), jnp.float32),)      # skipped
+
+    def carry_stats(self, carry) -> Dict[str, float]:
+        _, (skipped,) = carry
+        return {"skipped_forwards": float(jax.device_get(skipped))}
+
+    # -- the two step halves, shared by the host and fused variants ------
+    def _plan(self, carry, x, active, dcfg: DecodeConfig, n):
+        """(ready, n_arr, skip): which positions may commit from the
+        carry, and whether EVERY example can fill its width that way."""
+        (ema, slope, _, nobs), _ = carry
+        pred = ema + dcfg.extrap_horizon * slope
+        ready = active & (pred >= dcfg.extrap_tau) & (slope >= 0.0) \
+            & (nobs >= dcfg.extrap_min_obs)
+        n_arr = jnp.broadcast_to(jnp.asarray(n, jnp.int32), (x.shape[0],))
+        need = jnp.minimum(n_arr, jnp.sum(active, axis=-1,
+                                          dtype=jnp.int32))
+        skip = jnp.all(jnp.sum(ready, axis=-1, dtype=jnp.int32) >= need)
+        return ready, pred, n_arr, skip
+
+    def _skip_commit(self, carry, x, ready, pred, n_arr):
+        """Commit the carried candidates of the top-n ready positions —
+        no model call.  The trajectory state is left as-is: remaining
+        ready positions keep committing from the carry on later steps
+        until a step needs a real forward again."""
+        (ema, slope, cand, nobs), (skipped,) = carry
+        new_x = commit_topn(x, pred, cand, ready, n_arr)
+        return new_x, ((ema, slope, cand, nobs), (skipped + 1.0,)), 0
+
+    def step(self, rng, carry, x, active, model_fn: ModelFn,
+             cfg: ModelConfig, dcfg: DecodeConfig, n) -> Tuple:
+        ready, pred, n_arr, skip = self._plan(carry, x, active, dcfg, n)
+        if bool(jax.device_get(skip)):         # host early-out
+            return self._skip_commit(carry, x, ready, pred, n_arr)
+        return self._forward(carry, x, active, model_fn, cfg, dcfg, n_arr)
+
+    def fused_step(self, rng, carry, x, active, model_fn: ModelFn,
+                   cfg: ModelConfig, dcfg: DecodeConfig, n) -> Tuple:
+        """Trace-safe form: the skip is a ``lax.cond``, so the compiled
+        program contains both branches but executes only the taken one —
+        a skipped step runs no forward on device either."""
+        ready, pred, n_arr, skip = self._plan(carry, x, active, dcfg, n)
+
+        def do_skip(_):
+            new_x, new_c, _ = self._skip_commit(carry, x, ready, pred,
+                                                n_arr)
+            return new_x, new_c, jnp.float32(0)
+
+        def do_forward(_):
+            new_x, new_c, fwd = self._forward(carry, x, active, model_fn,
+                                              cfg, dcfg, n_arr)
+            return new_x, new_c, jnp.float32(fwd)
+
+        return jax.lax.cond(skip, do_skip, do_forward, operand=None)
+
+    def _forward(self, carry, x, active, model_fn, cfg, dcfg, n_arr):
+        (ema, slope, cand, nobs), (skipped,) = carry
+        logits = model_fn(x)
+        s = score_logits(logits, pallas_enabled(dcfg))
+        # trajectories update wherever the model scored a *masked*
+        # position — the active block and the still-masked future blocks
+        # (by the time a later block activates, its positions already
+        # carry history); committed positions hold their last state
+        masked = x == cfg.mask_token_id
+        new_ema = jnp.where(masked,
+                            dcfg.extrap_beta * ema
+                            + (1.0 - dcfg.extrap_beta) * s.max_prob, ema)
+        new_slope = jnp.where(masked, new_ema - ema, slope)
+        new_cand = jnp.where(masked, s.argmax, cand)
+        new_nobs = jnp.where(masked, nobs + 1, nobs)
+        new_x = commit_topn(x, jnp.where(active, s.max_prob, NEG),
+                            s.argmax, active, n_arr)
+        return new_x, ((new_ema, new_slope, new_cand, new_nobs),
+                       (skipped,)), 1
+
+
+register_strategy(ExtrapolationStrategy())

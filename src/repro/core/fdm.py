@@ -46,8 +46,6 @@ def fdm_select(x: jnp.ndarray, logits: jnp.ndarray, active: jnp.ndarray,
     n_arr = jnp.broadcast_to(jnp.asarray(n, jnp.int32), (b,))
 
     c_local_log = jnp.log(jnp.maximum(s.max_prob, 1e-30))     # Eq. 11
-    conf = jnp.where(active, s.max_prob, NEG)
-    ranks_all = rank_desc(conf)                               # over active
 
     # Λ construction: prune p ≤ γ, rank by C_local, keep K contenders for
     # the n-th slot; the first n-1 slots are the unconditional "safe set".

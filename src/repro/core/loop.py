@@ -58,7 +58,7 @@ import jax.numpy as jnp
 from jax.experimental import io_callback
 
 from repro.configs.base import DecodeConfig, ModelConfig
-from repro.core.strategies import Strategy, as_strategy
+from repro.core.strategies import as_strategy
 
 
 def drive_block(strategy, model_fn: Callable, cfg: ModelConfig,
@@ -79,14 +79,23 @@ def drive_block(strategy, model_fn: Callable, cfg: ModelConfig,
     step: either a scalar (constant width) or a ``(S,)`` int32 *schedule*
     indexed by the step-within-block (``Decoder._geometry`` emits one that
     spreads ``dcfg.steps`` exactly across blocks, remainders included).
-    The index clamps to the last entry, so overrunning the schedule —
-    strategies that ignore ``n`` commit at their own pace — stays safe.
+    The index clamps to the last entry, so overrunning the schedule stays
+    safe — which now matters for more than width-ignoring strategies:
+    revoking strategies (``wino_r``) UN-commit tokens, so a block can
+    legitimately need more steps than its schedule budgeted.
+    ``_geometry`` pads schedule rows with their final width (never zero)
+    so those overrun steps keep a progress guarantee, and the
+    ``block_size·4`` cap plus the revocation budget bound the overrun.
     """
     strategy = as_strategy(strategy)
     mask_id = cfg.mask_token_id
     max_steps = dcfg.block_size * 4           # matches the host-loop guard
     sched = jnp.asarray(n_per_step, jnp.int32)
     start = steps
+    # block-entry hook (traceable): carry-ful strategies reset the state
+    # that must not leak across a block boundary (WINO revocation drops
+    # its pending set — a streamed block can never be re-opened)
+    carry = strategy.begin_block(carry, x, in_block)
 
     def active_of(canvas):
         return in_block[None, :] & (canvas == mask_id)

@@ -9,16 +9,27 @@ sampler.  The protocol:
   * ``init_carry(cfg, dcfg) -> carry`` — per-decode state threaded through
     every step and across blocks.  Must be a fixed-shape pytree (it rides
     the ``lax.while_loop`` carry on the fused path); ``()`` for stateless
-    strategies.
+    strategies.  Strategies whose carry is *positional* (per canvas
+    column) override ``init_carry_shaped`` instead and set
+    ``positional_carry = True`` — see that method's docstring for the
+    required ``(positional, global)`` carry structure.
+  * ``begin_block(carry, x, in_block) -> carry`` — traceable block-entry
+    hook, fired by every driver before a block's first step (WINO
+    revocation uses it to drop cross-block pending commits so streaming
+    stays final-commit-only).  Default: identity.
   * ``step(rng, carry, x, active, model_fn, cfg, dcfg, n)
     -> (new_x, new_carry, forwards)`` — one denoising step.  May touch the
     host (sync, early-out) — this is the variant the legacy host loop runs.
   * ``fused_step(...)`` — same signature, fully traceable (safe inside
     ``lax.while_loop``); defaults to ``step``.  Override when ``step``
     needs host control flow (FDM-A's early-out becomes a ``lax.cond``).
-  * metadata: ``supports_fused`` (has a trace-safe form at all) and
+  * host-side stats: ``phase_counts(carry)`` and ``carry_stats(carry)``
+    read observational counters (phase histograms, revocation and
+    skipped-forward counts) out of the *final* carry into ``SampleStats``.
+  * metadata: ``supports_fused`` (has a trace-safe form at all),
     ``forwards_per_step(dcfg)`` (nominal batched-forward count per step —
-    an upper bound for adaptive strategies).
+    an upper bound for adaptive strategies), ``carry_is_observational``
+    and ``positional_carry`` (see the attribute comments).
 
 Registered strategies (``register_strategy`` / ``resolve_strategy``):
 
@@ -27,6 +38,13 @@ Registered strategies (``register_strategy`` / ``resolve_strategy``):
 * Dynamic baselines (§5, Table 3): **EB** (Ben-Hamu et al., 2025)
   entropy-bounded parallel unmasking; **WINO** (Hong et al., 2025)
   wide-in narrow-out commit-then-revoke.
+* Carry-ful builtins (the first strategies to use a decode-steering
+  carry): **wino_r** (``core/wino.py``) — WINO revocation with
+  cross-step pending-commit state and a per-request revocation budget,
+  one forward per step; **extrapolate** (``core/extrapolate.py``) —
+  confidence-trajectory extrapolation / local determinism propagation
+  (Kong et al., 2025): positions whose confidence trajectory
+  extrapolates past a threshold commit early *without* a fresh forward.
 * **FDM / FDM-A** (the paper's contribution) register themselves from
   ``core/fdm.py`` / ``core/fdm_a.py``.
 
@@ -45,7 +63,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import DecodeConfig, ModelConfig
-from repro.core.confidence import (Scores, local_confidence, pallas_enabled,
+from repro.core.confidence import (local_confidence, pallas_enabled,
                                    score_logits)
 
 ModelFn = Callable[[jnp.ndarray], jnp.ndarray]   # tokens (B,L) -> logits
@@ -92,6 +110,12 @@ class Strategy:
     # True = the carry only *records* (stats counters like FDM-A's phase
     # histogram) and never changes the decode; safe to drop/reset.  False
     # (default) = the carry steers decoding and must be threaded intact.
+    positional_carry: bool = False
+    # True = the carry is the 2-tuple ``(positional, global)`` described
+    # by ``init_carry_shaped``: the positional part's leaves are
+    # column-aligned with the canvas, so the cached path can slice them
+    # alongside its live window.  False (default) = the carry is opaque
+    # and rides every driver whole.
 
     def forwards_per_step(self, dcfg: DecodeConfig) -> float:
         """Nominal batched-forward count per step (upper bound for
@@ -103,11 +127,43 @@ class Strategy:
         """Per-decode strategy state.  Fixed-shape pytree; ``()`` = none."""
         return ()
 
+    def init_carry_shaped(self, cfg: ModelConfig, dcfg: DecodeConfig,
+                          batch: int, length: int):
+        """Shape-aware carry init: ``(batch, length)`` is the (B, L) of
+        the canvas the decode will run on (prompt + generation).
+
+        Strategies with per-position state (``positional_carry = True``)
+        override THIS method and must return the 2-tuple
+        ``(positional, global)`` where every leaf of ``positional`` has
+        leading shape ``(B, L, ...)`` column-aligned with the canvas
+        (the cached path slices these to its live window and writes them
+        back per block) and ``global`` is any fixed-shape pytree that
+        rides every driver whole (budgets, counters).  The default
+        delegates to the shape-free ``init_carry``."""
+        return self.init_carry(cfg, dcfg)
+
+    def begin_block(self, carry, x, in_block):
+        """Traceable block-entry hook: called by every driver (host,
+        per-block fused, whole-request fused, cached) right before a
+        block's first denoising step.  ``in_block`` is the (L,) bool
+        column mask of the new block over ``x``'s columns.  Strategies
+        with cross-block state that must not leak into a freshly started
+        block (WINO revocation's pending commits — a block that already
+        streamed may never be re-opened) reset it here."""
+        return carry
+
     def phase_counts(self, carry) -> Dict[str, int]:
         """Host-side: per-phase step counts extracted from the *final*
         carry, for ``SampleStats.phase_counts``.  Strategies that count
         phases on-device (FDM-A accumulates a ``(4,)`` int32 in its carry)
         override this; the default reports none."""
+        return {}
+
+    def carry_stats(self, carry) -> Dict[str, float]:
+        """Host-side: observational counters extracted from the *final*
+        carry and merged onto same-named ``SampleStats`` fields
+        (``revocations``, ``skipped_forwards``).  One ``device_get`` at
+        the end of decode — never per step."""
         return {}
 
     def step(self, rng, carry, x, active, model_fn: ModelFn,
@@ -207,13 +263,15 @@ def unregister_strategy(name: str) -> None:
 
 
 def _ensure_builtins() -> None:
-    """FDM/FDM-A live in their own modules and register at import."""
+    """Builtins that live in their own modules register at import."""
     global _BUILTINS_LOADED
     if _BUILTINS_LOADED:
         return
     _BUILTINS_LOADED = True
+    import repro.core.extrapolate    # noqa: F401  (registers "extrapolate")
     import repro.core.fdm            # noqa: F401  (registers "fdm")
     import repro.core.fdm_a          # noqa: F401  (registers "fdm_a")
+    import repro.core.wino           # noqa: F401  (registers "wino_r")
 
 
 def _load_entry_points() -> None:

@@ -1,0 +1,125 @@
+"""WINO revocation — the first carry-ful builtin strategy (``wino_r``).
+
+The stateless ``wino`` baseline (``core/strategies.py``) verifies its
+wide-in commits with a SECOND forward inside the same step: commit
+everything above τ₁, re-forward, revoke what fell below τ₂ — 2 forwards
+per step.  The carry-ful variant amortises verification across steps
+instead (the ``Strategy.init_carry`` protocol makes the cross-step state
+free to host):
+
+* **commit (wide-in)** — every active position above τ₁, plus the
+  schedule's top-``n`` (progress guarantee), is committed and flagged
+  *pending* in the carry;
+* **verify (narrow-out, next step)** — the next step's ONE regular
+  forward re-scores the pending tokens in their updated context; a
+  pending token whose re-scored probability fell below
+  ``wino_revoke_tau`` is revoked:
+  re-masked on the canvas and re-decoded by a later step, spending one
+  unit of the per-example revocation budget.  Survivors are confirmed
+  and leave the pending set.
+
+One forward per step, same as plain confidence decoding — the revocation
+machinery rides the forward the step pays anyway.
+
+Consequences for the loop machinery (see ``Decoder._geometry`` and
+``drive_block``): a step's NET commit count can be negative, so blocks
+may legitimately run past their commit-width schedule — the schedule
+pads with its final width (never zero) so overrun steps keep making
+progress, and the ``block_size·4`` safety cap plus the finite budget
+bound the overrun.  Revocation is strictly block-local: ``begin_block``
+clears the pending set, so a committed block (already streamed via
+``on_block_committed``) can never be re-opened — streaming remains
+final-commit-only.  Commits made on a block's last step exit the block
+unverified (the loop ends when no masks remain); verification is
+best-effort within the block's step budget, exactly WINO's pipelined
+check.
+
+The carry is positional (``positional_carry = True``):
+
+* positional part: ``pending`` (B, L) bool — the positions committed
+  but not yet re-verified (sliced to the live window on the cached
+  path);
+* global part: ``budget`` (B,) i32 — remaining revocations per example;
+  ``revoked`` () i32 — observational total, read into
+  ``SampleStats.revocations``.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import DecodeConfig, ModelConfig
+from repro.core.confidence import pallas_enabled, score_logits
+from repro.core.strategies import (NEG, ModelFn, Strategy, rank_desc,
+                                   register_strategy)
+
+
+class WINORevocationStrategy(Strategy):
+    """WINO-style commit-then-revoke with cross-step carry state.
+
+    The step is pure vectorised array math (the budget cap is a ranking,
+    not a host loop), so it is trace-safe as written — ``fused_step`` is
+    the default ``step`` and all three drivers are bit-identical.
+    """
+
+    name = "wino_r"
+    positional_carry = True
+
+    def init_carry(self, cfg: ModelConfig, dcfg: DecodeConfig):
+        raise TypeError(
+            "strategy 'wino_r' carries per-decode positional state; it "
+            "needs the canvas shape — decode through Decoder (which calls "
+            "init_carry_shaped), not the deprecated carry-less entry "
+            "points")
+
+    def init_carry_shaped(self, cfg: ModelConfig, dcfg: DecodeConfig,
+                          batch: int, length: int):
+        pending = jnp.zeros((batch, length), bool)
+        budget = jnp.full((batch,), dcfg.wino_revoke_budget, jnp.int32)
+        revoked = jnp.zeros((), jnp.int32)
+        return (pending,), (budget, revoked)
+
+    def begin_block(self, carry, x, in_block):
+        # pending commits never cross a block boundary: the previous
+        # block has already streamed, so its last-step commits are final
+        (pending,), glob = carry
+        return (jnp.zeros_like(pending),), glob
+
+    def carry_stats(self, carry) -> Dict[str, float]:
+        _, (_, revoked) = carry
+        return {"revocations": float(jax.device_get(revoked))}
+
+    def step(self, rng, carry, x, active, model_fn: ModelFn,
+             cfg: ModelConfig, dcfg: DecodeConfig, n) -> Tuple:
+        (pending,), (budget, revoked) = carry
+        logits = model_fn(x)
+        s = score_logits(logits, pallas_enabled(dcfg))
+
+        # -- narrow-out: verify the pending commits under the fresh scores
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        p_tok = jnp.exp(jnp.take_along_axis(
+            logp, x[..., None], axis=-1)[..., 0])
+        fail = pending & (p_tok < dcfg.wino_revoke_tau)
+        # budget cap: revoke the worst offenders (lowest re-score) first
+        fail_rank = rank_desc(jnp.where(fail, -p_tok, NEG))
+        revoke = fail & (fail_rank < budget[:, None])
+        x = jnp.where(revoke, cfg.mask_token_id, x)
+        budget = budget - jnp.sum(revoke, axis=-1, dtype=jnp.int32)
+        revoked = revoked + jnp.sum(revoke, dtype=jnp.int32)
+
+        # -- wide-in: τ₁ overflow plus the schedule's top-n floor.
+        # `active` is the step-entry mask set: just-revoked positions are
+        # NOT in it, so they re-decode on a later step with a fresh score.
+        n_arr = jnp.broadcast_to(jnp.asarray(n, jnp.int32), (x.shape[0],))
+        conf = jnp.where(active, s.max_prob, NEG)
+        commit = active & ((s.max_prob > dcfg.wino_tau1)
+                           | (rank_desc(conf) < n_arr[:, None]))
+        x = jnp.where(commit, s.argmax, x)
+        # every previously-pending position was verified (or revoked)
+        # this step, so the new pending set is exactly this step's commits
+        return x, ((commit,), (budget, revoked)), 1
+
+
+register_strategy(WINORevocationStrategy())

@@ -143,5 +143,8 @@ def confidence_fused(logits: jnp.ndarray, interpret: bool = True
         interpret=interpret,
     )(flat)
     argmax, maxp, margin, negent = outs
-    unflat = lambda a: a[:rows].reshape(shape[:-1])
+
+    def unflat(a):
+        return a[:rows].reshape(shape[:-1])
+
     return (unflat(argmax), unflat(maxp), unflat(margin), unflat(negent))

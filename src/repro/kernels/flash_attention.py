@@ -15,8 +15,6 @@ restricting the grid), which turns O(L²) into O(L·W) work.
 from __future__ import annotations
 
 import functools
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
@@ -92,7 +90,9 @@ def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     lk = k.shape[1]
     scale = d ** -0.5
     # fold (B, H) and pad sequence to tile multiples
-    fold = lambda a: a.transpose(0, 2, 1, 3).reshape(b * h, a.shape[1], d)
+    def fold(a):
+        return a.transpose(0, 2, 1, 3).reshape(b * h, a.shape[1], d)
+
     qf, kf, vf = fold(q), fold(k), fold(v)
     pq, pk = (-lq) % QTILE, (-lk) % KTILE
     if pq:

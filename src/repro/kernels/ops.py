@@ -9,8 +9,6 @@ suite + benchmarks.  On a real TPU set ``use_pallas(True)`` (or env
 from __future__ import annotations
 
 import os
-from typing import Tuple
-
 import jax
 import jax.numpy as jnp
 

@@ -77,8 +77,10 @@ def selective_scan(x: jnp.ndarray, delta: jnp.ndarray, b_sel: jnp.ndarray,
     a = -jnp.exp(a_log.astype(jnp.float32))
     pad_t = (-l) % T_TILE
     pad_d = (-di) % DI_TILE
-    pad3 = lambda z: jnp.pad(z, ((0, 0), (0, pad_t), (0, pad_d))) \
-        if pad_d else jnp.pad(z, ((0, 0), (0, pad_t), (0, 0)))
+    def pad3(z):
+        return jnp.pad(z, ((0, 0), (0, pad_t), (0, pad_d))) \
+            if pad_d else jnp.pad(z, ((0, 0), (0, pad_t), (0, 0)))
+
     xp, dp = pad3(x), pad3(delta)
     bp = jnp.pad(b_sel, ((0, 0), (0, pad_t), (0, 0)))
     cp = jnp.pad(c_sel, ((0, 0), (0, pad_t), (0, 0)))

@@ -123,7 +123,9 @@ def dryrun(arch: str, shape_name: str, multi_pod: bool = False,
             micro = int(o[len("microbatch"):] or 1)
     # per-layer deltas clamped at 0: XLA optimization variance between the
     # two compiles can otherwise produce (meaningless) negative terms
-    ext = lambda lo, hi: (lo + n_extra * max(0.0, hi - lo)) * micro
+    def ext(lo, hi):
+        return (lo + n_extra * max(0.0, hi - lo)) * micro
+
     flops = ext(m_lo[0], m_hi[0])
     byts = ext(m_lo[1], m_hi[1])
     coll = ext(m_lo[2], m_hi[2])

@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import re
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 from repro.configs.base import ModelConfig
 from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS
@@ -54,7 +54,6 @@ def _shape_bytes(type_str: str) -> int:
 def collective_bytes(hlo_text: str) -> Tuple[int, Dict[str, int]]:
     """Sum output sizes of every collective op in the HLO text."""
     per_kind: Dict[str, int] = {k: 0 for k in _COLL_KINDS}
-    ops = 0
     for line in hlo_text.splitlines():
         stripped = line.strip()
         m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^=]*?\)|\S+)\s+"

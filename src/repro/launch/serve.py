@@ -12,7 +12,6 @@ from __future__ import annotations
 
 import argparse
 
-import jax
 import numpy as np
 
 from repro.configs import DecodeConfig, TrainConfig, get_config

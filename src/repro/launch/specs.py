@@ -13,10 +13,10 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.configs.base import ModelConfig, TrainConfig
+from repro.configs.base import ModelConfig
 from repro.models.model import init_decode_state, init_model
 from repro.parallel.sharding import (batch_pspec, cache_pspecs, data_axes,
-                                     param_pspecs, seq_pspec)
+                                     param_pspecs)
 from repro.training.optimizer import adamw_init
 
 # shape id -> (step kind, seq_len, global_batch)
@@ -83,10 +83,6 @@ def input_specs(cfg: ModelConfig, shape_name: str, mesh,
             p_sds = jax.tree.map(
                 lambda s: jax.ShapeDtypeStruct(s.shape, jnp.bfloat16)
                 if s.dtype == jnp.float32 else s, p_sds)
-    bspec = batch_pspec(mesh)
-    long_ctx = shape_name == "long_500k"
-    tok_spec = seq_pspec(mesh) if long_ctx else bspec
-
     if kind == "train":
         opt_sds = jax.eval_shape(adamw_init, p_sds)
         opt_spec = type(opt_sds)(step=P(), mu=p_spec, nu=p_spec)

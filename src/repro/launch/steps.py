@@ -12,9 +12,6 @@ from __future__ import annotations
 
 from typing import Callable, Dict, Tuple
 
-import jax
-import jax.numpy as jnp
-
 from repro.configs.base import ModelConfig, TrainConfig
 from repro.core.confidence import score_logits, score_logits_sharded
 from repro.models.layers import lm_head

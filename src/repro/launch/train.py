@@ -8,9 +8,7 @@ from __future__ import annotations
 
 import argparse
 
-import jax
-
-from repro.configs import DecodeConfig, TrainConfig, get_config
+from repro.configs import TrainConfig, get_config
 from repro.data import CharTokenizer, TaskDataset
 from repro.training.trainer import train
 

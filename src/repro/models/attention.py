@@ -26,8 +26,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.models.layers import (Params, apply_rope, compute_dtype,
-                                 dense_init, rms_norm_headwise)
+from repro.models.layers import (Params, apply_rope, dense_init,
+                                 rms_norm_headwise)
 from repro.parallel.ctx import constrain
 
 

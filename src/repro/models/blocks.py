@@ -23,9 +23,9 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import ssm as ssm_lib
-from repro.models.attention import (KVCache, attention_decode,
-                                    attention_forward, attention_window,
-                                    init_attention, init_cache)
+from repro.models.attention import (attention_decode, attention_forward,
+                                    attention_window, init_attention,
+                                    init_cache)
 from repro.models.layers import (Params, apply_mlp, apply_norm, init_mlp,
                                  init_norm)
 from repro.models.moe import init_moe, moe_forward

@@ -6,7 +6,7 @@ at use sites; all matmuls accumulate in float32 via ``preferred_element_type``.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -19,7 +19,7 @@ TPU adaptation notes
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional, Tuple
+from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -88,14 +88,15 @@ def mlstm_forward(p: Params, x, cfg: ModelConfig,
     ``state`` seeds the scan (frozen-prefix cached decoding);
     ``return_state=True`` also returns the end-of-sequence state.
     """
-    s = cfg.ssm
     dt = x.dtype
     inner, q, k, v, i_pre, f_pre = _mlstm_heads(p, x, cfg)
     b, l, h, dh = q.shape
     # pad to a chunk multiple
     pad = (-l) % CHUNK
     if pad:
-        zf = lambda a: jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+        def zf(a):
+            return jnp.pad(a,
+                           ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
         q, k, v = zf(q), zf(k), zf(v)
         # padded steps must be state-IDENTITY (forget ≈ 1, input ≈ 0) so
         # the final carry is exact for cached decoding; padded OUTPUTS are
@@ -105,7 +106,10 @@ def mlstm_forward(p: Params, x, cfg: ModelConfig,
         f_pre = jnp.pad(f_pre, ((0, 0), (0, pad), (0, 0)),
                         constant_values=30.0)
     nc = q.shape[1] // CHUNK
-    rs = lambda a: a.reshape(b, nc, CHUNK, *a.shape[2:]).swapaxes(0, 1)
+
+    def rs(a):
+        return a.reshape(b, nc, CHUNK, *a.shape[2:]).swapaxes(0, 1)
+
     qc, kc, vc = rs(q), rs(k), rs(v)                  # (nc,B,C,H,dh)
     ic, fc = rs(i_pre), rs(f_pre)                     # (nc,B,C,H)
 
@@ -313,7 +317,6 @@ def init_mamba(rng, cfg: ModelConfig) -> Params:
 
 
 def _mamba_inputs(p: Params, x, cfg: ModelConfig):
-    s = cfg.ssm
     dt_ = x.dtype
     xz = x @ p["w_in"].astype(dt_)
     xin, z = jnp.split(xz, 2, axis=-1)                   # (B,L,di) each
@@ -434,7 +437,6 @@ def selective_last_state(p: Params, xc, cfg: ModelConfig, h0):
 def mamba_step(p: Params, x, cfg: ModelConfig,
                state: MambaState) -> Tuple[jnp.ndarray, MambaState]:
     """One-token decode with rolling conv buffer + diagonal state update."""
-    s = cfg.ssm
     xin, z = _mamba_inputs(p, x, cfg)                    # (B,1,di)
     buf = jnp.concatenate([state.conv, xin], axis=1)     # (B,K,di)
     w = p["conv_w"].astype(x.dtype)

@@ -134,8 +134,8 @@ class ServingEngine:
         self._rng, rng = jax.random.split(self._rng)
         cb = None
         if self.on_block_committed is not None:
-            cb = lambda blk, lo, hi, x: \
-                self.on_block_committed(batch, blk, lo, hi, x)
+            def cb(blk, lo, hi, x):
+                return self.on_block_committed(batch, blk, lo, hi, x)
         out, stats = self.decoder.generate(rng, jnp.asarray(prompts),
                                            on_block_committed=cb)
         out = np.asarray(jax.device_get(out))
@@ -160,11 +160,15 @@ class ServingEngine:
             # sum(phase_counts) == steps invariant per request and keeps
             # replica rows from inflating the reported phase work
             rows = len(prompts)
+            # revocations / skipped_forwards are whole-batch totals like
+            # forwards: each real request gets its share
             req.stats = dataclasses.replace(
                 stats,
                 tokens_generated=self.dcfg.gen_length,
                 forward_equivalents=stats.forward_equivalents / real,
                 wall_time=stats.wall_time / real,
+                revocations=stats.revocations / real,
+                skipped_forwards=stats.skipped_forwards / real,
                 phase_counts={k: v / rows
                               for k, v in stats.phase_counts.items()})
             req.finish_time = now
@@ -199,4 +203,8 @@ class ServingEngine:
                 "p95_latency_s": float(np.percentile(lat, 95)),
                 "throughput_tps": toks / max(span, 1e-9),
                 "decode_tps": toks / max(decode_s, 1e-9),
-                "forward_equivalents": float(fwds)}
+                "forward_equivalents": float(fwds),
+                "revocations": float(sum(r.stats.revocations
+                                         for r in reqs)),
+                "skipped_forwards": float(sum(r.stats.skipped_forwards
+                                              for r in reqs))}

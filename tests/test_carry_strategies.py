@@ -1,0 +1,205 @@
+"""The carry-ful builtin strategies (core/wino.py, core/extrapolate.py):
+three-driver parity for plain and cached decoding, revocation / skipped-
+forward accounting consistency, schedule-overrun (net-commit) geometry,
+and the serving-engine stats plumbing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import DecodeConfig, get_config
+from repro.core import Decoder
+from repro.models.model import init_model
+from repro.serving import ServingEngine
+
+CFG = get_config("llada-8b").reduced()
+
+DRIVERS = {
+    "host": dict(fused_loop=False),
+    "block": dict(fused_loop=True, fused_blocks=False),
+    "request": dict(fused_loop=True, fused_blocks=True),
+}
+
+# the untrained tiny model's confidences sit near 1/vocab, so knobs that
+# exercise each mechanism must be forced: extrap_tau=0.0 makes every
+# observed position's trajectory qualify (skips fire), wino_revoke_tau
+# high makes every pending commit fail verification (revocations fire)
+SKIP_KNOBS = dict(extrap_tau=0.0, extrap_min_obs=1)
+REVOKE_KNOBS = dict(wino_revoke_tau=0.99, wino_revoke_budget=4)
+
+
+@pytest.fixture(scope="module")
+def model():
+    params = init_model(jax.random.PRNGKey(0), CFG)
+    return params
+
+
+def _dcfg(**over):
+    base = dict(gen_length=16, block_size=8, steps=16,
+                strategy="probability")
+    base.update(over)
+    return DecodeConfig(**base)
+
+
+def _run(params, dcfg, prompts=None, cached=False):
+    prompts = prompts if prompts is not None \
+        else jnp.full((3, 6), 2, jnp.int32)
+    dec = Decoder(params, CFG, dcfg)
+    fn = dec.generate_cached if cached else dec.generate
+    out, stats = fn(jax.random.PRNGKey(0), prompts)
+    return np.asarray(out), stats
+
+
+# --------------------------------------------------------------------------
+# parity: both carry-ful strategies, all three plain drivers, bit-for-bit
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("strategy,knobs", [
+    ("wino_r", REVOKE_KNOBS), ("extrapolate", SKIP_KNOBS)])
+def test_plain_three_driver_parity(model, strategy, knobs):
+    runs = {}
+    for name, over in DRIVERS.items():
+        runs[name] = _run(model, _dcfg(strategy=strategy, **knobs, **over))
+    out_ref, s_ref = runs["host"]
+    assert not (out_ref == CFG.mask_token_id).any()
+    for name in ("block", "request"):
+        out, s = runs[name]
+        np.testing.assert_array_equal(out, out_ref, err_msg=name)
+        assert s.steps == s_ref.steps, name
+        assert s.forward_equivalents == \
+            pytest.approx(s_ref.forward_equivalents), name
+        assert s.revocations == s_ref.revocations, name
+        assert s.skipped_forwards == s_ref.skipped_forwards, name
+
+
+@pytest.mark.parametrize("strategy,knobs", [
+    ("wino_r", REVOKE_KNOBS), ("extrapolate", SKIP_KNOBS)])
+def test_cached_fused_host_parity(model, strategy, knobs):
+    """The positional carry is sliced to the live window and written back
+    per block — identically under the fused and host cached drivers."""
+    outs = []
+    for fused in (True, False):
+        dcfg = _dcfg(strategy=strategy, fused_loop=fused, **knobs)
+        outs.append(_run(model, dcfg, cached=True))
+    (out_f, s_f), (out_h, s_h) = outs
+    np.testing.assert_array_equal(out_f, out_h)
+    assert not (out_f == CFG.mask_token_id).any()
+    assert s_f.steps == s_h.steps
+    assert s_f.forward_equivalents == pytest.approx(s_h.forward_equivalents)
+    assert s_f.revocations == s_h.revocations
+    assert s_f.skipped_forwards == s_h.skipped_forwards
+
+
+# --------------------------------------------------------------------------
+# accounting: the new SampleStats counters sum consistently
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("driver", sorted(DRIVERS))
+def test_extrapolate_skip_accounting(model, driver):
+    """Every step either pays one forward or skips one, so on the plain
+    path steps == forward_equivalents + skipped_forwards — and with the
+    threshold floored, skips genuinely happen."""
+    dcfg = _dcfg(strategy="extrapolate", **SKIP_KNOBS, **DRIVERS[driver])
+    _, s = _run(model, dcfg)
+    assert s.skipped_forwards > 0
+    assert s.steps == pytest.approx(
+        s.forward_equivalents + s.skipped_forwards)
+
+
+def test_extrapolate_never_skipping_matches_vanilla(model):
+    """With an unreachable threshold the strategy IS vanilla confidence
+    decoding — bit-identical to "probability", zero skips.  This is the
+    controlled-baseline property the ablation benchmark relies on."""
+    out_e, s_e = _run(model, _dcfg(strategy="extrapolate", extrap_tau=1.1))
+    out_p, s_p = _run(model, _dcfg(strategy="probability"))
+    np.testing.assert_array_equal(out_e, out_p)
+    assert s_e.skipped_forwards == 0
+    assert s_e.steps == s_p.steps
+    assert s_e.forward_equivalents == pytest.approx(s_p.forward_equivalents)
+
+
+@pytest.mark.parametrize("driver", sorted(DRIVERS))
+def test_wino_r_revocation_accounting(model, driver):
+    """wino_r pays exactly one forward per step (the stateless baseline
+    pays two), revokes within its per-example budget, and still resolves
+    every mask."""
+    b = 3
+    dcfg = _dcfg(strategy="wino_r", **REVOKE_KNOBS, **DRIVERS[driver])
+    out, s = _run(model, dcfg, prompts=jnp.full((b, 6), 2, jnp.int32))
+    assert not (out == CFG.mask_token_id).any()
+    assert s.forward_equivalents == pytest.approx(s.steps)
+    assert 0 < s.revocations <= b * REVOKE_KNOBS["wino_revoke_budget"]
+    # each revocation un-commits one token that a later step re-commits,
+    # so the decode runs extra steps beyond the 16 scheduled
+    assert s.steps > 16
+
+
+def test_wino_r_zero_budget_never_revokes(model):
+    dcfg = _dcfg(strategy="wino_r", wino_revoke_tau=0.99,
+                 wino_revoke_budget=0)
+    out, s = _run(model, dcfg)
+    assert s.revocations == 0
+    assert s.steps == 16
+    assert not (out == CFG.mask_token_id).any()
+
+
+@pytest.mark.parametrize("driver", sorted(DRIVERS))
+def test_wino_r_overruns_remainder_schedule_safely(model, driver):
+    """Net-commit geometry: revocation pushes blocks past their schedule
+    rows; the rows pad with their final width (never zero), so overrun
+    steps keep committing and the decode still terminates mask-free —
+    the zero-padded seed schedule would stall until the safety cap."""
+    dcfg = _dcfg(gen_length=16, block_size=4, steps=10, strategy="wino_r",
+                 **REVOKE_KNOBS, **DRIVERS[driver])
+    out, s = _run(model, dcfg, prompts=jnp.full((2, 6), 2, jnp.int32))
+    assert not (out == CFG.mask_token_id).any()
+    assert s.revocations > 0
+    assert s.steps < 4 * 4 * 4       # well inside num_blocks · bs·4
+
+
+def test_carry_ful_strategies_reject_legacy_entry_points(model):
+    """The deprecated carry-less signatures cannot thread a positional
+    carry; they must refuse loudly, not silently mis-decode."""
+    from repro.core.strategies import get_strategy, resolve_strategy
+    for name in ("wino_r", "extrapolate"):
+        with pytest.raises(TypeError, match="per-decode"):
+            get_strategy(name)(jax.random.PRNGKey(0), None, None, None,
+                               CFG, _dcfg(), 1)
+        strat = resolve_strategy(name)
+        with pytest.raises(TypeError, match="per-decode"):
+            strat.init_carry(CFG, _dcfg())
+
+
+# --------------------------------------------------------------------------
+# serving engine: the new counters are pro-rated like forwards
+# --------------------------------------------------------------------------
+
+def test_serving_pro_rates_skipped_forwards(model):
+    dcfg = _dcfg(gen_length=8, block_size=8, steps=8,
+                 strategy="extrapolate", **SKIP_KNOBS)
+    engine = ServingEngine(model, CFG, dcfg, max_batch=4, length_bucket=8)
+    rids = [engine.submit(np.full((6,), 3, np.int32)) for _ in range(3)]
+    engine.run_until_idle()
+    stats = [engine.result(r).stats for r in rids]
+    total = sum(s.skipped_forwards for s in stats)
+    assert total > 0
+    # batch total split evenly over the 3 real requests
+    assert stats[0].skipped_forwards == pytest.approx(total / 3)
+    summ = engine.summary()
+    assert summ["skipped_forwards"] == pytest.approx(total)
+    assert summ["revocations"] == 0
+    for s in stats:
+        assert s.steps == pytest.approx(
+            s.forward_equivalents * 3 + s.skipped_forwards * 3)
+
+
+def test_serving_pro_rates_revocations(model):
+    dcfg = _dcfg(gen_length=8, block_size=8, steps=8, strategy="wino_r",
+                 **REVOKE_KNOBS)
+    engine = ServingEngine(model, CFG, dcfg, max_batch=2, length_bucket=8)
+    rids = [engine.submit(np.full((6,), 3, np.int32)) for _ in range(2)]
+    engine.run_until_idle()
+    stats = [engine.result(r).stats for r in rids]
+    total = sum(s.revocations for s in stats)
+    assert total > 0
+    assert engine.summary()["revocations"] == pytest.approx(total)

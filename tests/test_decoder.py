@@ -13,8 +13,9 @@ import pytest
 
 from repro.configs import DecodeConfig, get_config
 from repro.core import (Decoder, Strategy, available_strategies,
-                        commit_topn, decode_cache_info, generate,
-                        generate_cached, get_strategy, register_strategy,
+                        commit_topn, decode_cache_info, decode_cache_scope,
+                        generate, generate_cached, get_strategy,
+                        register_strategy, reset_decode_cache_stats,
                         resolve_strategy, score_logits, unregister_strategy)
 from repro.core.decoder import RunnerCache
 from repro.models.model import forward, init_model
@@ -144,21 +145,57 @@ def test_get_strategy_legacy_shim_still_callable(model):
 def test_cross_call_cache_zero_recompiles(model):
     """A second decode with the same params — even through a *new*
     Decoder, as the shims do — must neither build nor trace anything,
-    in both the plain and cached paths."""
+    in both the plain and cached paths.  Runs against a scoped fresh
+    cache so the counter assertions can't flake on test ordering (the
+    process-wide counters see every other test's decodes)."""
     params, _ = model
     prompts = jnp.full((2, 6), 2, jnp.int32)
-    dcfg = _dcfg()
-    d1 = Decoder(params, CFG, dcfg)
-    d1.generate(jax.random.PRNGKey(0), prompts)
-    d1.generate_cached(jax.random.PRNGKey(0), prompts)
-    before = decode_cache_info()
-    d2 = Decoder(params, CFG, _dcfg())          # fresh but equal config
-    d2.generate(jax.random.PRNGKey(1), prompts)
-    d2.generate_cached(jax.random.PRNGKey(1), prompts)
-    after = decode_cache_info()
-    assert after.traces == before.traces, "recompiled on repeat decode"
-    assert after.misses == before.misses, "rebuilt a cached runner"
-    assert after.hits > before.hits
+    with decode_cache_scope():
+        d1 = Decoder(params, CFG, _dcfg())
+        d1.generate(jax.random.PRNGKey(0), prompts)
+        d1.generate_cached(jax.random.PRNGKey(0), prompts)
+        before = decode_cache_info()
+        d2 = Decoder(params, CFG, _dcfg())      # fresh but equal config
+        d2.generate(jax.random.PRNGKey(1), prompts)
+        d2.generate_cached(jax.random.PRNGKey(1), prompts)
+        after = decode_cache_info()
+        assert after.traces == before.traces, "recompiled on repeat decode"
+        assert after.misses == before.misses, "rebuilt a cached runner"
+        assert after.hits > before.hits
+
+
+def test_cache_stats_reset_keeps_runners(model):
+    """reset_decode_cache_stats zeroes the counters without dropping
+    compiled runners: the next identical decode is all hits, zero
+    misses/traces — the hermetic baseline compile-count tests need."""
+    params, _ = model
+    prompts = jnp.full((2, 6), 2, jnp.int32)
+    with decode_cache_scope():
+        Decoder(params, CFG, _dcfg()).generate(jax.random.PRNGKey(0),
+                                               prompts)
+        assert decode_cache_info().misses > 0
+        reset_decode_cache_stats()
+        zeroed = decode_cache_info()
+        assert (zeroed.hits, zeroed.misses, zeroed.traces) == (0, 0, 0)
+        assert zeroed.runners > 0, "reset must not drop compiled runners"
+        Decoder(params, CFG, _dcfg()).generate(jax.random.PRNGKey(1),
+                                               prompts)
+        after = decode_cache_info()
+        assert after.misses == 0 and after.traces == 0
+        assert after.hits > 0
+
+
+def test_cache_scope_restores_previous_cache(model):
+    params, _ = model
+    prompts = jnp.full((1, 4), 2, jnp.int32)
+    outer = decode_cache_info()
+    with decode_cache_scope() as scoped:
+        Decoder(params, CFG, _dcfg(gen_length=8, block_size=8,
+                                   steps=8)).generate(
+            jax.random.PRNGKey(0), prompts)
+        assert scoped.info().misses > 0
+    # the scope's work never touched the process-wide counters
+    assert decode_cache_info() == outer
 
 
 def test_cache_entry_evicted_when_params_dropped():
@@ -190,7 +227,7 @@ def test_cache_evicts_when_any_leaf_dropped():
     prompts = jnp.full((1, 4), 2, jnp.int32)
     dcfg = _dcfg(gen_length=8, block_size=8, steps=8)
     p1 = init_model(jax.random.PRNGKey(1), CFG)
-    leaf0 = jax.tree.leaves(p1)[0]
+    leaf0 = jax.tree.leaves(p1)[0]    # noqa: F841 — held alive on purpose
     assert len(jax.tree.leaves(p1)) > 1, "test needs a multi-leaf pytree"
     Decoder(p1, CFG, dcfg, cache=cache).generate(jax.random.PRNGKey(0),
                                                  prompts)

@@ -18,7 +18,7 @@ from repro.serving import ServingEngine
 CFG = get_config("llada-8b").reduced()
 
 STRATEGIES = ["random", "probability", "margin", "entropy", "eb", "wino",
-              "fdm", "fdm_a"]
+              "fdm", "fdm_a", "wino_r", "extrapolate"]
 
 # the three decode drivers (DecodeConfig overrides)
 DRIVERS = {
@@ -49,9 +49,10 @@ def _dcfg(**over):
 
 @pytest.mark.parametrize("strategy", STRATEGIES)
 def test_three_driver_parity(model, strategy):
-    """All 8 strategies must produce bit-identical tokens, step counts,
-    and forward counts under the host loop, the per-block fused driver,
-    and the single-dispatch whole-request driver."""
+    """All 10 strategies — the carry-ful ones included — must produce
+    bit-identical tokens, step counts, and forward counts under the host
+    loop, the per-block fused driver, and the single-dispatch
+    whole-request driver."""
     _, model_fn = model
     prompts = jnp.full((3, 6), 2, jnp.int32)
     dcfg = _dcfg(strategy=strategy)
@@ -157,7 +158,8 @@ def test_fdm_a_phase_counts_cached_path(model):
     assert sum(stats.phase_counts.values()) == stats.steps
 
 
-@pytest.mark.parametrize("strategy", ["probability", "eb", "fdm_a"])
+@pytest.mark.parametrize("strategy", ["probability", "eb", "fdm_a",
+                                      "wino_r", "extrapolate"])
 def test_cached_fused_host_parity(model, strategy):
     params, _ = model
     prompts = jnp.full((2, 6), 2, jnp.int32)
@@ -186,7 +188,10 @@ def test_one_compilation_per_strategy_and_shape(model, strategy,
     """The whole decode — 2 blocks × 8 steps × 2 generate calls — must
     trace the model exactly once per distinct forward shape: (B, L) for
     every strategy, plus (K·B, L) for the foreseeing branch.  Holds for
-    both fused drivers (per-block and single-dispatch whole-request)."""
+    both fused drivers (per-block and single-dispatch whole-request).
+    Runs inside a fresh ``decode_cache_scope`` so the count cannot depend
+    on what earlier tests left in the process-wide runner cache."""
+    from repro.core import decode_cache_scope
     params, _ = model
     traces = []
 
@@ -196,10 +201,11 @@ def test_one_compilation_per_strategy_and_shape(model, strategy,
 
     prompts = jnp.full((2, 6), 2, jnp.int32)
     dcfg = _dcfg(strategy=strategy, **DRIVERS[driver])
-    generate(jax.random.PRNGKey(0), counting_fn, prompts, CFG, dcfg)
-    assert len(traces) == expected_traces, traces
-    generate(jax.random.PRNGKey(1), counting_fn, prompts, CFG, dcfg)
-    assert len(traces) == expected_traces, "recompiled on second call"
+    with decode_cache_scope():
+        generate(jax.random.PRNGKey(0), counting_fn, prompts, CFG, dcfg)
+        assert len(traces) == expected_traces, traces
+        generate(jax.random.PRNGKey(1), counting_fn, prompts, CFG, dcfg)
+        assert len(traces) == expected_traces, "recompiled on second call"
 
 
 # --------------------------------------------------------------------------

@@ -91,8 +91,9 @@ def test_fdm_progress_guarantee(seed, k, gamma):
     rng = jax.random.PRNGKey(seed)
     logits = 2 * jax.random.normal(rng, (2, 8, CFG.vocab_size))
     x = jnp.full((2, 8), CFG.mask_token_id, jnp.int32)
-    model = lambda q: 2 * jax.random.normal(
-        jax.random.PRNGKey(0), (q.shape[0], 8, CFG.vocab_size))
+    def model(q):
+        return 2 * jax.random.normal(
+            jax.random.PRNGKey(0), (q.shape[0], 8, CFG.vocab_size))
     new_x, _ = fdm_select(x, logits, jnp.ones((2, 8), bool), model, CFG,
                           k=k, gamma=gamma, n=1)
     assert ((new_x != CFG.mask_token_id).sum(-1) >= 1).all()

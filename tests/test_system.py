@@ -9,9 +9,9 @@ import pytest
 from repro.configs import DecodeConfig, TrainConfig, get_config
 from repro.core import generate
 from repro.data import CharTokenizer, TaskDataset
-from repro.models.model import forward, init_model
+from repro.models.model import forward
 from repro.serving import ServingEngine
-from repro.training import adamw_init, load, make_train_step, save, train
+from repro.training import adamw_init, load, save, train
 
 CFG = get_config("llada-8b").reduced()
 
