@@ -109,8 +109,9 @@ def main() -> None:
     from benchmarks import (ablation_carry, ablation_eta, ablation_gamma,
                             ablation_k, fig2_consistency,
                             kernel_confidence, loop_overhead,
-                            table1_decode_order, table2_fdm_scaling,
-                            table3_fdm_a, table4_arch_generality,
+                            serving_load, table1_decode_order,
+                            table2_fdm_scaling, table3_fdm_a,
+                            table4_arch_generality,
                             table5_cached_serving)
     n_eval = 16 if args.fast else 0
     suites = {
@@ -133,6 +134,9 @@ def main() -> None:
             archs=["llada-8b", "xlstm-125m"] if args.fast else None),
         "table5": lambda: table5_cached_serving.run(
             n_eval=16 if args.fast else 32),
+        "serving": lambda: serving_load.run(
+            n_requests=16 if args.fast else 64,
+            concurrency=4 if args.fast else 8),
         "kernel": kernel_confidence.run,
         "loop": lambda: _loop_with_regression_gate(
             batches=(1, 4) if args.fast else None),

@@ -1,0 +1,171 @@
+"""Closed-loop load generation against the async serving front end.
+
+Boots the full stack in-process — trained testbed model → ServingEngine
+→ AsyncScheduler → stdlib HTTP/SSE server on an ephemeral port — then
+drives it with ``concurrency`` closed-loop clients (each submits, blocks
+for the result, immediately submits again) over real sockets until
+``n_requests`` complete.  A sampler thread polls ``/healthz`` for queue
+depth throughout.  This measures what a single-process deployment of
+this stack actually delivers under sustained traffic: end-to-end
+latency quantiles (queueing + batching + decode + HTTP), aggregate
+token throughput, and how deep the admission queue runs at the chosen
+concurrency.
+
+Emits ``BENCH_serving.json`` at the repo root (via ``benchmarks.run
+--only serving``) so later serving PRs have a baseline to compare
+against.  Latency here includes real queueing: closed-loop clients at
+``concurrency`` > ``max_batch`` deliberately oversubscribe the engine,
+so p95 ≫ p50 is expected and the interesting regressions are in
+``decode_tps`` (decode efficiency) and ``throughput_tps`` (end-to-end).
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from benchmarks.common import print_table, trained_model
+from repro.configs import (DecodeConfig, RouterConfig, ServerConfig,
+                           default_block_size)
+from repro.serving import (ModelRouter, ServerThread, ServingClient,
+                           ServingEngine)
+
+OUT_PATH = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_serving.json")
+
+TASK = "sum"
+STRATEGIES = ("fdm_a", "probability")     # mixed-strategy traffic
+
+
+def run(n_requests: int = 64, concurrency: int = 8,
+        max_batch: int = 8, strategy_mix: Optional[tuple] = None
+        ) -> List[Dict]:
+    params, cfg, ds, tok = trained_model(TASK)
+    gen = ds.seq_len - (1 + ds.prompt_len)
+    dcfg = DecodeConfig(gen_length=gen,
+                        block_size=default_block_size(gen),
+                        steps=gen, strategy="fdm_a")
+    router = ModelRouter(RouterConfig())
+    router.register("bench", lambda: ServingEngine(
+        params, cfg, dcfg, max_batch=max_batch))
+    handle = ServerThread(router, ServerConfig(port=0),
+                          tokenizer=tok).start()
+    mix = strategy_mix or STRATEGIES
+    try:
+        rows = _drive(handle, ds, n_requests, concurrency, mix)
+    finally:
+        handle.stop()
+    payload = {"task": TASK, "gen_length": gen,
+               "max_batch": max_batch, "strategies": list(mix),
+               "rows": rows}
+    with open(OUT_PATH, "w") as f:
+        json.dump(payload, f, indent=2)
+    head = rows[0]
+    print(f"[wrote {OUT_PATH}; {head['requests']} reqs @ "
+          f"c={head['concurrency']}: p50 {head['p50_latency_s']:.3f}s "
+          f"p95 {head['p95_latency_s']:.3f}s, "
+          f"{head['throughput_tps']:.1f} tok/s end-to-end, "
+          f"decode {head['decode_tps']:.1f} tok/s, "
+          f"max queue depth {head['max_queue_depth']}]")
+    return rows
+
+
+def _drive(handle, ds, n_requests: int, concurrency: int,
+           mix) -> List[Dict]:
+    client = ServingClient(handle.host, handle.port, timeout=600.0)
+    prompts = ds.prompts_only(ds.eval_batch(max(n_requests, 1)))
+    latencies: List[float] = []
+    errors: List[str] = []
+    counter = {"next": 0}
+    lock = threading.Lock()
+    depth_samples: List[int] = []
+    stop_sampling = threading.Event()
+
+    def sampler():
+        while not stop_sampling.is_set():
+            try:
+                depth = client.healthz()["queue_depth"].get("bench", 0)
+                depth_samples.append(depth)
+            except Exception:
+                pass
+            stop_sampling.wait(0.05)
+
+    def worker(wid: int):
+        while True:
+            with lock:
+                i = counter["next"]
+                if i >= n_requests:
+                    return
+                counter["next"] = i + 1
+            prompt = prompts[i % len(prompts)].tolist()
+            strategy = mix[i % len(mix)]
+            t0 = time.perf_counter()
+            try:
+                res = client.generate(prompt, strategy=strategy,
+                                      wait=True)
+                assert res["status"] == "ok"
+            except Exception as e:
+                with lock:
+                    errors.append(f"req {i}: {e}")
+                return
+            with lock:
+                latencies.append(time.perf_counter() - t0)
+
+    sam = threading.Thread(target=sampler, daemon=True)
+    sam.start()
+    t_start = time.perf_counter()
+    threads = [threading.Thread(target=worker, args=(w,))
+               for w in range(concurrency)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    span = time.perf_counter() - t_start
+    stop_sampling.set()
+    sam.join(timeout=2)
+    if errors:
+        raise RuntimeError(f"{len(errors)} load-gen failures; first: "
+                           f"{errors[0]}")
+    metrics = _parse_metrics(client.metrics_text())
+    gen = ds.seq_len - (1 + ds.prompt_len)
+    row = {"requests": len(latencies),
+           "concurrency": concurrency,
+           "span_s": round(span, 3),
+           "p50_latency_s": round(float(np.percentile(latencies, 50)), 4),
+           "p95_latency_s": round(float(np.percentile(latencies, 95)), 4),
+           "mean_latency_s": round(float(np.mean(latencies)), 4),
+           "throughput_rps": round(len(latencies) / span, 2),
+           "throughput_tps": round(len(latencies) * gen / span, 1),
+           "decode_tps": round(metrics.get("repro_decode_tps", 0.0), 1),
+           "batches": int(metrics.get("repro_requests_batches_total", 0)),
+           "max_queue_depth": int(max(depth_samples, default=0)),
+           "mean_queue_depth": round(float(np.mean(depth_samples))
+                                     if depth_samples else 0.0, 2)}
+    print_table([row], ["requests", "concurrency", "p50_latency_s",
+                        "p95_latency_s", "throughput_tps", "decode_tps",
+                        "batches", "max_queue_depth",
+                        "mean_queue_depth"])
+    return [row]
+
+
+def _parse_metrics(text: str) -> Dict[str, float]:
+    """Flatten the Prometheus exposition (labels dropped — one model)."""
+    out: Dict[str, float] = {}
+    for line in text.splitlines():
+        if line.startswith("#") or " " not in line:
+            continue
+        name, val = line.rsplit(" ", 1)
+        name = name.split("{", 1)[0]
+        try:
+            out[name] = float(val)
+        except ValueError:
+            pass
+    return out
+
+
+if __name__ == "__main__":
+    run()

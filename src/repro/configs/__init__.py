@@ -5,7 +5,9 @@ import importlib
 from typing import Dict, List
 
 from repro.configs.base import (DecodeConfig, EncDecConfig, MLAConfig,
-                                ModelConfig, MoEConfig, SSMConfig, TrainConfig)
+                                ModelConfig, MoEConfig, RouterConfig,
+                                SSMConfig, ServerConfig, TrainConfig,
+                                default_block_size)
 
 # arch id -> module (one file per assigned architecture + the paper's own)
 _MODULES: Dict[str, str] = {
@@ -39,5 +41,7 @@ def list_configs() -> List[str]:
 
 __all__ = [
     "ModelConfig", "MoEConfig", "MLAConfig", "SSMConfig", "EncDecConfig",
-    "DecodeConfig", "TrainConfig", "get_config", "list_configs", "ASSIGNED_ARCHS",
+    "DecodeConfig", "TrainConfig", "ServerConfig", "RouterConfig",
+    "default_block_size",
+    "get_config", "list_configs", "ASSIGNED_ARCHS",
 ]

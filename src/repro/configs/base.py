@@ -64,7 +64,8 @@ class ModelConfig:
 
     head_dim: int = 0                 # 0 -> d_model // num_heads
     attention: str = "gqa"            # gqa | mla | none (pure ssm)
-    rope: str = "standard"            # standard | half (ChatGLM 2d) | mrope | sinusoidal | none
+    rope: str = "standard"            # standard | half (ChatGLM 2d) |
+                                      # mrope | sinusoidal | none
     rope_theta: float = 10000.0
     mrope_sections: Tuple[int, ...] = ()   # M-RoPE split of head_dim/2 (t, h, w)
     qk_norm: bool = False
@@ -84,7 +85,8 @@ class ModelConfig:
     mask_token_id: int = -1           # -1 -> vocab_size - 1 (reserved)
     max_seq_len: int = 4096
     dtype: str = "bfloat16"
-    remat: str = "none"               # none | block  (checkpoint each block in train fwd)
+    remat: str = "none"               # none | block  (checkpoint each
+                                      # block in train fwd)
     unroll: bool = False              # unroll layers instead of lax.scan
                                       # (dry-run cost extrapolation: XLA
                                       # counts a scan body once)
@@ -202,7 +204,8 @@ def _param_count(cfg: ModelConfig, active_only: bool = False) -> int:
         if cfg.is_moe and li >= cfg.moe.first_k_dense:
             n_routed = (cfg.moe.num_experts_per_tok if active_only
                         else cfg.moe.num_experts)
-            layer += (n_routed + cfg.moe.num_shared_experts) * ffn_params(cfg.moe.moe_d_ff)
+            layer += ((n_routed + cfg.moe.num_shared_experts)
+                      * ffn_params(cfg.moe.moe_d_ff))
             layer += d * cfg.moe.num_experts   # router
         elif cfg.d_ff:
             layer += ffn_params(cfg.d_ff)
@@ -284,6 +287,64 @@ class DecodeConfig:
     extrap_beta: float = 0.5
     extrap_horizon: float = 2.0
     extrap_min_obs: int = 2
+
+
+def default_block_size(gen_length: int) -> int:
+    """Largest block ≤ gen_length/2 that divides gen_length (semi-AR
+    geometry requires ``gen_length % block_size == 0``; the naive
+    ``gen_length // 2`` breaks odd lengths).  Falls back to 1
+    (per-token blocks) for primes."""
+    return next((b for b in range(gen_length // 2, 1, -1)
+                 if gen_length % b == 0), 1)
+
+
+@dataclass(frozen=True)
+class ServerConfig:
+    """Async serving front end (``repro.serving.server``) knobs.
+
+    Admission control is two-sided: ``max_queue_depth`` bounds the
+    per-model engine queue (submits beyond it are rejected with HTTP 429
+    — closed-loop clients back off instead of growing an unbounded
+    queue), and ``default_deadline_s`` expires requests that sit QUEUED
+    longer than their deadline (they are dropped at batch-selection time,
+    never decoded, and their streams get a terminal ``expired`` event).
+    Both act at the scheduling grain of blockwise diffusion decoding —
+    between batches — because a running batch is batch-synchronous and
+    cannot be preempted mid-decode.
+    """
+    host: str = "127.0.0.1"
+    port: int = 8000                   # 0 = pick an ephemeral port
+    max_queue_depth: int = 64          # queued (not yet decoding) requests
+                                       # per model; beyond it submits get 429
+    default_deadline_s: float = 0.0    # 0 = no deadline; per-request
+                                       # "deadline_s" overrides
+    max_gen_length: int = 1024         # request-validation cap on gen_length
+    max_steps: int = 4096              # cap on the per-request steps
+                                       # override: one request must not be
+                                       # able to park the model's single
+                                       # decode worker on an absurd step
+                                       # budget (deadlines only bound
+                                       # QUEUED time)
+    stream_retain: int = 256           # finished event streams kept for a
+                                       # late GET /v1/stream/{rid}
+    max_body_bytes: int = 1 << 20      # POST body cap (413 beyond)
+
+
+@dataclass(frozen=True)
+class RouterConfig:
+    """Multi-model router (``repro.serving.router``) knobs.
+
+    ``budget_bytes`` caps the summed parameter bytes of RESIDENT engines:
+    admitting or rebuilding a model evicts idle least-recently-used
+    engines until the batch fits (a busy engine — queued or mid-decode —
+    is never evicted; the budget may transiently overshoot if everything
+    is busy, and converges as decodes drain).  Evicting an engine drops
+    the process's last strong reference to its params, so the Decoder's
+    weak runner cache frees the compiled executables too —
+    ``decode_cache_info()`` observably shrinks.
+    """
+    budget_bytes: int = 0              # 0 = unlimited
+    max_models: int = 0                # 0 = unlimited registered models
 
 
 @dataclass(frozen=True)

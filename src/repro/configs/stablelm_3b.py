@@ -1,4 +1,5 @@
-"""stablelm-3b — dense decoder, MHA-like (kv=32) [hf:stabilityai/stablelm-2-1_6b family].
+"""stablelm-3b — dense decoder, MHA-like (kv=32)
+[hf:stabilityai/stablelm-2-1_6b family].
 
 32 layers, d_model=2560, 32 heads (kv=32), d_ff=6912, vocab=50304.
 """

@@ -19,7 +19,7 @@ Public API:
 """
 from repro.core.confidence import (Scores, global_confidence,
                                    local_confidence, score_logits)
-from repro.core.decoder import (CacheInfo, Decoder, SampleStats,
+from repro.core.decoder import (BlockEvent, CacheInfo, Decoder, SampleStats,
                                 clear_decode_cache, decode_cache_info,
                                 decode_cache_scope,
                                 reset_decode_cache_stats)
@@ -43,7 +43,8 @@ __all__ = [
     "Scores", "score_logits", "local_confidence", "global_confidence",
     "Strategy", "StatelessStrategy", "register_strategy",
     "unregister_strategy", "resolve_strategy", "available_strategies",
-    "Decoder", "CacheInfo", "decode_cache_info", "clear_decode_cache",
+    "Decoder", "BlockEvent", "CacheInfo", "decode_cache_info",
+    "clear_decode_cache",
     "decode_cache_scope", "reset_decode_cache_stats",
     "FDMStrategy", "fdm_step", "fdm_select",
     "FDMAStrategy", "fdm_a_step", "fdm_a_step_fused", "fdm_a_plan",

@@ -91,6 +91,17 @@ class SampleStats:
         return self.tokens_generated / max(self.forward_equivalents, 1)
 
 
+class BlockEvent(NamedTuple):
+    """One committed semi-AR block, as yielded by ``Decoder.generate_blocks``
+    (and delivered to ``on_block_committed`` callbacks as positional args).
+    ``x`` is the live canvas — the whole ``(B, L)`` token array with the
+    block's columns ``lo:hi`` finalized."""
+    block: int
+    lo: int
+    hi: int
+    x: Any
+
+
 class CacheInfo(NamedTuple):
     entries: int     # distinct params/model_fn identities alive
     runners: int     # compiled-runner callables across all entries
@@ -577,15 +588,25 @@ class Decoder:
         * ``fused_loop ∧ ¬fused_blocks`` — one dispatch per block
           (``drive_block``), callbacks from host between blocks.
         * ``¬fused_loop`` — the legacy host step loop, for debugging.
+
+        The two per-block drivers are served by ``generate_blocks`` (the
+        block-boundary yield point); this method drains it, forwarding
+        events to ``on_block_committed``.
         """
-        unknown = set(extras) - _CONDITIONING_KEYS
-        if unknown:
-            raise TypeError(
-                f"generate() got unexpected keyword argument(s) "
-                f"{sorted(unknown)}; conditioning extras must be one of "
-                f"{sorted(_CONDITIONING_KEYS)}")
+        self._check_extras(extras)
         cfg, dcfg = self.cfg, self.dcfg
         strat = resolve_strategy(strategy or dcfg.strategy)
+        fused = dcfg.fused_loop and strat.supports_fused
+        if not (fused and dcfg.fused_blocks):
+            blocks = self.generate_blocks(rng, prompt, strategy=strat,
+                                          **extras)
+            while True:
+                try:
+                    ev = next(blocks)
+                except StopIteration as fin:
+                    return fin.value
+                if on_block_committed is not None:
+                    on_block_committed(ev.block, ev.lo, ev.hi, ev.x)
         b, lp = prompt.shape
         gen, bs, num_blocks, sched = self._geometry()
         x = fully_masked(cfg, prompt, gen)
@@ -593,42 +614,81 @@ class Decoder:
         stats = SampleStats(tokens_generated=b * gen)
         t0 = time.perf_counter()
 
-        fused = dcfg.fused_loop and strat.supports_fused
-        if fused and dcfg.fused_blocks:
-            stream = on_block_committed is not None
-            run, holder = self._request_runner(strat, stream, extras)
+        stream = on_block_committed is not None
+        run, holder = self._request_runner(strat, stream, extras)
+        if holder is not None:
+            # the holder is shared through the runner cache by every
+            # Decoder on the same weights: refuse to clobber a live
+            # callback (concurrent/re-entrant streaming decode) —
+            # silent event misdelivery would be far worse
+            if holder["cb"] is not None:
+                raise RuntimeError(
+                    "concurrent streaming decodes with the same "
+                    "weights and DecodeConfig are not supported: "
+                    "another generate(on_block_committed=...) is "
+                    "still in flight for this compiled runner")
+            holder["cb"] = on_block_committed
+        try:
+            los = lp + bs * jnp.arange(num_blocks, dtype=jnp.int32)
+            x, rng, steps, fwd, carry = run(
+                x, rng, los, jnp.asarray(sched),
+                jnp.zeros((), jnp.int32), jnp.zeros((), jnp.float32),
+                carry)
+            # one sync for the whole decode
+            x.block_until_ready()
+        finally:
             if holder is not None:
-                # the holder is shared through the runner cache by every
-                # Decoder on the same weights: refuse to clobber a live
-                # callback (concurrent/re-entrant streaming decode) —
-                # silent event misdelivery would be far worse
-                if holder["cb"] is not None:
-                    raise RuntimeError(
-                        "concurrent streaming decodes with the same "
-                        "weights and DecodeConfig are not supported: "
-                        "another generate(on_block_committed=...) is "
-                        "still in flight for this compiled runner")
-                holder["cb"] = on_block_committed
-            try:
-                los = lp + bs * jnp.arange(num_blocks, dtype=jnp.int32)
-                x, rng, steps, fwd, carry = run(
-                    x, rng, los, jnp.asarray(sched),
-                    jnp.zeros((), jnp.int32), jnp.zeros((), jnp.float32),
-                    carry)
-                # one sync for the whole decode
-                x.block_until_ready()
-            finally:
-                if holder is not None:
-                    # output readiness does NOT imply host-callback
-                    # completion on async backends: drain the ordered
-                    # io_callbacks before releasing the holder, or the
-                    # tail events would be dropped (or delivered to the
-                    # next streaming decode's callback)
-                    jax.effects_barrier()
-                    holder["cb"] = None
-            stats.steps = int(jax.device_get(steps))
-            stats.forward_equivalents = float(jax.device_get(fwd))
-        elif fused:
+                # output readiness does NOT imply host-callback
+                # completion on async backends: drain the ordered
+                # io_callbacks before releasing the holder, or the
+                # tail events would be dropped (or delivered to the
+                # next streaming decode's callback)
+                jax.effects_barrier()
+                holder["cb"] = None
+        stats.steps = int(jax.device_get(steps))
+        stats.forward_equivalents = float(jax.device_get(fwd))
+        self._merge_carry_stats(stats, strat, carry)
+        stats.wall_time = time.perf_counter() - t0
+        return x, stats
+
+    def generate_blocks(self, rng, prompt: jnp.ndarray,
+                        strategy: Optional[str] = None, **extras):
+        """The block-boundary yield point: decode like ``generate`` but at
+        the per-block grain, handing control back to the caller after
+        every committed block.
+
+        Returns a generator of ``BlockEvent(block, lo, hi, x)``; the
+        generator's return value (``StopIteration.value``) is the same
+        ``(tokens, stats)`` pair ``generate`` returns.  Between blocks the
+        caller may do anything — fan events out to streams, check
+        cancellation deadlines, admit new work to other queues — which is
+        exactly the scheduling grain of batch-synchronous diffusion
+        decoding: a running batch cannot be preempted mid-block, but
+        between blocks the host is in full control.  The async serving
+        scheduler (``repro.serving.scheduler``) is the primary consumer.
+
+        Drives per-block dispatches (``fused_loop`` chooses the fused
+        block runner vs. the legacy host step loop; ``fused_blocks`` does
+        not apply — a single whole-request dispatch has no host boundary
+        to yield at).  Decodes are bit-identical to ``generate``'s
+        (three-driver parity is tested for every registered strategy).
+        """
+        self._check_extras(extras)
+        strat = resolve_strategy(strategy or self.dcfg.strategy)
+        # geometry errors should raise HERE, not at the first next()
+        geometry = self._geometry()
+        return self._blocks_gen(strat, rng, prompt, geometry, extras)
+
+    def _blocks_gen(self, strat: Strategy, rng, prompt, geometry, extras):
+        cfg, dcfg = self.cfg, self.dcfg
+        b, lp = prompt.shape
+        gen, bs, num_blocks, sched = geometry
+        x = fully_masked(cfg, prompt, gen)
+        carry = strat.init_carry_shaped(cfg, dcfg, b, lp + gen)
+        stats = SampleStats(tokens_generated=b * gen)
+        t0 = time.perf_counter()
+        fused = dcfg.fused_loop and strat.supports_fused
+        if fused:
             run = self._plain_runner(strat, extras)
             steps = jnp.zeros((), jnp.int32)
             fwd = jnp.zeros((), jnp.float32)
@@ -637,8 +697,7 @@ class Decoder:
                 x, rng, steps, fwd, carry = run(
                     x, rng, jnp.int32(lo), jnp.asarray(sched[blk]),
                     steps, fwd, carry)
-                if on_block_committed is not None:
-                    on_block_committed(blk, lo, lo + bs, x)
+                yield BlockEvent(blk, lo, lo + bs, x)
             # one sync for the whole decode: canvas + both stats counters
             x.block_until_ready()
             stats.steps = int(jax.device_get(steps))
@@ -663,12 +722,20 @@ class Decoder:
                                                  mf, cfg, dcfg, n)
                     stats.steps += 1
                     stats.forward_equivalents += fwd_n
-                if on_block_committed is not None:
-                    on_block_committed(blk, lo, hi, x)
+                yield BlockEvent(blk, lo, hi, x)
             x.block_until_ready()
         self._merge_carry_stats(stats, strat, carry)
         stats.wall_time = time.perf_counter() - t0
         return x, stats
+
+    @staticmethod
+    def _check_extras(extras) -> None:
+        unknown = set(extras) - _CONDITIONING_KEYS
+        if unknown:
+            raise TypeError(
+                f"got unexpected keyword argument(s) {sorted(unknown)}; "
+                f"conditioning extras must be one of "
+                f"{sorted(_CONDITIONING_KEYS)}")
 
     @staticmethod
     def _merge_carry_stats(stats: SampleStats, strat: Strategy,

@@ -1,73 +1,173 @@
-"""Serving launcher: train a small LLDM then serve batched requests with a
-chosen decoding strategy through the ServingEngine (which decodes through
-the first-class ``repro.core.Decoder`` stack).
+"""Serving CLI: train small LLDM(s), then serve them over HTTP/SSE.
 
-``python -m repro.launch.serve --strategy fdm_a --requests 16``
+    PYTHONPATH=src python -m repro.launch.serve \
+        --models tiny=llada-8b-tiny:sum --port 8000 --budget-mb 64
 
-``--stream`` prints each committed block as it lands (the engine's
-``on_block_committed`` hook — the SSE grain of blockwise diffusion
-decoding).
+Starts the full stack — ``ModelRouter`` (bytes-budget LRU over engines)
+→ ``AsyncScheduler`` per model (continuous batching, admission control)
+→ stdlib HTTP/1.1 + SSE server — and prints copy-paste ``curl`` lines.
+Per-request decode knobs (``strategy`` / ``steps`` / ``gen_length`` /
+``block_size``) ride the JSON body; see ``repro/serving/server.py`` for
+the endpoint surface.
+
+``--selftest`` instead boots the server on an ephemeral port, runs one
+streamed request through the blocking client, prints the events, and
+exits — the offline end-to-end sanity check.
 """
 from __future__ import annotations
 
 import argparse
+import asyncio
+import json
+import os
+import tempfile
 
-import numpy as np
+import jax
 
-from repro.configs import DecodeConfig, TrainConfig, get_config
+from repro.configs import (DecodeConfig, RouterConfig, ServerConfig,
+                           TrainConfig, default_block_size, get_config)
 from repro.data import CharTokenizer, TaskDataset
-from repro.serving import ServingEngine
+from repro.serving import (ModelRouter, ServerThread, ServingClient,
+                           ServingEngine, ServingServer)
+from repro.training import load, save
 from repro.training.trainer import train
+
+
+def build_model(arch: str, task: str, train_steps: int, strategy: str,
+                ckpt_dir: str):
+    """Train a small model on a task and PARK IT ON DISK; returns
+    ``(ckpt_path, cfg, dcfg, tok, ds)``.  The registered engine factory
+    loads from the checkpoint, so the factory closure never pins the
+    params in RAM — otherwise the router's ``--budget-mb`` eviction
+    would free nothing (the weak runner cache anchors on the params
+    leaves, and a factory default holding them keeps every finalizer
+    unfireable)."""
+    cfg = get_config(arch)
+    tok = CharTokenizer(cfg.vocab_size)
+    ds = TaskDataset(task, tok)
+    tcfg = TrainConfig(batch_size=64, seq_len=ds.seq_len,
+                       steps=train_steps)
+    print(f"warm-up training {cfg.name} on '{task}' ({tcfg.steps} steps)…")
+    params, _ = train(cfg, tcfg, ds.batches(tcfg.batch_size))
+    path = os.path.join(ckpt_dir, f"{cfg.name}-{task}.npz")
+    save(path, params, step=train_steps)
+    del params
+    gen = ds.seq_len - (1 + ds.prompt_len)
+    dcfg = DecodeConfig(gen_length=gen,
+                        block_size=default_block_size(gen), steps=gen,
+                        strategy=strategy)
+    return path, cfg, dcfg, tok, ds
+
+
+def load_engine(ckpt_path: str, cfg, dcfg, max_batch: int
+                ) -> ServingEngine:
+    """Engine factory body: load the checkpoint (template pytree from a
+    fresh init) and wrap it — called per (re)build by the router."""
+    from repro.models.model import init_model
+    params, _, _ = load(ckpt_path,
+                        init_model(jax.random.PRNGKey(0), cfg))
+    return ServingEngine(params, cfg, dcfg, max_batch=max_batch)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="llada-8b-tiny")
-    ap.add_argument("--task", default="sum")
-    ap.add_argument("--strategy", default="fdm_a")
+    ap.add_argument("--models", default="tiny=llada-8b-tiny:sum",
+                    help="comma list of name=arch:task model specs")
+    ap.add_argument("--strategy", default="fdm_a",
+                    help="default decode strategy (per-request override "
+                         "via the 'strategy' JSON field)")
     ap.add_argument("--train-steps", type=int, default=200)
-    ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--max-batch", type=int, default=8)
-    ap.add_argument("--stream", action="store_true",
-                    help="print per-block commit events while decoding")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8000)
+    ap.add_argument("--budget-mb", type=int, default=0,
+                    help="router residency budget in MiB (0 = unlimited)")
+    ap.add_argument("--max-queue-depth", type=int, default=64)
+    ap.add_argument("--deadline-s", type=float, default=0.0,
+                    help="default max queued seconds per request")
+    ap.add_argument("--selftest", action="store_true",
+                    help="serve on an ephemeral port, run one streamed "
+                         "request, print its events, exit")
     args = ap.parse_args()
 
-    cfg = get_config(args.arch)
-    tok = CharTokenizer(cfg.vocab_size)
-    ds = TaskDataset(args.task, tok)
-    tcfg = TrainConfig(batch_size=64, seq_len=ds.seq_len,
-                       steps=args.train_steps)
-    print(f"warm-up training {cfg.name} on '{args.task}' "
-          f"({tcfg.steps} steps)…")
-    params, _ = train(cfg, tcfg, ds.batches(tcfg.batch_size))
+    router = ModelRouter(RouterConfig(
+        budget_bytes=args.budget_mb << 20))
+    ckpt_dir = tempfile.mkdtemp(prefix="repro-serve-")
+    tokenizer = None
+    first_ds = None
+    for spec in args.models.split(","):
+        name, _, rest = spec.partition("=")
+        arch, _, task = rest.partition(":")
+        if not (name and arch):
+            raise SystemExit(f"bad --models entry {spec!r} "
+                             f"(want name=arch:task)")
+        path, cfg, dcfg, tok, ds = build_model(
+            arch, task or "sum", args.train_steps, args.strategy,
+            ckpt_dir)
+        if tokenizer is None:
+            tokenizer, first_ds = tok, ds
+        # the factory loads from disk: evicted models genuinely free
+        # their weights and rebuild on demand from the checkpoint
+        router.register(
+            name,
+            lambda p=path, c=cfg, d=dcfg: load_engine(
+                p, c, d, args.max_batch))
 
-    gen = ds.seq_len - (1 + ds.prompt_len)
-    block = max(gen // 2, 1)
-    dcfg = DecodeConfig(gen_length=gen, block_size=block, steps=gen,
-                        strategy=args.strategy)
-    stream_cb = None
-    if args.stream:
-        def stream_cb(reqs, blk, lo, hi, x):
-            print(f"  [stream] batch of {len(reqs)} committed block {blk} "
-                  f"(cols {lo}:{hi})")
-    engine = ServingEngine(params, cfg, dcfg, max_batch=args.max_batch,
-                           on_block_committed=stream_cb)
+    scfg = ServerConfig(host=args.host,
+                        port=0 if args.selftest else args.port,
+                        max_queue_depth=args.max_queue_depth,
+                        default_deadline_s=args.deadline_s)
+    if args.selftest:
+        _selftest(router, scfg, tokenizer, first_ds)
+        return
 
-    batch = ds.eval_batch(args.requests)
-    prompts = ds.prompts_only(batch)
-    for i in range(args.requests):
-        engine.submit(prompts[i])
-    engine.run_until_idle()
+    async def serve() -> None:
+        server = ServingServer(router, scfg, tokenizer=tokenizer)
+        host, port = await server.start()
+        base = f"http://{host}:{port}"
+        example = first_ds.prompts_only(
+            first_ds.eval_batch(1))[0].tolist()
+        print(f"serving {router.names()} on {base}")
+        print("try:")
+        print(f"  curl {base}/healthz")
+        print(f"  curl -N -X POST {base}/v1/generate "
+              f"-d '{json.dumps({'prompt': example, 'wait': True})}'")
+        print(f"  rid=$(curl -s -X POST {base}/v1/generate "
+              f"-d '{json.dumps({'prompt': example})}' "
+              "| python -c 'import sys,json;"
+              "print(json.load(sys.stdin)[\"rid\"])')")
+        print(f"  curl -N {base}/v1/stream/$rid        # SSE blocks")
+        print(f"  curl {base}/metrics")
+        await server.serve_forever()
 
-    outs = np.stack([engine.result(i).result for i in range(args.requests)])
-    em = ds.exact_match(outs, batch)
-    print(f"strategy={args.strategy}  exact-match {em:.2%}")
-    print("engine summary:", engine.summary())
-    for i in range(min(3, args.requests)):
-        r = engine.result(i)
-        print(f"  [{i}] prompt={tok.decode(prompts[i])!r} "
-              f"-> answer={tok.decode(r.result[ds.answer_slice])!r} "
-              f"latency={r.latency:.2f}s")
+    try:
+        asyncio.run(serve())
+    except KeyboardInterrupt:
+        print("\nbye")
+
+
+def _selftest(router: ModelRouter, scfg: ServerConfig, tokenizer,
+              ds) -> None:
+    handle = ServerThread(router, scfg, tokenizer=tokenizer).start()
+    try:
+        client = ServingClient(handle.host, handle.port)
+        print("healthz:", client.healthz())
+        prompt = ds.prompts_only(ds.eval_batch(1))[0].tolist()
+        print(f"streaming one request (prompt "
+              f"{tokenizer.decode(prompt)!r}) …")
+        for name, event in client.generate_stream(prompt):
+            if name == "block":
+                print(f"  block {event['block']} cols "
+                      f"[{event['lo']}:{event['hi']}] "
+                      f"-> {event.get('text', event['tokens'])!r}")
+            else:
+                print(f"  {name}: status={event.get('status')} "
+                      f"latency={event.get('latency_s', 0):.3f}s")
+        print("metrics head:")
+        print("\n".join(client.metrics_text().splitlines()[:8]))
+    finally:
+        handle.stop()
+    print("selftest OK")
 
 
 if __name__ == "__main__":

@@ -1,3 +1,26 @@
-from repro.serving.engine import Request, ServingEngine
+"""The serving stack, bottom-up:
 
-__all__ = ["Request", "ServingEngine"]
+* ``engine``    — batched, bucket-scheduled decoding over one model's
+                  weights (synchronous; the batch-selection/decode split
+                  the async layer builds on)
+* ``scheduler`` — the async continuous-batching loop: admission control,
+                  deadlines, per-request event streams at the block grain
+* ``router``    — named-model routing over engines under a bytes-budget
+                  LRU, with hot swap and observable cache eviction
+* ``server``    — stdlib asyncio HTTP/1.1 + SSE front end over a router
+* ``client``    — small blocking client (tests / examples / load gen)
+"""
+from repro.serving.client import ServerError, ServingClient
+from repro.serving.engine import Batch, Request, ServingEngine
+from repro.serving.router import ModelRouter, params_bytes
+from repro.serving.scheduler import (AsyncScheduler, QueueFullError,
+                                     stats_dict)
+from repro.serving.server import ServerThread, ServingServer
+
+__all__ = [
+    "Request", "Batch", "ServingEngine",
+    "AsyncScheduler", "QueueFullError", "stats_dict",
+    "ModelRouter", "params_bytes",
+    "ServingServer", "ServerThread",
+    "ServingClient", "ServerError",
+]

@@ -1,0 +1,145 @@
+"""Small blocking HTTP/SSE client for the serving front end.
+
+Stdlib-only (``http.client``); used by the tests, the load benchmark,
+and the examples — and it documents the wire protocol for real clients:
+
+    client = ServingClient(host, port)
+    out = client.generate([3, 5, 2], strategy="fdm_a", wait=True)
+    for name, event in client.generate_stream([3, 5, 2]):
+        ...                      # "block" events, then one terminal event
+"""
+from __future__ import annotations
+
+import http.client
+import json
+import urllib.parse
+from typing import Dict, Iterator, Optional, Tuple
+
+
+class ServerError(RuntimeError):
+    """Non-2xx response; carries the HTTP status and server message."""
+
+    def __init__(self, status: int, message: str):
+        super().__init__(f"HTTP {status}: {message}")
+        self.status = status
+        self.message = message
+
+
+class ServingClient:
+    def __init__(self, host: str, port: int, timeout: float = 120.0):
+        self.host = host
+        self.port = port
+        self.timeout = timeout
+
+    # -- plumbing ----------------------------------------------------------
+    def _request(self, method: str, path: str,
+                 body: Optional[Dict] = None) -> Dict:
+        conn = http.client.HTTPConnection(self.host, self.port,
+                                          timeout=self.timeout)
+        try:
+            payload = json.dumps(body) if body is not None else None
+            conn.request(method, path, body=payload,
+                         headers={"Content-Type": "application/json"})
+            resp = conn.getresponse()
+            data = resp.read()
+        finally:
+            conn.close()
+        try:
+            obj = json.loads(data) if data else {}
+        except json.JSONDecodeError:
+            obj = {"raw": data.decode(errors="replace")}
+        if resp.status >= 400:
+            raise ServerError(resp.status,
+                              obj.get("error", obj.get("raw", "")))
+        return obj
+
+    # -- API ---------------------------------------------------------------
+    def generate(self, prompt, *, model: Optional[str] = None,
+                 strategy: Optional[str] = None,
+                 steps: Optional[int] = None,
+                 gen_length: Optional[int] = None,
+                 block_size: Optional[int] = None,
+                 deadline_s: Optional[float] = None,
+                 wait: bool = True) -> Dict:
+        """Submit a prompt (token-id list, or a string if the server has
+        a tokenizer).  ``wait=True`` blocks for the final result;
+        ``wait=False`` returns ``{"rid", "model", "stream"}``."""
+        body = {"prompt": list(prompt) if not isinstance(prompt, str)
+                else prompt, "wait": wait}
+        for key, val in (("model", model), ("strategy", strategy),
+                         ("steps", steps), ("gen_length", gen_length),
+                         ("block_size", block_size),
+                         ("deadline_s", deadline_s)):
+            if val is not None:
+                body[key] = val
+        return self._request("POST", "/v1/generate", body)
+
+    def stream(self, rid: int, model: Optional[str] = None
+               ) -> Iterator[Tuple[str, Dict]]:
+        """SSE stream for a request: yields ``(event_name, data)`` pairs,
+        ending after the terminal (``final``) event."""
+        path = f"/v1/stream/{rid}"
+        if model:
+            path += "?model=" + urllib.parse.quote(model)
+        conn = http.client.HTTPConnection(self.host, self.port,
+                                          timeout=self.timeout)
+        try:
+            conn.request("GET", path)
+            resp = conn.getresponse()
+            if resp.status >= 400:
+                data = resp.read()
+                try:
+                    msg = json.loads(data).get("error", "")
+                except json.JSONDecodeError:
+                    msg = data.decode(errors="replace")
+                raise ServerError(resp.status, msg)
+            name, data_lines = None, []
+            while True:
+                raw = resp.readline()
+                if not raw:
+                    return                     # server closed the stream
+                line = raw.decode().rstrip("\n").rstrip("\r")
+                if line.startswith("event:"):
+                    name = line[len("event:"):].strip()
+                elif line.startswith("data:"):
+                    data_lines.append(line[len("data:"):].strip())
+                elif line == "" and data_lines:
+                    event = json.loads("\n".join(data_lines))
+                    yield (name or event.get("type", "message"), event)
+                    if event.get("final"):
+                        return
+                    name, data_lines = None, []
+        finally:
+            conn.close()
+
+    def generate_stream(self, prompt, **kwargs
+                        ) -> Iterator[Tuple[str, Dict]]:
+        """Submit then stream: yields the SSE events of a fresh request."""
+        kwargs["wait"] = False
+        sub = self.generate(prompt, **kwargs)
+        yield from self.stream(sub["rid"], model=sub.get("model"))
+
+    def cancel(self, rid: int, model: Optional[str] = None) -> bool:
+        body = {"rid": rid}
+        if model:
+            body["model"] = model
+        return bool(self._request("POST", "/v1/cancel", body)["cancelled"])
+
+    def models(self) -> Dict:
+        return self._request("GET", "/v1/models")
+
+    def healthz(self) -> Dict:
+        return self._request("GET", "/healthz")
+
+    def metrics_text(self) -> str:
+        conn = http.client.HTTPConnection(self.host, self.port,
+                                          timeout=self.timeout)
+        try:
+            conn.request("GET", "/metrics")
+            resp = conn.getresponse()
+            data = resp.read().decode()
+        finally:
+            conn.close()
+        if resp.status >= 400:
+            raise ServerError(resp.status, data)
+        return data

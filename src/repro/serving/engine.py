@@ -24,6 +24,23 @@ stops at the batch's max real length, not the bucket ceiling: mask pads
 carry a measurable quality cost (DESIGN.md), so uniform-length workloads
 see zero padding.
 
+Per-request decode knobs: ``submit`` accepts ``strategy`` / ``steps`` /
+``gen_length`` / ``block_size`` overrides (validated against the strategy
+registry and the block geometry at the submission boundary, where a clear
+error can still reach the caller).  The effective ``DecodeConfig`` is part
+of the bucket key, so only requests decoding identically share a batch —
+the ParallelBench observation that dLLM quality/latency trade-offs are
+workload-dependent means these knobs must reach the server boundary, and
+batching across them would silently decode somebody with somebody else's
+settings.
+
+The engine itself is synchronous and single-threaded on purpose; the
+batch-selection / batch-decode split (``select_batch`` /
+``decode_batch`` / ``decode_batch_blocks``) is what the async scheduler
+(``repro.serving.scheduler``) builds its continuous-batching loop on:
+selection and queue mutation stay on the event-loop thread, only the
+block-grain dispatches run on a worker thread.
+
 Streaming: pass ``on_block_committed(requests, block_index, lo, hi, x)``
 to the constructor to observe each committed block of a batch as it lands
 (the natural SSE grain for diffusion decoding — tokens inside a block
@@ -35,7 +52,7 @@ from __future__ import annotations
 import dataclasses
 import time
 from collections import deque
-from typing import Callable, Deque, Dict, List, Optional
+from typing import Callable, Deque, Dict, Iterator, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -43,6 +60,7 @@ import numpy as np
 
 from repro.configs.base import DecodeConfig, ModelConfig
 from repro.core.decoder import Decoder, SampleStats
+from repro.core.strategies import resolve_strategy
 
 
 @dataclasses.dataclass
@@ -53,10 +71,36 @@ class Request:
     stats: Optional[SampleStats] = None
     submit_time: float = 0.0
     finish_time: float = 0.0
+    dcfg: Optional[DecodeConfig] = None   # effective per-request config
+    deadline: Optional[float] = None      # absolute perf_counter() time by
+                                          # which decoding must have STARTED
+    cancelled: bool = False
+    expired: bool = False
+    pad_cols: int = 0                     # mask pad columns this request got
 
     @property
     def latency(self) -> float:
         return self.finish_time - self.submit_time
+
+    @property
+    def status(self) -> str:
+        if self.cancelled:
+            return "cancelled"
+        if self.expired:
+            return "expired"
+        return "done" if self.result is not None else "queued"
+
+
+@dataclasses.dataclass
+class Batch:
+    """One schedulable unit: same effective DecodeConfig, same length
+    bucket, padded to fixed shape.  Produced by ``select_batch``,
+    consumed by ``decode_batch`` / ``decode_batch_blocks``."""
+    requests: List[Request]
+    prompts: np.ndarray                # (max_batch, Lp) — replicas included
+    pads: List[int]                    # per-request mask pad columns
+    dcfg: DecodeConfig
+    rng: jax.Array
 
 
 class ServingEngine:
@@ -75,17 +119,74 @@ class ServingEngine:
         self.done: Dict[int, Request] = {}
         self._next_id = 0
         self._rng = jax.random.PRNGKey(seed)
+        self._decoders: Dict[DecodeConfig, Decoder] = {dcfg: self.decoder}
 
     # -- client API --------------------------------------------------------
-    def submit(self, prompt: np.ndarray) -> int:
+    def submit(self, prompt: np.ndarray, *,
+               strategy: Optional[str] = None,
+               steps: Optional[int] = None,
+               gen_length: Optional[int] = None,
+               block_size: Optional[int] = None,
+               deadline_s: Optional[float] = None) -> int:
+        """Queue a prompt; returns the request id.
+
+        The keyword overrides build this request's effective
+        ``DecodeConfig`` (validated HERE — an unknown strategy or an
+        infeasible geometry raises at the submission boundary instead of
+        deep inside a decode batch).  Requests only batch with requests
+        sharing the same effective config.  ``deadline_s`` bounds QUEUE
+        time: a request still queued after it is dropped as expired at
+        the next batch selection (admission control for overload — decode
+        work is never wasted on a request whose client gave up).
+        """
+        over = {k: v for k, v in dict(
+            strategy=strategy, steps=steps, gen_length=gen_length,
+            block_size=block_size).items() if v is not None}
+        dcfg = dataclasses.replace(self.dcfg, **over) if over else self.dcfg
+        resolve_strategy(dcfg.strategy)          # KeyError on unknown name
+        for knob in ("gen_length", "block_size", "steps"):
+            if getattr(dcfg, knob) < 1:
+                raise ValueError(f"{knob}={getattr(dcfg, knob)} must be "
+                                 f"a positive integer")
+        if dcfg.gen_length % dcfg.block_size:
+            raise ValueError(
+                f"gen_length={dcfg.gen_length} is not a multiple of "
+                f"block_size={dcfg.block_size}")
+        num_blocks = dcfg.gen_length // dcfg.block_size
+        if dcfg.steps < num_blocks:
+            raise ValueError(
+                f"steps={dcfg.steps} is infeasible: {num_blocks} blocks "
+                f"need at least one step each")
         rid = self._next_id
         self._next_id += 1
-        self.queue.append(Request(rid=rid, prompt=np.asarray(prompt),
-                                  submit_time=time.perf_counter()))
+        now = time.perf_counter()
+        self.queue.append(Request(
+            rid=rid, prompt=np.asarray(prompt), submit_time=now, dcfg=dcfg,
+            deadline=None if deadline_s is None else now + deadline_s))
         return rid
+
+    def cancel(self, rid: int) -> bool:
+        """Drop a still-queued request.  Returns True if it was removed
+        (it lands in ``done`` with ``cancelled=True`` and no result);
+        False if it already finished, was never submitted, or is decoding
+        right now (a running batch is batch-synchronous and cannot be
+        preempted — the result simply arrives and is kept)."""
+        for req in self.queue:
+            if req.rid == rid:
+                self.queue.remove(req)
+                req.cancelled = True
+                req.finish_time = time.perf_counter()
+                self.done[rid] = req
+                return True
+        return False
 
     def result(self, rid: int) -> Request:
         return self.done[rid]
+
+    @property
+    def queue_depth(self) -> int:
+        """Queued (not yet decoding) requests — the backpressure signal."""
+        return len(self.queue)
 
     # -- scheduler ---------------------------------------------------------
     def _bucket_len(self, lp: int) -> int:
@@ -93,25 +194,48 @@ class ServingEngine:
         q = self.length_bucket
         return -(-lp // q) * q
 
-    def step(self) -> List[int]:
-        """Serve one batch from the queue. Returns finished request ids.
+    def _bucket_key(self, req: Request) -> Tuple:
+        """Requests batch together iff this matches: same prompt-length
+        bucket AND same effective DecodeConfig (frozen → hashable)."""
+        return (self._bucket_len(req.prompt.shape[0]), req.dcfg)
 
-        The whole queue is scanned into prompt-length buckets and the
-        bucket containing the oldest request is served (up to max_batch,
-        FIFO within the bucket) — no head-of-line blocking on one
-        odd-length prompt.  Prompts shorter than the batch's longest are
-        left-padded with the mask token; the pad columns sit outside every
-        decode block, so they are never committed, and are sliced off the
-        per-request results.
+    def reap_expired(self, now: Optional[float] = None) -> List[Request]:
+        """Drop queued requests whose deadline passed; returns them (also
+        recorded in ``done`` with ``expired=True``)."""
+        now = time.perf_counter() if now is None else now
+        expired = [r for r in self.queue
+                   if r.deadline is not None and now > r.deadline]
+        for req in expired:
+            self.queue.remove(req)
+            req.expired = True
+            req.finish_time = now
+            self.done[req.rid] = req
+        return expired
+
+    def select_batch(self) -> Optional[Batch]:
+        """Pop one batch from the queue (no decoding).
+
+        The whole queue is scanned into (prompt-length bucket, effective
+        DecodeConfig) groups and the group containing the OLDEST request
+        is served (up to max_batch, FIFO within the group) — no
+        head-of-line blocking on one odd-length prompt or one exotic
+        per-request override.  Prompts shorter than the batch's longest
+        are left-padded with the mask token; the pad columns sit outside
+        every decode block, so they are never committed, and are sliced
+        off the per-request results.
+
+        Callers reap expired requests FIRST (``step`` does; the async
+        scheduler does too, emitting terminal events for them) — this
+        method deliberately does not, so a request can never slip into
+        ``done`` unobserved between a caller's reap and its select.
         """
         if not self.queue:
-            return []
-        head = self._bucket_len(self.queue[0].prompt.shape[0])
+            return None
+        head = self._bucket_key(self.queue[0])
         batch: List[Request] = []
         rest: List[Request] = []
         for r in self.queue:
-            if self._bucket_len(r.prompt.shape[0]) == head \
-                    and len(batch) < self.max_batch:
+            if self._bucket_key(r) == head and len(batch) < self.max_batch:
                 batch.append(r)
             else:
                 rest.append(r)
@@ -122,6 +246,8 @@ class ServingEngine:
         # testbed) — so uniform-length workloads must see zero padding
         lp = max(r.prompt.shape[0] for r in batch)
         pads = [lp - r.prompt.shape[0] for r in batch]
+        for r, p in zip(batch, pads):
+            r.pad_cols = p
         prompts = np.stack([
             np.concatenate([np.full((p,), self.cfg.mask_token_id,
                                     r.prompt.dtype), r.prompt])
@@ -132,17 +258,72 @@ class ServingEngine:
             prompts = np.concatenate(
                 [prompts, np.repeat(prompts[-1:], pad, 0)])
         self._rng, rng = jax.random.split(self._rng)
+        return Batch(requests=batch, prompts=prompts, pads=pads,
+                     dcfg=batch[0].dcfg or self.dcfg, rng=rng)
+
+    def _decoder_for(self, dcfg: DecodeConfig) -> Decoder:
+        dec = self._decoders.get(dcfg)
+        if dec is None:
+            # Decoders are cheap (compiled runners live in the shared
+            # weak cache keyed on the weights), but keep a small table so
+            # repeat overrides don't even re-key
+            if len(self._decoders) > 32:
+                self._decoders.clear()
+                self._decoders[self.dcfg] = self.decoder
+            dec = self._decoders[dcfg] = Decoder(self.params, self.cfg,
+                                                 dcfg)
+        return dec
+
+    def decode_batch(self, batch: Batch,
+                     on_block_committed: Optional[Callable] = None
+                     ) -> List[int]:
+        """Decode one selected batch to completion (single dispatch when
+        the whole-request driver applies).  Returns finished rids."""
         cb = None
-        if self.on_block_committed is not None:
+        if on_block_committed is not None:
             def cb(blk, lo, hi, x):
-                return self.on_block_committed(batch, blk, lo, hi, x)
-        out, stats = self.decoder.generate(rng, jnp.asarray(prompts),
-                                           on_block_committed=cb)
+                return on_block_committed(batch.requests, blk, lo, hi, x)
+        dec = self._decoder_for(batch.dcfg)
+        out, stats = dec.generate(batch.rng, jnp.asarray(batch.prompts),
+                                  on_block_committed=cb)
+        return self._finish_batch(batch, out, stats)
+
+    def decode_batch_blocks(self, batch: Batch) -> Iterator[Tuple]:
+        """Decode one selected batch at the BLOCK grain: a generator
+        yielding ``(block_index, lo, hi, block_tokens)`` after each
+        committed block — ``block_tokens`` is the host-side ``(B, bs)``
+        token slice (replica rows included), ready to fan out to
+        per-request streams — and returning the finished rids.
+
+        Between yields the caller owns the host (the engine is built on
+        ``Decoder.generate_blocks``): the async scheduler runs each
+        resumption on a worker thread and uses the gaps to deliver
+        events and keep its event loop live.  The engine-level
+        ``on_block_committed`` hook fires here too, with the same
+        signature as in ``decode_batch``.
+        """
+        dec = self._decoder_for(batch.dcfg)
+        blocks = dec.generate_blocks(batch.rng, jnp.asarray(batch.prompts))
+        while True:
+            try:
+                ev = next(blocks)
+            except StopIteration as fin:
+                out, stats = fin.value
+                return self._finish_batch(batch, out, stats)
+            if self.on_block_committed is not None:
+                self.on_block_committed(batch.requests, ev.block, ev.lo,
+                                        ev.hi, ev.x)
+            tokens = np.asarray(ev.x[:, ev.lo:ev.hi])
+            yield (ev.block, ev.lo, ev.hi, tokens)
+
+    def _finish_batch(self, batch: Batch, out, stats: SampleStats
+                      ) -> List[int]:
         out = np.asarray(jax.device_get(out))
         now = time.perf_counter()
-        real = len(batch)
-        for i, req in enumerate(batch):
-            req.result = out[i, pads[i]:]
+        real = len(batch.requests)
+        rows = len(batch.prompts)
+        for i, req in enumerate(batch.requests):
+            req.result = out[i, batch.pads[i]:]
             # per-request stats copy: each request gets its SHARE of the
             # batch's work — tokens (its own gen_length), forwards, and
             # wall time all divided across the real (non-pad-replicated)
@@ -158,13 +339,12 @@ class ServingEngine:
             # pad replicas included — so normalise by the padded row
             # count: the per-example histogram, which keeps the
             # sum(phase_counts) == steps invariant per request and keeps
-            # replica rows from inflating the reported phase work
-            rows = len(prompts)
+            # replica rows from inflating the reported phase work.
             # revocations / skipped_forwards are whole-batch totals like
             # forwards: each real request gets its share
             req.stats = dataclasses.replace(
                 stats,
-                tokens_generated=self.dcfg.gen_length,
+                tokens_generated=batch.dcfg.gen_length,
                 forward_equivalents=stats.forward_equivalents / real,
                 wall_time=stats.wall_time / real,
                 revocations=stats.revocations / real,
@@ -173,7 +353,15 @@ class ServingEngine:
                               for k, v in stats.phase_counts.items()})
             req.finish_time = now
             self.done[req.rid] = req
-        return [r.rid for r in batch]
+        return [r.rid for r in batch.requests]
+
+    def step(self) -> List[int]:
+        """Serve one batch from the queue.  Returns finished request ids."""
+        self.reap_expired()
+        batch = self.select_batch()
+        if batch is None:
+            return []
+        return self.decode_batch(batch, self.on_block_committed)
 
     def run_until_idle(self) -> None:
         while self.queue:
@@ -185,11 +373,18 @@ class ServingEngine:
 
         Throughput accounting counts REAL requests only: `done` never
         holds pad replicas, and the per-request stats summed here were
-        pro-rated across real batch members in `step()`, so replicated
-        rows (batches padded to `max_batch`) and mask pad columns inflate
-        neither tokens nor forward-equivalents.
+        pro-rated across real batch members in `decode_batch`, so
+        replicated rows (batches padded to `max_batch`) and mask pad
+        columns inflate neither tokens nor forward-equivalents.
+        Cancelled/expired requests never decoded, so they are excluded.
+
+        `_finish_batch` may be inserting into `done` from the
+        scheduler's worker thread while this runs on the event loop:
+        snapshot via ``list(...)`` (one GIL-atomic op) before iterating
+        so a mid-scrape batch completion cannot blow up the iteration.
         """
-        reqs = list(self.done.values())
+        reqs = [r for r in list(self.done.values())
+                if r.stats is not None]
         if not reqs:
             return {}
         lat = [r.latency for r in reqs]

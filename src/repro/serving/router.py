@@ -1,0 +1,198 @@
+"""Named-model routing over multiple ServingEngines, under an explicit
+bytes-budget LRU.
+
+Models are *registered* as factories (``name -> () -> ServingEngine``)
+and *built* lazily on first use, so a router can know about many more
+models than fit in memory.  ``engine(name)`` returns the resident engine,
+building it if needed, marking it most-recently-used, and then enforcing
+the budget: while the summed parameter bytes of resident engines exceed
+``RouterConfig.budget_bytes``, the least-recently-used IDLE engine is
+force-dropped.  A busy engine (queued work or mid-decode, as reported by
+its busy probe) is never evicted — the budget transiently overshoots
+instead and converges as decodes drain.
+
+Eviction actually frees memory because of the PR-2/PR-3 cache design: the
+router (plus at most a scheduler, which the ``on_evict`` hook tears down)
+holds the only strong references to an engine, the engine holds the only
+reference to its params, and the Decoder's process-wide runner cache only
+*weakly* anchors those params — so dropping the slot lets the params
+leaves collect, their ``weakref.finalize`` anchors fire, and the compiled
+executables evict.  ``decode_cache_info().entries`` observably shrinks;
+the router tests assert exactly that.
+
+Hot swap = rebuild: ``hot_swap(name)`` (optionally with a new factory)
+drops the resident engine and builds a fresh one from the factory.  New
+params with the same pytree structure even reuse the old compilations'
+jit wrappers' shapes — but the old entry is gone, so nothing pins the old
+weights.
+"""
+from __future__ import annotations
+
+import gc
+import time
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import jax
+
+from repro.configs.base import RouterConfig
+from repro.serving.engine import ServingEngine
+
+
+def params_bytes(params) -> int:
+    """Total bytes of a params pytree's array leaves."""
+    return int(sum(leaf.nbytes for leaf in jax.tree.leaves(params)
+                   if hasattr(leaf, "nbytes")))
+
+
+@dataclass
+class _Slot:
+    engine: ServingEngine
+    nbytes: int
+    last_used: float = 0.0
+    # busy probe: the router alone can only see queued work; a scheduler
+    # wrapping the engine also knows about the batch in flight and
+    # installs a probe covering both (ServingServer does this)
+    busy: Optional[Callable[[], bool]] = field(default=None)
+
+    def is_busy(self) -> bool:
+        if self.busy is not None:
+            return bool(self.busy())
+        return self.engine.queue_depth > 0
+
+
+class ModelRouter:
+    def __init__(self, rcfg: RouterConfig = RouterConfig(), *,
+                 on_evict: Optional[Callable] = None):
+        self.rcfg = rcfg
+        self.on_evict = on_evict          # (name, engine) -> None
+        self._factories: "OrderedDict[str, Callable[[], ServingEngine]]" \
+            = OrderedDict()
+        self._slots: "OrderedDict[str, _Slot]" = OrderedDict()
+        self.counters = {"builds": 0, "evictions": 0, "swaps": 0}
+
+    # -- registration ------------------------------------------------------
+    def register(self, name: str,
+                 factory: Callable[[], ServingEngine]) -> None:
+        if self.rcfg.max_models and \
+                len(self._factories) >= self.rcfg.max_models and \
+                name not in self._factories:
+            raise ValueError(
+                f"router is capped at {self.rcfg.max_models} models")
+        self._factories[name] = factory
+
+    def names(self) -> List[str]:
+        return list(self._factories)
+
+    @property
+    def default(self) -> str:
+        if not self._factories:
+            raise RuntimeError("no models registered")
+        return next(iter(self._factories))
+
+    # -- routing -----------------------------------------------------------
+    def engine(self, name: str) -> ServingEngine:
+        """Resident engine for ``name`` (built on demand), LRU-touched;
+        enforces the bytes budget on the way out."""
+        if name not in self._factories:
+            raise KeyError(f"unknown model {name!r}; have {self.names()}")
+        slot = self._slots.get(name)
+        if slot is None:
+            engine = self._factories[name]()
+            slot = _Slot(engine=engine, nbytes=params_bytes(engine.params))
+            self._slots[name] = slot
+            self.counters["builds"] += 1
+        self._slots.move_to_end(name)
+        slot.last_used = time.monotonic()
+        self._enforce_budget(keep=name)
+        return slot.engine
+
+    def touch(self, name: str) -> Optional[ServingEngine]:
+        """LRU-touch an ALREADY-RESIDENT engine and return it; None when
+        not resident (or unknown).  Unlike ``engine()`` this never
+        builds and never enforces the budget — residency only changes
+        on builds — so it is the cheap fast path the server uses for
+        warm models without hopping to an executor thread."""
+        slot = self._slots.get(name)
+        if slot is None:
+            return None
+        self._slots.move_to_end(name)
+        slot.last_used = time.monotonic()
+        return slot.engine
+
+    def set_busy_probe(self, name: str,
+                       probe: Optional[Callable[[], bool]]) -> None:
+        slot = self._slots.get(name)
+        if slot is not None:
+            slot.busy = probe
+
+    def resident(self, name: str) -> bool:
+        return name in self._slots
+
+    # -- eviction ----------------------------------------------------------
+    def evict(self, name: str, force: bool = False) -> bool:
+        """Drop a resident engine (its runner-cache entries evict with
+        it).  Busy engines are refused unless ``force=True``."""
+        slot = self._slots.get(name)
+        if slot is None:
+            return False
+        if slot.is_busy() and not force:
+            return False
+        del self._slots[name]
+        if self.on_evict is not None:
+            self.on_evict(name, slot.engine)
+        self.counters["evictions"] += 1
+        del slot
+        # drop the last strong refs NOW so the weak runner cache's
+        # finalizers fire deterministically (stray reference cycles would
+        # otherwise defer them to an arbitrary later collection)
+        gc.collect()
+        return True
+
+    def _enforce_budget(self, keep: Optional[str] = None) -> None:
+        budget = self.rcfg.budget_bytes
+        if not budget:
+            return
+        # oldest-first scan; the engine just touched is exempt (evicting
+        # what we are about to hand out would be self-defeating)
+        for name in list(self._slots):
+            if self.resident_bytes() <= budget:
+                return
+            if name != keep:
+                self.evict(name)
+
+    def resident_bytes(self) -> int:
+        return sum(s.nbytes for s in self._slots.values())
+
+    # -- hot swap ----------------------------------------------------------
+    def hot_swap(self, name: str,
+                 factory: Optional[Callable[[], ServingEngine]] = None
+                 ) -> ServingEngine:
+        """Replace a model's weights: optionally install a new factory,
+        force-drop the resident engine (queued requests on it are lost —
+        drain its scheduler first for a graceful swap), and build the
+        replacement.  The old engine's params and compiled runners free
+        with it."""
+        if name not in self._factories:
+            raise KeyError(f"unknown model {name!r}; have {self.names()}")
+        if factory is not None:
+            self._factories[name] = factory
+        self.evict(name, force=True)
+        self.counters["swaps"] += 1
+        return self.engine(name)
+
+    # -- introspection -----------------------------------------------------
+    def info(self) -> Dict:
+        return {"budget_bytes": self.rcfg.budget_bytes,
+                "resident_bytes": self.resident_bytes(),
+                **self.counters,
+                "models": {name: {
+                    "resident": name in self._slots,
+                    "bytes": (self._slots[name].nbytes
+                              if name in self._slots else 0),
+                    "queued": (self._slots[name].engine.queue_depth
+                               if name in self._slots else 0),
+                    "busy": (self._slots[name].is_busy()
+                             if name in self._slots else False),
+                } for name in self._factories}}

@@ -1,0 +1,310 @@
+"""Async continuous-batching scheduler: the loop between the HTTP front
+end and the batch-synchronous ``ServingEngine``.
+
+One ``AsyncScheduler`` owns one engine (one model's weights) and runs a
+single worker task that repeatedly: reaps expired requests, selects the
+next batch (``engine.select_batch`` — oldest-bucket-first, per-request
+DecodeConfig respected), and drives it ONE BLOCK AT A TIME through
+``engine.decode_batch_blocks`` on a worker thread
+(``loop.run_in_executor``).  Diffusion decode is batch-synchronous, so the
+block boundary is the scheduling grain: between blocks the event loop is
+live — it admits new submissions into the queue, answers ``/healthz``,
+fans freshly committed blocks out to per-request event streams, and
+serves earlier requests' SSE reads — while the device crunches the next
+block.  Admission into a *running* batch is impossible by construction
+(every row advances through the same denoising steps), which is why
+admission control lives at the queue: depth-bounded (``QueueFullError`` →
+HTTP 429) and deadline-bounded (queued longer than the deadline → dropped
+un-decoded with a terminal ``expired`` event).
+
+Event streams: every request gets an ordered in-memory event log —
+``block`` events as blocks commit (already sliced per request, replica
+rows dropped, offsets rebased to the request's own coordinates) and ONE
+terminal event (``done`` / ``cancelled`` / ``expired`` / ``shutdown``,
+marked ``"final": true``).  ``events(rid)`` replays the log then follows
+it live, so an SSE reader may attach before, during, or after the decode
+and still see every event exactly once, in commit order.  Finished logs
+are retained for ``stream_retain`` requests, then dropped FIFO.
+
+Threading contract: all queue mutation (submit / cancel / select) happens
+on the event-loop thread; ONLY the block-grain ``next()`` resumptions run
+on the executor thread.  The engine itself is never touched from two
+threads at once.
+"""
+from __future__ import annotations
+
+import asyncio
+from collections import deque
+from typing import AsyncIterator, Deque, Dict, List, Optional
+
+import numpy as np
+
+from repro.core.decoder import SampleStats
+from repro.serving.engine import Request, ServingEngine
+
+
+class QueueFullError(RuntimeError):
+    """Admission control: the engine queue is at max depth (HTTP 429)."""
+
+
+def stats_dict(stats: Optional[SampleStats]) -> Dict:
+    """A SampleStats as a JSON-serializable dict (wire format)."""
+    if stats is None:
+        return {}
+    return {"steps": stats.steps,
+            "forward_equivalents": stats.forward_equivalents,
+            "wall_time_s": stats.wall_time,
+            "tokens_generated": stats.tokens_generated,
+            "tps": stats.tps,
+            "revocations": stats.revocations,
+            "skipped_forwards": stats.skipped_forwards,
+            "phase_counts": stats.phase_counts}
+
+
+class _Stream:
+    """Ordered event log + wakeup for any number of async readers."""
+
+    def __init__(self):
+        self.events: List[Dict] = []
+        self.new = asyncio.Event()
+
+    def emit(self, event: Dict) -> None:
+        self.events.append(event)
+        self.new.set()
+
+    @property
+    def finished(self) -> bool:
+        return bool(self.events) and self.events[-1].get("final", False)
+
+
+class AsyncScheduler:
+    """See the module docstring.  Construct, then ``await start()``."""
+
+    def __init__(self, engine: ServingEngine, *,
+                 max_queue_depth: int = 64,
+                 default_deadline_s: float = 0.0,
+                 stream_retain: int = 256):
+        self.engine = engine
+        self.max_queue_depth = max_queue_depth
+        self.default_deadline_s = default_deadline_s
+        self.stream_retain = max(stream_retain, 1)
+        self._streams: Dict[int, _Stream] = {}
+        self._retired: Deque[int] = deque()
+        self._wake = asyncio.Event()
+        self._task: Optional[asyncio.Task] = None
+        self._loop: Optional[asyncio.AbstractEventLoop] = None
+        self._closed = False
+        self._decoding = False
+        self.counters = {"submitted": 0, "finished": 0, "rejected": 0,
+                         "cancelled": 0, "expired": 0, "errors": 0,
+                         "batches": 0, "blocks": 0}
+
+    # -- lifecycle ---------------------------------------------------------
+    async def start(self) -> "AsyncScheduler":
+        if self._task is None:
+            self._loop = asyncio.get_running_loop()
+            self._task = asyncio.create_task(self._run())
+        return self
+
+    async def close(self) -> None:
+        """Finish the in-flight batch (if any), stop the worker, and end
+        every still-open stream with a terminal ``shutdown`` event."""
+        self.shutdown_nowait()
+        if self._task is not None:
+            await self._task
+            self._task = None
+
+    def shutdown_nowait(self) -> None:
+        """Synchronous shutdown request (the router's eviction hook runs
+        in sync context — possibly on a worker thread when the server
+        builds engines off-loop): the worker exits after the batch it is
+        on, and open streams get their terminal event.  Thread-safe: the
+        asyncio primitives are only touched from the scheduler's own
+        loop."""
+        if self._loop is not None:
+            try:
+                on_loop = asyncio.get_running_loop() is self._loop
+            except RuntimeError:
+                on_loop = False
+            if not on_loop:
+                self._loop.call_soon_threadsafe(self.shutdown_nowait)
+                return
+        if self._closed:
+            return
+        self._closed = True
+        self._wake.set()
+        for rid, stream in self._streams.items():
+            if not stream.finished:
+                stream.emit({"type": "shutdown", "rid": rid,
+                             "status": "shutdown", "final": True})
+
+    @property
+    def idle(self) -> bool:
+        """No queued work and no batch in flight — safe to evict."""
+        return not self._decoding and self.engine.queue_depth == 0
+
+    # -- client API (event-loop thread only) -------------------------------
+    def submit(self, prompt: np.ndarray, *,
+               strategy: Optional[str] = None,
+               steps: Optional[int] = None,
+               gen_length: Optional[int] = None,
+               block_size: Optional[int] = None,
+               deadline_s: Optional[float] = None) -> int:
+        """Admit a request; returns its rid.  Raises ``QueueFullError``
+        at max queue depth, ``KeyError`` on an unknown strategy and
+        ``ValueError`` on infeasible geometry (both from
+        ``engine.submit``'s boundary validation)."""
+        if self._closed:
+            raise RuntimeError("scheduler is shut down")
+        if self.engine.queue_depth >= self.max_queue_depth:
+            self.counters["rejected"] += 1
+            raise QueueFullError(
+                f"queue at max depth {self.max_queue_depth}; retry later")
+        if not deadline_s:
+            # explicit 0 follows the ServerConfig convention (0 = no
+            # deadline), same as omitting it; the engine-level API keeps
+            # raw semantics (deadline_s=0.0 there = already expired)
+            deadline_s = self.default_deadline_s \
+                if self.default_deadline_s > 0 else None
+        rid = self.engine.submit(prompt, strategy=strategy, steps=steps,
+                                 gen_length=gen_length,
+                                 block_size=block_size,
+                                 deadline_s=deadline_s)
+        self._streams[rid] = _Stream()
+        self.counters["submitted"] += 1
+        self._wake.set()
+        return rid
+
+    def cancel(self, rid: int) -> bool:
+        """Cancel a still-queued request (terminal ``cancelled`` event on
+        its stream).  False once decoding started or after it finished."""
+        ok = self.engine.cancel(rid)
+        if ok:
+            self.counters["cancelled"] += 1
+            self._emit(rid, {"type": "cancelled", "rid": rid,
+                             "status": "cancelled", "final": True})
+        return ok
+
+    async def events(self, rid: int) -> AsyncIterator[Dict]:
+        """Replay-then-follow the request's event stream; the iterator
+        ends after the terminal (``"final": true``) event.  Raises
+        ``KeyError`` for an unknown (or already-retired) rid."""
+        stream = self._streams[rid]
+        i = 0
+        while True:
+            while i >= len(stream.events):
+                stream.new.clear()
+                await stream.new.wait()
+            event = stream.events[i]
+            i += 1
+            yield event
+            if event.get("final"):
+                return
+
+    async def result(self, rid: int) -> Dict:
+        """Wait for and return the request's terminal event."""
+        async for event in self.events(rid):
+            if event.get("final"):
+                return event
+        raise RuntimeError(f"stream {rid} ended without a terminal event")
+
+    def metrics(self) -> Dict:
+        return {"queue_depth": self.engine.queue_depth,
+                "decoding": self._decoding,
+                "open_streams": len(self._streams),
+                **self.counters,
+                "engine": self.engine.summary()}
+
+    # -- internals ---------------------------------------------------------
+    def _emit(self, rid: int, event: Dict) -> None:
+        stream = self._streams.get(rid)
+        if stream is None:
+            return
+        if stream.finished:
+            # exactly ONE terminal event per stream: a shutdown that
+            # raced an in-flight batch must not be followed by that
+            # batch's late `done` (nor double-retire the stream)
+            return
+        stream.emit(event)
+        if event.get("final"):
+            self._retired.append(rid)
+            while len(self._retired) > self.stream_retain:
+                old = self._retired.popleft()
+                self._streams.pop(old, None)
+                # the engine-side Request (result array included) retires
+                # with its stream — without this, a long-running server
+                # leaks one finished Request per request forever and
+                # summary() scans an ever-growing history per scrape
+                self.engine.done.pop(old, None)
+
+    async def _run(self) -> None:
+        loop = asyncio.get_running_loop()
+        while not self._closed:
+            for req in self.engine.reap_expired():
+                self.counters["expired"] += 1
+                self._emit(req.rid, {"type": "expired", "rid": req.rid,
+                                     "status": "expired", "final": True})
+            # busy BEFORE popping the queue: the router's idle probe may
+            # run (from an executor thread) in the instant between
+            # select_batch emptying the queue and the decode starting —
+            # it must not see that window as evictable idleness
+            self._decoding = True
+            batch = self.engine.select_batch()
+            if batch is None:
+                self._decoding = False
+                self._wake.clear()
+                # re-check before sleeping: a submit may have landed
+                # between select_batch and clear (same thread, so only if
+                # select awaited — it doesn't — but cheap paranoia)
+                if self.engine.queue_depth == 0 and not self._closed:
+                    await self._wake.wait()
+                continue
+            self.counters["batches"] += 1
+            try:
+                blocks = self.engine.decode_batch_blocks(batch)
+                while True:
+                    kind, payload = await loop.run_in_executor(
+                        None, _drive, blocks)
+                    if kind == "done":
+                        break
+                    blk, lo, hi, tokens = payload
+                    self.counters["blocks"] += 1
+                    for i, req in enumerate(batch.requests):
+                        # rebase to the request's own coordinates (mask
+                        # pad columns sit left of its prompt)
+                        self._emit(req.rid, {
+                            "type": "block", "rid": req.rid, "block": blk,
+                            "lo": lo - req.pad_cols,
+                            "hi": hi - req.pad_cols,
+                            "tokens": tokens[i].tolist()})
+                for req in batch.requests:
+                    self.counters["finished"] += 1
+                    self._emit(req.rid, self._done_event(req))
+            except Exception as e:
+                # a failed batch must not kill the serving loop: its
+                # requests get a terminal error event, everyone queued
+                # behind it still gets served
+                self.counters["errors"] += 1
+                for req in batch.requests:
+                    self._emit(req.rid, {
+                        "type": "error", "rid": req.rid,
+                        "status": "error", "final": True,
+                        "error": f"{type(e).__name__}: {e}"})
+            finally:
+                self._decoding = False
+
+    @staticmethod
+    def _done_event(req: Request) -> Dict:
+        return {"type": "done", "rid": req.rid, "status": "ok",
+                "final": True,
+                "tokens": req.result.tolist(),
+                "latency_s": req.latency,
+                "stats": stats_dict(req.stats)}
+
+
+def _drive(blocks):
+    """One generator resumption, shaped for run_in_executor."""
+    try:
+        return ("block", next(blocks))
+    except StopIteration as fin:
+        return ("done", fin.value)

@@ -1,0 +1,533 @@
+"""Stdlib-only async HTTP/1.1 + SSE serving front end.
+
+Hand-rolled on ``asyncio.start_server`` — no http.server, no third-party
+web framework, zero new runtime dependencies.  The endpoint surface:
+
+* ``POST /v1/generate`` — submit a request.  JSON body::
+
+      {"prompt": [ids...] | "text",        # text needs a server tokenizer
+       "model": "name",                    # default: first registered
+       "strategy": "fdm_a", "steps": 32,   # per-request DecodeConfig
+       "gen_length": 64, "block_size": 16, # overrides (validated against
+                                           # the registry / geometry)
+       "deadline_s": 5.0,                  # max QUEUED time
+       "wait": false}                      # true = block for the result
+
+  ``wait=false`` (default) answers ``202 {"rid", "model", "stream"}``
+  immediately; follow the ``stream`` URL for SSE.  ``wait=true`` blocks
+  until the terminal event and answers it as JSON.  Unknown strategy or
+  bad geometry → 400 at the boundary; queue at max depth → 429.
+
+* ``GET /v1/stream/{rid}?model=name`` — Server-Sent Events: one ``block``
+  event per committed semi-AR block (the natural streaming grain of
+  blockwise diffusion decoding — tokens inside a block finalize
+  together), then exactly one terminal event (``done`` / ``cancelled`` /
+  ``expired`` / ``shutdown``).  Events replay from the start, so
+  attaching after (or long after) the decode still yields the full
+  ordered stream.
+
+* ``POST /v1/cancel`` — ``{"rid", "model"}``; true iff still queued.
+* ``GET /v1/models`` — registered models (+ residency) and strategies.
+* ``GET /healthz`` — liveness + per-model queue depths.
+* ``GET /metrics`` — Prometheus-style text exposition.
+
+Multi-model: requests route through a ``ModelRouter``; each resident
+engine gets its own ``AsyncScheduler`` (created lazily, torn down by the
+router's eviction hook so an evicted model's scheduler cannot pin its
+engine — and with it the weights — past eviction).
+"""
+from __future__ import annotations
+
+import asyncio
+import json
+import threading
+import urllib.parse
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.configs.base import ServerConfig
+from repro.core.decoder import decode_cache_info
+from repro.core.strategies import available_strategies
+from repro.serving.router import ModelRouter
+from repro.serving.scheduler import AsyncScheduler, QueueFullError
+
+_MAX_HEADER_BYTES = 32 * 1024
+
+
+class _HttpError(Exception):
+    def __init__(self, status: int, message: str):
+        super().__init__(message)
+        self.status = status
+        self.message = message
+
+
+_STATUS_TEXT = {200: "OK", 202: "Accepted", 400: "Bad Request",
+                404: "Not Found", 405: "Method Not Allowed",
+                413: "Payload Too Large", 429: "Too Many Requests",
+                500: "Internal Server Error"}
+
+
+class ServingServer:
+    """One process-local server over a ``ModelRouter``.
+
+    ``tokenizer`` (optional, e.g. ``repro.data.CharTokenizer``) enables
+    string prompts and adds decoded ``text`` fields to responses/events.
+    """
+
+    def __init__(self, router: ModelRouter,
+                 scfg: ServerConfig = ServerConfig(), *, tokenizer=None):
+        self.router = router
+        self.scfg = scfg
+        self.tokenizer = tokenizer
+        self._scheds: Dict[str, AsyncScheduler] = {}
+        self._build_lock = asyncio.Lock()
+        self._server: Optional[asyncio.AbstractServer] = None
+        self.host: Optional[str] = None
+        self.port: Optional[int] = None
+        # tear the scheduler down WITH the engine: a live scheduler holds
+        # the engine (hence the params) strongly, which would make router
+        # eviction a memory no-op.  A caller-installed hook is chained,
+        # not clobbered.
+        self._chained_on_evict = router.on_evict
+        router.on_evict = self._on_evict
+
+    # -- lifecycle ---------------------------------------------------------
+    async def start(self) -> Tuple[str, int]:
+        self._server = await asyncio.start_server(
+            self._handle_conn, self.scfg.host, self.scfg.port)
+        sock = self._server.sockets[0]
+        self.host, self.port = sock.getsockname()[:2]
+        return self.host, self.port
+
+    async def serve_forever(self) -> None:
+        assert self._server is not None, "call start() first"
+        async with self._server:
+            await self._server.serve_forever()
+
+    async def close(self) -> None:
+        for sched in list(self._scheds.values()):
+            await sched.close()
+        self._scheds.clear()
+        if self._server is not None:
+            self._server.close()
+            await self._server.wait_closed()
+            self._server = None
+
+    # -- model plumbing ----------------------------------------------------
+    def _on_evict(self, name: str, engine) -> None:
+        sched = self._scheds.pop(name, None)
+        if sched is not None:
+            sched.shutdown_nowait()
+        if self._chained_on_evict is not None:
+            self._chained_on_evict(name, engine)
+
+    async def scheduler(self, name: str) -> AsyncScheduler:
+        """Resident scheduler for a model (engine built/touched through
+        the router, so this call is what drives LRU + eviction).
+
+        Warm path: a resident engine with a live scheduler is returned
+        with a cheap LRU touch, no lock, no thread hop.  Cold path: the
+        build runs on an executor thread under a lock — a cold build
+        (checkpoint load + model init) or an eviction (``gc.collect``)
+        can take seconds, and freezing the event loop for it would
+        stall every other model's streams and /healthz — the liveness
+        this layer exists to provide.  Eviction hooks fired from that
+        thread re-dispatch onto the loop
+        (``AsyncScheduler.shutdown_nowait`` is thread-safe).  A request
+        admitted in the narrow window while its scheduler is being
+        evicted gets a terminal ``shutdown`` event — visible and
+        retryable, never a silent drop."""
+        sched = self._scheds.get(name)
+        engine = self.router.touch(name)
+        if sched is not None and engine is not None and \
+                sched.engine is engine:
+            return sched
+        async with self._build_lock:
+            loop = asyncio.get_running_loop()
+            engine = await loop.run_in_executor(
+                None, self.router.engine, name)   # KeyError on unknown
+        sched = self._scheds.get(name)
+        if sched is None or sched.engine is not engine:
+            if sched is not None:
+                await sched.close()
+            sched = AsyncScheduler(
+                engine,
+                max_queue_depth=self.scfg.max_queue_depth,
+                default_deadline_s=self.scfg.default_deadline_s,
+                stream_retain=self.scfg.stream_retain)
+            await sched.start()
+            self._scheds[name] = sched
+            self.router.set_busy_probe(
+                name, lambda s=sched: not s.idle)
+        return sched
+
+    # -- connection handling -----------------------------------------------
+    async def _handle_conn(self, reader: asyncio.StreamReader,
+                           writer: asyncio.StreamWriter) -> None:
+        try:
+            while True:
+                try:
+                    request = await self._read_request(reader)
+                except _HttpError as e:
+                    # parse-stage failures (malformed request line,
+                    # oversized headers/body): answer, then drop the
+                    # connection — the stream position is unreliable
+                    self._respond(writer, e.status, {"error": e.message})
+                    await writer.drain()
+                    break
+                if request is None:
+                    break
+                method, path, query, body = request
+                try:
+                    close = await self._route(method, path, query, body,
+                                              writer)
+                except _HttpError as e:
+                    self._respond(writer, e.status, {"error": e.message})
+                    close = False
+                except (KeyError, ValueError) as e:
+                    self._respond(writer, 400, {"error": str(e)})
+                    close = False
+                except QueueFullError as e:
+                    self._respond(writer, 429, {"error": str(e)})
+                    close = False
+                except (ConnectionError, asyncio.IncompleteReadError):
+                    raise
+                except Exception as e:
+                    # catch-all: a handler bug must answer 500, not drop
+                    # the connection with no status line
+                    self._respond(writer, 500,
+                                  {"error": f"{type(e).__name__}: {e}"})
+                    close = False
+                await writer.drain()
+                if close:
+                    break
+        except (ConnectionError, asyncio.IncompleteReadError,
+                asyncio.LimitOverrunError):
+            pass
+        finally:
+            writer.close()
+            try:
+                await writer.wait_closed()
+            except ConnectionError:
+                pass
+
+    async def _read_request(self, reader: asyncio.StreamReader):
+        """Parse one HTTP/1.1 request; None on clean EOF (keep-alive)."""
+        try:
+            line = await reader.readline()
+        except (asyncio.LimitOverrunError, ValueError):
+            raise _HttpError(400, "request line too long")
+        if not line or line in (b"\r\n", b"\n"):
+            return None
+        parts = line.decode("latin-1").strip().split()
+        if len(parts) != 3:
+            raise _HttpError(400, "malformed request line")
+        method, target, _version = parts
+        headers = {}
+        total = 0
+        while True:
+            try:
+                hline = await reader.readline()
+            except (asyncio.LimitOverrunError, ValueError):
+                # one header line beyond the StreamReader limit would
+                # otherwise kill the handler task with no response
+                raise _HttpError(400, "header line too long")
+            total += len(hline)
+            if total > _MAX_HEADER_BYTES:
+                raise _HttpError(400, "headers too large")
+            if hline in (b"\r\n", b"\n", b""):
+                break
+            key, _, val = hline.decode("latin-1").partition(":")
+            headers[key.strip().lower()] = val.strip()
+        try:
+            length = int(headers.get("content-length", "0") or "0")
+        except ValueError:
+            raise _HttpError(400, "bad Content-Length")
+        if length > self.scfg.max_body_bytes:
+            raise _HttpError(413, "request body too large")
+        body = await reader.readexactly(length) if length else b""
+        url = urllib.parse.urlsplit(target)
+        query = dict(urllib.parse.parse_qsl(url.query))
+        return method.upper(), url.path, query, body
+
+    # -- routing -----------------------------------------------------------
+    async def _route(self, method: str, path: str, query: Dict[str, str],
+                     body: bytes, writer: asyncio.StreamWriter) -> bool:
+        """Dispatch one request; returns True when the connection must
+        close afterwards (SSE streams are close-delimited)."""
+        if method == "POST" and path == "/v1/generate":
+            await self._generate(body, writer)
+        elif method == "GET" and path.startswith("/v1/stream/"):
+            return await self._stream(path, query, writer)
+        elif method == "POST" and path == "/v1/cancel":
+            await self._cancel(body, writer)
+        elif method == "GET" and path == "/v1/models":
+            self._respond(writer, 200, {
+                "models": self.router.info()["models"],
+                "strategies": list(available_strategies())})
+        elif method == "GET" and path == "/healthz":
+            self._respond(writer, 200, {
+                "ok": True,
+                "models": self.router.names(),
+                "queue_depth": {n: s.engine.queue_depth
+                                for n, s in list(self._scheds.items())}})
+        elif method == "GET" and path == "/metrics":
+            self._respond_raw(writer, 200, self._metrics_text(),
+                              "text/plain; version=0.0.4")
+        else:
+            raise _HttpError(404, f"no route for {method} {path}")
+        return False
+
+    # -- endpoints ---------------------------------------------------------
+    def _resolve_model(self, model: Optional[str]) -> str:
+        """rids are per-model counters, so /v1/stream and /v1/cancel may
+        only default the model when there is no ambiguity — defaulting
+        across several models would read (or cancel!) some OTHER user's
+        same-numbered request."""
+        if model:
+            return model
+        names = self.router.names()
+        if len(names) == 1:
+            return names[0]
+        raise _HttpError(400, "several models are registered; pass "
+                              "'model' (rids are per-model)")
+
+    def _parse_json(self, body: bytes) -> Dict:
+        if not body:
+            raise _HttpError(400, "empty body; send JSON")
+        try:
+            obj = json.loads(body)
+        except json.JSONDecodeError as e:
+            raise _HttpError(400, f"invalid JSON: {e}")
+        if not isinstance(obj, dict):
+            raise _HttpError(400, "JSON body must be an object")
+        return obj
+
+    def _prompt_ids(self, req: Dict) -> np.ndarray:
+        prompt = req.get("prompt")
+        if isinstance(prompt, str):
+            if self.tokenizer is None:
+                raise _HttpError(
+                    400, "string prompts need a server-side tokenizer; "
+                         "send token ids")
+            prompt = self.tokenizer.encode(prompt)
+        if not isinstance(prompt, list) or not prompt or \
+                not all(isinstance(t, int) and not isinstance(t, bool)
+                        for t in prompt):
+            raise _HttpError(400, "prompt must be a non-empty list of "
+                                  "token ids (or a string)")
+        return np.asarray(prompt, np.int32)
+
+    async def _generate(self, body: bytes,
+                        writer: asyncio.StreamWriter) -> None:
+        req = self._parse_json(body)
+        prompt = self._prompt_ids(req)
+        for key, types in (("strategy", str), ("steps", int),
+                           ("gen_length", int), ("block_size", int),
+                           ("deadline_s", (int, float)),
+                           ("model", str)):
+            val = req.get(key)
+            if val is not None and (not isinstance(val, types)
+                                    or isinstance(val, bool)):
+                raise _HttpError(400, f"{key} has the wrong type")
+        model = req.get("model") or self.router.default
+        gen_length = req.get("gen_length")
+        if gen_length is not None and \
+                gen_length > self.scfg.max_gen_length:
+            raise _HttpError(400, f"gen_length {gen_length} exceeds the "
+                                  f"server cap {self.scfg.max_gen_length}")
+        steps = req.get("steps")
+        if steps is not None and steps > self.scfg.max_steps:
+            raise _HttpError(400, f"steps {steps} exceeds the server "
+                                  f"cap {self.scfg.max_steps}")
+        sched = await self.scheduler(model)
+        rid = sched.submit(prompt,
+                           strategy=req.get("strategy"),
+                           steps=req.get("steps"),
+                           gen_length=gen_length,
+                           block_size=req.get("block_size"),
+                           deadline_s=req.get("deadline_s"))
+        if req.get("wait"):
+            event = await sched.result(rid)
+            self._respond(writer, 200, {"rid": rid, "model": model,
+                                        **self._with_text(event)})
+            return
+        self._respond(writer, 202, {
+            "rid": rid, "model": model,
+            "stream": f"/v1/stream/{rid}?model="
+                      f"{urllib.parse.quote(model)}"})
+
+    async def _stream(self, path: str, query: Dict[str, str],
+                      writer: asyncio.StreamWriter) -> bool:
+        tail = path[len("/v1/stream/"):]
+        if not tail.isdigit():
+            raise _HttpError(404, f"bad stream id {tail!r}")
+        rid = int(tail)
+        model = self._resolve_model(query.get("model"))
+        sched = self._scheds.get(model)
+        if sched is None:
+            raise _HttpError(404, f"model {model!r} has no live "
+                                  f"scheduler (evicted or never used)")
+        try:
+            events = sched.events(rid)
+            first = await anext(events)
+        except KeyError:
+            raise _HttpError(404, f"unknown request id {rid}")
+        writer.write(b"HTTP/1.1 200 OK\r\n"
+                     b"Content-Type: text/event-stream\r\n"
+                     b"Cache-Control: no-store\r\n"
+                     b"Connection: close\r\n\r\n")
+        await writer.drain()
+        await self._write_sse(writer, first)
+        async for event in events:
+            await self._write_sse(writer, event)
+        return True          # close-delimited
+
+    async def _write_sse(self, writer: asyncio.StreamWriter,
+                         event: Dict) -> None:
+        payload = json.dumps(self._with_text(event))
+        writer.write(f"event: {event['type']}\n"
+                     f"data: {payload}\n\n".encode())
+        await writer.drain()
+
+    def _with_text(self, event: Dict) -> Dict:
+        if self.tokenizer is not None and "tokens" in event:
+            return {**event, "text": self.tokenizer.decode(
+                np.asarray(event["tokens"]))}
+        return event
+
+    async def _cancel(self, body: bytes,
+                      writer: asyncio.StreamWriter) -> None:
+        req = self._parse_json(body)
+        model = self._resolve_model(req.get("model"))
+        rid = req.get("rid")
+        if not isinstance(rid, int):
+            raise _HttpError(400, "rid must be an integer")
+        sched = self._scheds.get(model)
+        cancelled = bool(sched and sched.cancel(rid))
+        self._respond(writer, 200, {"rid": rid, "cancelled": cancelled})
+
+    # -- metrics -----------------------------------------------------------
+    def _metrics_text(self) -> str:
+        lines = ["# TYPE repro_up gauge", "repro_up 1"]
+
+        def emit(series: str, value, labels: str = "") -> None:
+            lines.append(f"repro_{series}{labels} {value}")
+
+        def lab(name: str, **extra: str) -> str:
+            """Label set with the model name escaped per the exposition
+            format (an unescaped quote/backslash would corrupt the whole
+            scrape)."""
+            esc = name.replace("\\", r"\\").replace('"', r'\"') \
+                .replace("\n", r"\n")
+            pairs = [f'model="{esc}"'] + \
+                [f'{k}="{v}"' for k, v in extra.items()]
+            return "{" + ",".join(pairs) + "}"
+
+        info = self.router.info()
+        emit("router_resident_bytes", info["resident_bytes"])
+        emit("router_budget_bytes", info["budget_bytes"])
+        emit("router_evictions_total", info["evictions"])
+        emit("router_builds_total", info["builds"])
+        emit("router_swaps_total", info["swaps"])
+        # snapshot: evictions may pop entries from an executor thread
+        for name, sched in list(self._scheds.items()):
+            m = sched.metrics()
+            labels = lab(name)
+            emit("queue_depth", m["queue_depth"], labels)
+            emit("decoding", int(m["decoding"]), labels)
+            for counter in ("submitted", "finished", "rejected",
+                            "cancelled", "expired", "errors", "batches",
+                            "blocks"):
+                emit(f"requests_{counter}_total", m[counter], labels)
+            summary = m["engine"]
+            if summary:
+                emit("latency_seconds", summary["mean_latency_s"],
+                     lab(name, stat="mean"))
+                emit("latency_seconds", summary["p95_latency_s"],
+                     lab(name, stat="p95"))
+                emit("decode_tps", summary["decode_tps"], labels)
+                emit("throughput_tps", summary["throughput_tps"], labels)
+        cache = decode_cache_info()
+        for fld in ("entries", "runners", "hits", "misses", "traces"):
+            emit(f"decode_cache_{fld}", getattr(cache, fld))
+        return "\n".join(lines) + "\n"
+
+    # -- response helpers --------------------------------------------------
+    def _respond(self, writer: asyncio.StreamWriter, status: int,
+                 obj: Dict) -> None:
+        self._respond_raw(writer, status, json.dumps(obj),
+                          "application/json")
+
+    def _respond_raw(self, writer: asyncio.StreamWriter, status: int,
+                     text: str, ctype: str) -> None:
+        data = text.encode()
+        head = (f"HTTP/1.1 {status} {_STATUS_TEXT.get(status, '?')}\r\n"
+                f"Content-Type: {ctype}\r\n"
+                f"Content-Length: {len(data)}\r\n"
+                f"Connection: keep-alive\r\n\r\n")
+        writer.write(head.encode() + data)
+
+
+class ServerThread:
+    """Run a ``ServingServer`` on a dedicated thread with its own event
+    loop — the in-process harness used by tests, ``benchmarks/
+    serving_load.py``, and notebook/demo callers.  Blocking clients
+    (``repro.serving.client``) talk to it over real sockets.
+
+        handle = ServerThread(router, scfg).start()
+        ... ServingClient(handle.host, handle.port) ...
+        handle.stop()
+    """
+
+    def __init__(self, router: ModelRouter,
+                 scfg: ServerConfig = ServerConfig(), *, tokenizer=None):
+        self.server = ServingServer(router, scfg, tokenizer=tokenizer)
+        self.host: Optional[str] = None
+        self.port: Optional[int] = None
+        self._loop: Optional[asyncio.AbstractEventLoop] = None
+        self._stop: Optional[asyncio.Future] = None
+        self._started = threading.Event()
+        self._error: Optional[BaseException] = None
+        self._thread = threading.Thread(target=self._main, daemon=True,
+                                        name="repro-serving")
+
+    def _main(self) -> None:
+        try:
+            asyncio.run(self._amain())
+        except BaseException as e:           # surface startup failures
+            self._error = e
+            self._started.set()
+
+    async def _amain(self) -> None:
+        self._loop = asyncio.get_running_loop()
+        self._stop = self._loop.create_future()
+        try:
+            self.host, self.port = await self.server.start()
+        finally:
+            self._started.set()
+        await self._stop
+        await self.server.close()
+
+    def start(self, timeout: float = 30.0) -> "ServerThread":
+        self._thread.start()
+        if not self._started.wait(timeout):
+            raise TimeoutError("server thread failed to start")
+        if self._error is not None:
+            raise self._error
+        return self
+
+    def stop(self, timeout: float = 30.0) -> None:
+        if self._loop is not None and self._stop is not None and \
+                not self._stop.done():
+            self._loop.call_soon_threadsafe(self._stop.set_result, None)
+        self._thread.join(timeout)
+
+    def call(self, coro_fn, *args, timeout: float = 30.0):
+        """Run ``await coro_fn(*args)`` on the server loop from the
+        calling (non-loop) thread; returns its result.  How tests reach
+        scheduler/router internals that must run on the loop thread."""
+        assert self._loop is not None
+        fut = asyncio.run_coroutine_threadsafe(coro_fn(*args), self._loop)
+        return fut.result(timeout)

@@ -1,0 +1,412 @@
+"""The async serving front end, end to end over real sockets: HTTP/SSE
+smoke (tier-1 server smoke test), concurrent mixed-length mixed-strategy
+traffic bit-identical to direct Decoder output, admission control,
+scheduler event semantics, and the memory-budgeted router's observable
+cache eviction."""
+import asyncio
+import dataclasses
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import (DecodeConfig, RouterConfig, ServerConfig,
+                           get_config)
+from repro.core import Decoder, decode_cache_info, decode_cache_scope
+from repro.models.model import init_model
+from repro.serving import (AsyncScheduler, ModelRouter, QueueFullError,
+                           ServerError, ServerThread, ServingClient,
+                           ServingEngine, params_bytes)
+
+CFG = get_config("llada-8b").reduced()
+DCFG = DecodeConfig(gen_length=16, block_size=8, steps=16,
+                    strategy="probability")
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_model(jax.random.PRNGKey(0), CFG)
+
+
+@pytest.fixture(scope="module")
+def server(params):
+    """One ServerThread for the whole module: model 'tiny' records its
+    engine-side block-commit order for the SSE-order assertions."""
+    recorded = []
+
+    def factory():
+        return ServingEngine(
+            params, CFG, DCFG, max_batch=4,
+            on_block_committed=lambda reqs, blk, lo, hi, x:
+                recorded.append((blk, lo, hi,
+                                 sorted(r.rid for r in reqs))))
+
+    router = ModelRouter(RouterConfig())
+    router.register("tiny", factory)
+    handle = ServerThread(router, ServerConfig(port=0)).start()
+    handle.recorded = recorded
+    yield handle
+    handle.stop()
+
+
+@pytest.fixture()
+def client(server):
+    return ServingClient(server.host, server.port)
+
+
+def _direct(params, prompt, **over):
+    """Reference decode, bypassing the whole serving stack.  The rng does
+    not matter for the deterministic strategies used here (parity across
+    drivers and batch compositions is established in test_loop)."""
+    dcfg = dataclasses.replace(DCFG, **over) if over else DCFG
+    out, _ = Decoder(params, CFG, dcfg).generate(
+        jax.random.PRNGKey(99), np.asarray(prompt, np.int32)[None])
+    return np.asarray(out)[0]
+
+
+# --------------------------------------------------------------------------
+# tier-1 server smoke test: one request end-to-end over SSE
+# --------------------------------------------------------------------------
+
+def test_server_smoke_sse_end_to_end(server, client, params):
+    """Launch on an ephemeral port (module fixture), stream one request,
+    and assert the SSE block order matches the engine's
+    on_block_committed order exactly."""
+    n_before = len(server.recorded)
+    prompt = [3, 5, 2, 7, 4, 6]
+    events = list(client.generate_stream(prompt))
+    names = [name for name, _ in events]
+    assert names == ["block", "block", "done"]
+    rid = events[-1][1]["rid"]
+    committed = [e for e in server.recorded[n_before:] if rid in e[3]]
+    # engine-side hook fired once per block, in the same order the SSE
+    # stream delivered (lo/hi in canvas coordinates; this request got no
+    # pads, so they match the rebased SSE offsets directly)
+    assert [(blk, lo, hi) for blk, lo, hi, _ in committed] == \
+        [(e["block"], e["lo"], e["hi"]) for name, e in events
+         if name == "block"]
+    # streamed blocks tile the generated region, in commit order
+    done = events[-1][1]
+    streamed = sum((e["tokens"] for name, e in events if name == "block"),
+                   [])
+    assert streamed == done["tokens"][len(prompt):]
+    assert done["status"] == "ok"
+    assert done["stats"]["steps"] > 0
+    # the final text is bit-identical to a direct Decoder decode
+    assert done["tokens"] == _direct(params, prompt).tolist()
+
+
+# --------------------------------------------------------------------------
+# the end-to-end acceptance test: N concurrent mixed requests
+# --------------------------------------------------------------------------
+
+def test_concurrent_mixed_requests_bit_identical(server, client, params):
+    """Six concurrent requests — two prompt lengths (different buckets),
+    two strategies (never co-batched) — through client → server →
+    scheduler → engine; every final token sequence must be bit-identical
+    to decoding that prompt directly through the Decoder."""
+    cases = [([3, 5, 2, 7, 4, 6], None),
+             ([3, 5, 2, 7, 4, 6], "entropy"),
+             ([9, 1, 4, 4, 8, 2, 6, 5, 7, 3, 1, 2, 9, 8], None),
+             ([9, 1, 4, 4, 8, 2, 6, 5, 7, 3, 1, 2, 9, 8], "entropy"),
+             ([5, 5, 5, 5, 5, 5], "margin"),
+             ([2, 4, 6, 8, 1, 3], None)]
+    results = [None] * len(cases)
+    errors = []
+
+    def worker(i, prompt, strategy):
+        try:
+            results[i] = client.generate(prompt, strategy=strategy,
+                                         wait=True)
+        except Exception as e:          # surface in the main thread
+            errors.append((i, e))
+
+    threads = [threading.Thread(target=worker, args=(i, p, s))
+               for i, (p, s) in enumerate(cases)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=300)
+    assert not errors, errors
+    for (prompt, strategy), res in zip(cases, results):
+        assert res["status"] == "ok"
+        over = {"strategy": strategy} if strategy else {}
+        expect = _direct(params, prompt, **over)
+        assert res["tokens"] == expect.tolist(), (prompt, strategy)
+
+
+# --------------------------------------------------------------------------
+# request validation + admission control over HTTP
+# --------------------------------------------------------------------------
+
+def test_unknown_strategy_is_400(client):
+    with pytest.raises(ServerError) as err:
+        client.generate([3, 5, 2], strategy="nope")
+    assert err.value.status == 400
+    assert "unknown strategy" in err.value.message
+
+
+def test_bad_geometry_is_400(client):
+    with pytest.raises(ServerError) as err:
+        client.generate([3, 5, 2], gen_length=12, block_size=8)
+    assert err.value.status == 400
+    with pytest.raises(ServerError) as err:
+        client.generate([3, 5, 2], block_size=0)
+    assert err.value.status == 400              # not a 500 via div-by-zero
+
+
+def test_unknown_model_is_404_ish(client):
+    with pytest.raises(ServerError) as err:
+        client.generate([3, 5, 2], model="missing")
+    assert err.value.status == 400              # KeyError at the boundary
+    assert "unknown model" in err.value.message
+
+
+def test_unknown_routes_are_404(client):
+    with pytest.raises(ServerError) as err:
+        client._request("GET", "/v2/nothing")
+    assert err.value.status == 404
+    with pytest.raises(ServerError) as err:
+        client._request("GET", "/v1/stream/123456")
+    assert err.value.status == 404
+
+
+def test_gen_length_cap_is_400(client):
+    with pytest.raises(ServerError) as err:
+        client.generate([3, 5, 2], gen_length=1 << 20)
+    assert err.value.status == 400
+    assert "server cap" in err.value.message
+
+
+def test_steps_cap_is_400(client):
+    """An absurd steps override must be rejected at the boundary — one
+    request must not be able to park the decode worker for hours."""
+    with pytest.raises(ServerError) as err:
+        client.generate([3, 5, 2], steps=100_000_000)
+    assert err.value.status == 400
+    assert "server cap" in err.value.message
+
+
+def test_wrong_field_type_is_400_not_a_dropped_connection(client):
+    with pytest.raises(ServerError) as err:
+        client.generate([3, 5, 2], steps="ten")
+    assert err.value.status == 400
+    assert "wrong type" in err.value.message
+
+
+def test_multi_model_rid_routes_need_explicit_model(params):
+    """rids are per-model counters: with several models registered,
+    /v1/cancel and /v1/stream must refuse to default the model rather
+    than touch some other user's same-numbered request."""
+    router = ModelRouter(RouterConfig())
+    router.register("a",
+                    lambda: ServingEngine(params, CFG, DCFG, max_batch=2))
+    router.register("b",
+                    lambda: ServingEngine(params, CFG, DCFG, max_batch=2))
+    handle = ServerThread(router, ServerConfig(port=0)).start()
+    try:
+        client = ServingClient(handle.host, handle.port)
+        with pytest.raises(ServerError) as err:
+            client.cancel(0)
+        assert err.value.status == 400
+        assert "per-model" in err.value.message
+        with pytest.raises(ServerError) as err:
+            list(client.stream(0))
+        assert err.value.status == 400
+        # explicit model works end to end
+        res = client.generate([3, 5, 2, 7, 4, 6], model="b", wait=True)
+        assert res["status"] == "ok" and res["model"] == "b"
+    finally:
+        handle.stop()
+
+
+def test_backpressure_429(params):
+    """A server with max_queue_depth=0 rejects every submission with 429
+    (the deterministic admission-control probe)."""
+    router = ModelRouter(RouterConfig())
+    router.register("tiny",
+                    lambda: ServingEngine(params, CFG, DCFG, max_batch=4))
+    handle = ServerThread(router, ServerConfig(
+        port=0, max_queue_depth=0)).start()
+    try:
+        client = ServingClient(handle.host, handle.port)
+        with pytest.raises(ServerError) as err:
+            client.generate([3, 5, 2])
+        assert err.value.status == 429
+    finally:
+        handle.stop()
+
+
+def test_healthz_and_metrics(client):
+    health = client.healthz()
+    assert health["ok"] is True
+    assert "tiny" in health["models"]
+    text = client.metrics_text()
+    assert "repro_up 1" in text
+    assert 'repro_queue_depth{model="tiny"}' in text
+    assert "repro_decode_cache_entries" in text
+    models = client.models()
+    assert "probability" in models["strategies"]
+    assert models["models"]["tiny"]["resident"] is True
+
+
+# --------------------------------------------------------------------------
+# scheduler event semantics (no sockets: pure asyncio)
+# --------------------------------------------------------------------------
+
+def test_scheduler_backpressure_and_cancel_events(params):
+    async def main():
+        engine = ServingEngine(params, CFG, DCFG, max_batch=4)
+        sched = AsyncScheduler(engine, max_queue_depth=1)
+        # worker not started: the queue cannot drain under us
+        rid = sched.submit(np.full((6,), 3, np.int32))
+        with pytest.raises(QueueFullError):
+            sched.submit(np.full((6,), 3, np.int32))
+        assert sched.counters["rejected"] == 1
+        assert sched.cancel(rid) is True
+        events = [e async for e in sched.events(rid)]
+        assert [e["type"] for e in events] == ["cancelled"]
+        assert events[-1]["final"] is True
+        # replay: a second reader sees the identical stream
+        again = [e async for e in sched.events(rid)]
+        assert again == events
+
+    asyncio.run(main())
+
+
+def test_scheduler_batch_error_does_not_kill_the_loop(params):
+    """A failing batch gets terminal error events; requests behind it
+    are still served (the worker loop survives)."""
+    async def main():
+        engine = ServingEngine(params, CFG, DCFG, max_batch=4)
+        real = engine.decode_batch_blocks
+        calls = {"n": 0}
+
+        def flaky(batch):
+            calls["n"] += 1
+            if calls["n"] == 1:
+                raise RuntimeError("boom")
+            return real(batch)
+
+        engine.decode_batch_blocks = flaky
+        sched = AsyncScheduler(engine)
+        await sched.start()
+        bad = sched.submit(np.full((6,), 3, np.int32))
+        terminal = await sched.result(bad)
+        assert terminal["type"] == "error"
+        assert "boom" in terminal["error"]
+        good = sched.submit(np.full((6,), 3, np.int32))
+        terminal = await sched.result(good)
+        assert terminal["type"] == "done"
+        assert sched.counters["errors"] == 1
+        await sched.close()
+
+    asyncio.run(main())
+
+
+def test_scheduler_deadline_emits_expired_event(params):
+    async def main():
+        engine = ServingEngine(params, CFG, DCFG, max_batch=4)
+        sched = AsyncScheduler(engine)
+        await sched.start()
+        # a deadline already in the past: expiry is deterministic, not a
+        # race against the worker's first wakeup
+        rid = sched.submit(np.full((6,), 3, np.int32), deadline_s=-1.0)
+        await asyncio.sleep(0.05)       # let the worker reap it
+        terminal = await sched.result(rid)
+        assert terminal["type"] == "expired"
+        assert sched.counters["expired"] == 1
+        # explicit deadline_s=0 follows the server convention: NO
+        # deadline (not expire-immediately) — the request decodes
+        rid = sched.submit(np.full((6,), 3, np.int32), deadline_s=0)
+        terminal = await sched.result(rid)
+        assert terminal["type"] == "done"
+        await sched.close()
+
+    asyncio.run(main())
+
+
+# --------------------------------------------------------------------------
+# memory-budgeted multi-model router: observable cache eviction + hot swap
+# --------------------------------------------------------------------------
+
+def _make_factory(seed):
+    def factory():
+        fresh = init_model(jax.random.PRNGKey(seed), CFG)
+        return ServingEngine(fresh, CFG, DCFG, max_batch=2)
+    return factory
+
+
+def _decode_once(engine):
+    rid = engine.submit(np.full((6,), 3, np.int32))
+    engine.run_until_idle()
+    return engine.result(rid).result
+
+
+def test_router_budget_evicts_idle_lru_and_frees_cache():
+    """Two models under a budget that fits only one: touching B must
+    force-drop idle A, and the drop must be visible in the weak runner
+    cache (entries shrink — nothing pins the evicted weights)."""
+    with decode_cache_scope():
+        probe = _make_factory(1)()
+        one_model_bytes = params_bytes(probe.params)
+        del probe
+        router = ModelRouter(RouterConfig(
+            budget_bytes=int(one_model_bytes * 1.5)))
+        router.register("a", _make_factory(1))
+        router.register("b", _make_factory(2))
+        _decode_once(router.engine("a"))
+        assert decode_cache_info().entries == 1
+        assert router.resident("a")
+        _decode_once(router.engine("b"))    # over budget → A evicted
+        assert not router.resident("a")
+        assert router.resident("b")
+        assert router.counters["evictions"] == 1
+        assert router.resident_bytes() <= int(one_model_bytes * 1.5)
+        # the evicted engine's params were the cache key anchors: its
+        # entry (and compiled runners) went with it
+        assert decode_cache_info().entries == 1
+        # A rebuilds on demand from its factory
+        _decode_once(router.engine("a"))
+        assert router.resident("a") and not router.resident("b")
+
+
+def test_router_never_evicts_busy_engines():
+    with decode_cache_scope():
+        nbytes = params_bytes(_make_factory(1)().params)
+        router = ModelRouter(RouterConfig(budget_bytes=nbytes))
+        router.register("a", _make_factory(1))
+        router.register("b", _make_factory(2))
+        engine_a = router.engine("a")
+        engine_a.submit(np.full((6,), 3, np.int32))     # queued → busy
+        router.engine("b")
+        # both resident: the budget transiently overshoots rather than
+        # dropping a busy engine
+        assert router.resident("a") and router.resident("b")
+        engine_a.run_until_idle()
+        router.engine("b")                  # next touch enforces again
+        assert not router.resident("a")
+
+
+def test_router_hot_swap_evicts_old_weights():
+    """Hot swap = build a new engine; the old engine's runner-cache entry
+    must evict with its params (weak cache), and the new engine decodes."""
+    with decode_cache_scope():
+        router = ModelRouter(RouterConfig())
+        router.register("a", _make_factory(1))
+        out_old = _decode_once(router.engine("a"))
+        assert decode_cache_info().entries == 1
+        swapped = router.hot_swap("a", _make_factory(3))
+        out_new = _decode_once(swapped)
+        info = decode_cache_info()
+        assert info.entries == 1            # old entry gone, new one live
+        assert router.counters["swaps"] == 1
+        assert out_old.shape == out_new.shape
+        assert not np.array_equal(out_old, out_new)   # weights changed
+
+
+def test_router_unknown_model_raises():
+    router = ModelRouter(RouterConfig())
+    with pytest.raises(KeyError, match="unknown model"):
+        router.engine("ghost")

@@ -1,0 +1,233 @@
+"""ServingEngine scheduling semantics: bucket fairness, pad accounting,
+per-request DecodeConfig overrides, cancellation, deadlines, and the
+block-grain decode generator the async scheduler drives."""
+import dataclasses
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import DecodeConfig, get_config
+from repro.core import Decoder
+from repro.models.model import init_model
+from repro.serving import ServingEngine
+
+CFG = get_config("llada-8b").reduced()
+
+
+@pytest.fixture(scope="module")
+def params():
+    """Untrained tiny model — scheduling semantics, not quality."""
+    return init_model(jax.random.PRNGKey(0), CFG)
+
+
+def _dcfg(**over):
+    base = dict(gen_length=16, block_size=8, steps=16,
+                strategy="probability")
+    base.update(over)
+    return DecodeConfig(**base)
+
+
+def _engine(params, **kw):
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("length_bucket", 8)
+    return ServingEngine(params, CFG, _dcfg(), **kw)
+
+
+def _prompt(length, fill=3):
+    return np.full((length,), fill, np.int32)
+
+
+# --------------------------------------------------------------------------
+# cancellation
+# --------------------------------------------------------------------------
+
+def test_cancel_queued_request(params):
+    engine = _engine(params)
+    keep_a = engine.submit(_prompt(6))
+    victim = engine.submit(_prompt(6))
+    keep_b = engine.submit(_prompt(6))
+    assert engine.cancel(victim) is True
+    assert engine.queue_depth == 2
+    req = engine.result(victim)
+    assert req.status == "cancelled"
+    assert req.cancelled and req.result is None and req.stats is None
+    finished = engine.step()
+    assert sorted(finished) == sorted([keep_a, keep_b])
+    # the cancelled request was never decoded and summary() excludes it
+    assert engine.summary()["requests"] == 2
+
+
+def test_cancel_is_idempotent_and_safe(params):
+    engine = _engine(params)
+    rid = engine.submit(_prompt(6))
+    engine.run_until_idle()
+    assert engine.cancel(rid) is False          # already finished
+    assert engine.result(rid).status == "done"
+    assert engine.cancel(999) is False          # never submitted
+
+
+# --------------------------------------------------------------------------
+# bucket fairness + pad accounting under mixed-length traffic
+# --------------------------------------------------------------------------
+
+def test_oldest_bucket_served_first(params):
+    """The bucket holding the OLDEST request is always served next, even
+    when a younger bucket has more members queued."""
+    engine = _engine(params)
+    old = engine.submit(_prompt(13))            # bucket 16, oldest
+    young = [engine.submit(_prompt(5)) for _ in range(3)]   # bucket 8
+    first = engine.step()
+    assert first == [old]
+    second = engine.step()
+    assert sorted(second) == sorted(young)
+
+
+def test_pads_never_exceed_batch_max_minus_real_length(params):
+    """Mixed lengths inside one bucket: every request's mask pad must be
+    exactly batch-max-real-length minus its own length (the engine pads
+    to the batch max, never the bucket ceiling), and uniform batches see
+    zero padding."""
+    engine = _engine(params)
+    lens = [5, 7, 6]                            # all in the 8-ceiling bucket
+    rids = [engine.submit(_prompt(n)) for n in lens]
+    batch = engine.select_batch()
+    assert sorted(r.rid for r in batch.requests) == sorted(rids)
+    batch_max = max(lens)
+    for req, length in zip(batch.requests, lens):
+        assert req.pad_cols == batch_max - length
+        assert req.pad_cols <= batch_max - length   # never exceeds
+        assert req.pad_cols < engine.length_bucket  # < bucket ceiling
+    engine.decode_batch(batch)
+    for rid, length in zip(rids, lens):
+        req = engine.result(rid)
+        assert req.result.shape == (length + 16,)   # pads sliced off
+        assert not (req.result[length:] == CFG.mask_token_id).any()
+    # uniform-length traffic: zero pads
+    uni = [engine.submit(_prompt(6)) for _ in range(3)]
+    batch = engine.select_batch()
+    assert [r.pad_cols for r in batch.requests] == [0, 0, 0]
+    engine.decode_batch(batch)
+    assert all(engine.result(r).status == "done" for r in uni)
+
+
+# --------------------------------------------------------------------------
+# per-request DecodeConfig overrides
+# --------------------------------------------------------------------------
+
+def test_overrides_validated_at_submit(params):
+    engine = _engine(params)
+    with pytest.raises(KeyError, match="unknown strategy"):
+        engine.submit(_prompt(6), strategy="nope")
+    with pytest.raises(ValueError, match="not a multiple"):
+        engine.submit(_prompt(6), gen_length=12, block_size=8)
+    with pytest.raises(ValueError, match="infeasible"):
+        engine.submit(_prompt(6), steps=1)      # 2 blocks need ≥ 2 steps
+    with pytest.raises(ValueError, match="positive"):
+        engine.submit(_prompt(6), block_size=0)   # not ZeroDivisionError
+    with pytest.raises(ValueError, match="positive"):
+        engine.submit(_prompt(6), gen_length=-8)
+    assert engine.queue_depth == 0              # nothing bad was queued
+
+
+def test_mixed_strategy_requests_never_share_a_batch(params):
+    """Same prompt bucket, different effective DecodeConfig → separate
+    batches (batching across configs would decode one request with
+    another's settings)."""
+    engine = _engine(params)
+    a = engine.submit(_prompt(6))                        # base: probability
+    b = engine.submit(_prompt(6), strategy="entropy")
+    c = engine.submit(_prompt(6))
+    first = engine.step()
+    assert sorted(first) == sorted([a, c])               # same-config pair
+    second = engine.step()
+    assert second == [b]
+    # each decoded under its own config, bit-identical to a direct decode
+    direct = Decoder(params, CFG,
+                     _dcfg(strategy="entropy")).generate(
+        jax.random.PRNGKey(7), np.asarray([_prompt(6)]))[0]
+    np.testing.assert_array_equal(engine.result(b).result,
+                                  np.asarray(direct)[0])
+
+
+def test_gen_length_override_changes_result_shape(params):
+    engine = _engine(params)
+    rid = engine.submit(_prompt(6), gen_length=8, steps=8)
+    engine.run_until_idle()
+    req = engine.result(rid)
+    assert req.result.shape == (6 + 8,)
+    assert req.stats.tokens_generated == 8
+
+
+# --------------------------------------------------------------------------
+# deadlines (admission control)
+# --------------------------------------------------------------------------
+
+def test_expired_requests_are_reaped_not_decoded(params):
+    engine = _engine(params)
+    doomed = engine.submit(_prompt(6), deadline_s=0.0)
+    alive = engine.submit(_prompt(6))
+    time.sleep(0.01)                            # pass the deadline
+    finished = engine.step()
+    assert finished == [alive]
+    req = engine.result(doomed)
+    assert req.status == "expired"
+    assert req.expired and req.result is None
+    assert engine.summary()["requests"] == 1    # expired never decoded
+
+
+# --------------------------------------------------------------------------
+# block-grain decode (what the async scheduler drives)
+# --------------------------------------------------------------------------
+
+def test_decode_batch_blocks_streams_commit_order(params):
+    """The generator yields one host-side token slice per committed block
+    in commit order, fires the engine-level hook identically, and
+    finishes the batch exactly like decode_batch."""
+    recorded = []
+    engine = _engine(
+        params,
+        on_block_committed=lambda reqs, blk, lo, hi, x:
+            recorded.append((blk, lo, hi)))
+    rid = engine.submit(_prompt(6))
+    batch = engine.select_batch()
+    blocks = engine.decode_batch_blocks(batch)
+    events = []
+    while True:
+        try:
+            events.append(next(blocks))
+        except StopIteration as fin:
+            finished = fin.value
+            break
+    assert finished == [rid]
+    assert [e[0] for e in events] == [0, 1]
+    assert [(e[1], e[2]) for e in events] == [(6, 14), (14, 22)]
+    assert recorded == [(0, 6, 14), (1, 14, 22)]
+    req = engine.result(rid)
+    # the streamed slices concatenate to the final generation
+    streamed = np.concatenate([e[3][0] for e in events])
+    np.testing.assert_array_equal(streamed, req.result[6:])
+    assert req.stats is not None and req.stats.steps > 0
+
+
+def test_block_grain_matches_whole_request_driver(params):
+    """decode_batch_blocks (per-block dispatches) and decode_batch
+    (single whole-request dispatch) must produce bit-identical results —
+    the serving layer leans on the three-driver parity guarantee."""
+    engine = _engine(params)
+    r1 = engine.submit(_prompt(6))
+    batch1 = engine.select_batch()
+    rng = batch1.rng                            # reuse the same batch rng
+    blocks = engine.decode_batch_blocks(batch1)
+    while True:
+        try:
+            next(blocks)
+        except StopIteration:
+            break
+    r2 = engine.submit(_prompt(6))
+    batch2 = engine.select_batch()
+    batch2 = dataclasses.replace(batch2, rng=rng)
+    engine.decode_batch(batch2)
+    np.testing.assert_array_equal(engine.result(r1).result,
+                                  engine.result(r2).result)

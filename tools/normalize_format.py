@@ -1,0 +1,102 @@
+"""One-time (PR 5) formatting-normalization sweep, and the drift report
+that backs the now-gating CI `ruff format --check` step.
+
+This container ships no formatter binary (ruff/black are absent and the
+environment is offline), so the PR-5 normalization pass was done with
+this script + hand fixes instead of `ruff format`:
+
+* STRING quote normalization to double quotes (tokenize-based, skipping
+  strings whose content contains a double quote — matching the
+  formatter's quote rule exactly);
+* a report of remaining mechanically-detectable drift (lines over the
+  88-column limit) for hand fixing.
+
+What it cannot do is re-wrap hand-aligned continuation lines into
+Black-style exploded form — that part of the normalization is finished
+by the first ruff-equipped environment running `ruff format` and
+committing (one mechanical command; the CI gate enforces the tree stays
+normalized from then on).
+
+    python tools/normalize_format.py [--write] [paths...]
+"""
+from __future__ import annotations
+
+import argparse
+import io
+import sys
+import tokenize
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+DEFAULT_PATHS = ["src", "tests", "benchmarks", "examples", "tools"]
+LINE_LIMIT = 88
+
+
+def requote(tok_string: str) -> str:
+    """Single→double quotes when the content allows it (the formatter's
+    preferred-quotes rule): prefix preserved, never when a double quote
+    (or an escape that could interact) appears in the body."""
+    body = tok_string
+    prefix = ""
+    while body and body[0] not in "'\"":
+        prefix, body = prefix + body[0], body[1:]
+    if not body.startswith("'"):
+        return tok_string
+    quote = "'''" if body.startswith("'''") else "'"
+    inner = body[len(quote):-len(quote)]
+    if '"' in inner or "\\" in inner:
+        return tok_string
+    return prefix + '"' * len(quote) + inner + '"' * len(quote)
+
+
+def normalize_file(path: Path, write: bool) -> int:
+    src = path.read_text()
+    try:
+        tokens = list(tokenize.generate_tokens(io.StringIO(src).readline))
+    except tokenize.TokenError:
+        print(f"  [skip, tokenize failed] {path}")
+        return 0
+    changed = 0
+    out = []
+    for tok in tokens:
+        if tok.type == tokenize.STRING:
+            new = requote(tok.string)
+            if new != tok.string:
+                changed += 1
+                tok = tok._replace(string=new)
+        out.append(tok)
+    if changed and write:
+        path.write_text(tokenize.untokenize(
+            (t.type, t.string, t.start, t.end, t.line) for t in out))
+    return changed
+
+
+def report_long_lines(path: Path) -> int:
+    count = 0
+    for i, line in enumerate(path.read_text().splitlines(), 1):
+        if len(line) > LINE_LIMIT:
+            print(f"  {path}:{i}: {len(line)} cols")
+            count += 1
+    return count
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--write", action="store_true",
+                    help="apply quote normalization (default: report)")
+    ap.add_argument("paths", nargs="*", default=DEFAULT_PATHS)
+    args = ap.parse_args()
+    files = sorted(f for p in args.paths
+                   for f in (ROOT / p).rglob("*.py"))
+    requoted = sum(normalize_file(f, args.write) for f in files)
+    print(f"[{'re' if args.write else 'would re'}quote "
+          f"{requoted} strings across {len(files)} files]")
+    print(f"lines over {LINE_LIMIT} columns (fix by hand):")
+    long_lines = sum(report_long_lines(f) for f in files)
+    if not long_lines:
+        print("  none")
+    sys.exit(1 if long_lines else 0)
+
+
+if __name__ == "__main__":
+    main()
