@@ -134,9 +134,12 @@ def main() -> None:
             archs=["llada-8b", "xlstm-125m"] if args.fast else None),
         "table5": lambda: table5_cached_serving.run(
             n_eval=16 if args.fast else 32),
-        "serving": lambda: serving_load.run(
-            n_requests=16 if args.fast else 64,
-            concurrency=4 if args.fast else 8),
+        "serving": lambda: (
+            serving_load.run(
+                n_requests=16 if args.fast else 64,
+                concurrency=4 if args.fast else 8),
+            serving_load.run_degraded(
+                n_requests=24 if args.fast else 64)),
         "kernel": kernel_confidence.run,
         "loop": lambda: _loop_with_regression_gate(
             batches=(1, 4) if args.fast else None),

@@ -26,19 +26,22 @@ import threading
 import time
 from typing import Dict, List, Optional
 
+import jax
 import numpy as np
 
 from benchmarks.common import print_table, trained_model
-from repro.configs import (DecodeConfig, RouterConfig, ServerConfig,
-                           default_block_size)
-from repro.serving import (ModelRouter, ServerThread, ServingClient,
-                           ServingEngine)
+from repro.configs import (DecodeConfig, DegradeConfig, RouterConfig,
+                           ServerConfig, default_block_size, get_config)
+from repro.models.model import init_model
+from repro.serving import (ModelRouter, ServerError, ServerThread,
+                           ServingClient, ServingEngine)
 
 OUT_PATH = os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "BENCH_serving.json")
 
 TASK = "sum"
 STRATEGIES = ("fdm_a", "probability")     # mixed-strategy traffic
+_PROMPT = [3, 5, 2, 7, 4, 1]              # token ids for run_degraded
 
 
 def run(n_requests: int = 64, concurrency: int = 8,
@@ -150,6 +153,102 @@ def _drive(handle, ds, n_requests: int, concurrency: int,
                         "batches", "max_queue_depth",
                         "mean_queue_depth"])
     return [row]
+
+
+def run_degraded(n_requests: int = 64, max_queue_depth: int = 8,
+                 pause_s: float = 0.03, gen_length: int = 32
+                 ) -> Dict[str, Dict]:
+    """The degradation-ladder A/B: the same open-loop overload burst
+    (submissions paced faster than the engine drains) against a server
+    with the ladder OFF, then ON.  With the ladder on, admissions past
+    the rung thresholds decode with scaled-down step budgets, the queue
+    drains faster, and fewer requests hit the 429 cliff — shed steps
+    before shedding requests.  Recorded under the ``degraded`` key of
+    BENCH_serving.json; the acceptance bar is
+    ``ladder_on.rejected_429 < ladder_off.rejected_429``.
+
+    Testbed: the reduced untrained model at a steps-dominated decode
+    length (the trained 4-token testbed is fixed-overhead-bound, so
+    halving its step budget moves nothing), ``max_batch=1`` so the A/B
+    isolates the ladder's capacity effect from batch-shape
+    fragmentation (mixed step budgets land in different batch buckets),
+    and the offered rate pinned between the full-quality and cheapened
+    service rates — the regime the ladder exists for.
+    """
+    cfg = get_config("llada-8b").reduced()
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    dcfg = DecodeConfig(gen_length=gen_length,
+                        block_size=default_block_size(gen_length),
+                        steps=gen_length, strategy="probability")
+    results: Dict[str, Dict] = {}
+    for mode in ("ladder_off", "ladder_on"):
+        router = ModelRouter(RouterConfig())
+        router.register("bench", lambda: ServingEngine(
+            params, cfg, dcfg, max_batch=1))
+        scfg = ServerConfig(
+            port=0, max_queue_depth=max_queue_depth,
+            degrade=DegradeConfig(enabled=(mode == "ladder_on")))
+        handle = ServerThread(router, scfg).start()
+        try:
+            # single-shot client: this run COUNTS 429s
+            client = ServingClient(handle.host, handle.port,
+                                   timeout=600.0, max_retries=0)
+            # warm every step budget the burst can decode at — the full
+            # budget plus each rung's cheapened budget — so the A/B
+            # measures the ladder, not one-off JIT compiles of the
+            # scaled-down step counts mid-burst
+            num_blocks = gen_length // dcfg.block_size
+            budgets = {dcfg.steps} | {
+                max(num_blocks, int(dcfg.steps * r.steps_scale))
+                for r in scfg.degrade.rungs}
+            for steps in sorted(budgets, reverse=True):
+                client.generate(_PROMPT, steps=steps, wait=True)
+            accepted = rejected = 0
+            t0 = time.perf_counter()
+            for i in range(n_requests):
+                try:
+                    client.generate(_PROMPT, wait=False)
+                    accepted += 1
+                except ServerError as e:
+                    if e.status != 429:
+                        raise
+                    rejected += 1
+                time.sleep(pause_s)
+            # drain the backlog before scraping the final counters
+            while True:
+                m = _parse_metrics(client.metrics_text())
+                if not m.get("repro_queue_depth") and \
+                        not m.get("repro_decoding"):
+                    break
+                time.sleep(0.05)
+            span = time.perf_counter() - t0
+            results[mode] = {
+                "offered": n_requests,
+                "accepted": accepted,
+                "rejected_429": rejected,
+                "degraded_admissions":
+                    int(m.get("repro_requests_degraded_total", 0)),
+                "finished":
+                    int(m.get("repro_requests_finished_total", 0)),
+                "span_s": round(span, 3)}
+        finally:
+            handle.stop()
+    off, on = results["ladder_off"], results["ladder_on"]
+    print(f"[degraded-mode A/B @ depth cap {max_queue_depth}, "
+          f"pause {pause_s * 1e3:.0f}ms: ladder off "
+          f"{off['rejected_429']}/{off['offered']} rejected; ladder on "
+          f"{on['rejected_429']}/{on['offered']} rejected, "
+          f"{on['degraded_admissions']} admissions cheapened]")
+    payload = {}
+    if os.path.exists(OUT_PATH):
+        with open(OUT_PATH) as f:
+            payload = json.load(f)
+    payload["degraded"] = {"max_queue_depth": max_queue_depth,
+                           "pause_s": pause_s,
+                           "gen_length": gen_length, **results}
+    with open(OUT_PATH, "w") as f:
+        json.dump(payload, f, indent=2)
+    return results
 
 
 def _parse_metrics(text: str) -> Dict[str, float]:

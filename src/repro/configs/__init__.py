@@ -4,10 +4,11 @@ from __future__ import annotations
 import importlib
 from typing import Dict, List
 
-from repro.configs.base import (DecodeConfig, EncDecConfig, MLAConfig,
-                                ModelConfig, MoEConfig, RouterConfig,
-                                SSMConfig, ServerConfig, TrainConfig,
-                                default_block_size)
+from repro.configs.base import (DecodeConfig, DegradeConfig, EncDecConfig,
+                                LadderRung, MLAConfig, ModelConfig,
+                                MoEConfig, RouterConfig, SSMConfig,
+                                ServerConfig, SupervisorConfig,
+                                TrainConfig, default_block_size)
 
 # arch id -> module (one file per assigned architecture + the paper's own)
 _MODULES: Dict[str, str] = {
@@ -42,6 +43,7 @@ def list_configs() -> List[str]:
 __all__ = [
     "ModelConfig", "MoEConfig", "MLAConfig", "SSMConfig", "EncDecConfig",
     "DecodeConfig", "TrainConfig", "ServerConfig", "RouterConfig",
+    "SupervisorConfig", "DegradeConfig", "LadderRung",
     "default_block_size",
     "get_config", "list_configs", "ASSIGNED_ARCHS",
 ]

@@ -299,18 +299,87 @@ def default_block_size(gen_length: int) -> int:
 
 
 @dataclass(frozen=True)
+class SupervisorConfig:
+    """Engine supervision (``repro.serving.supervisor``) knobs.
+
+    The async scheduler runs every batch under this policy: decode
+    failures are caught at the batch boundary, transient ones retried
+    with capped exponential backoff, persistent ones bisected until the
+    poison request is isolated and quarantined (it alone gets a terminal
+    ``error`` event; its co-batched neighbours are re-queued and
+    survive).  Engine-fatal failures (OOM-shaped errors, watchdog
+    timeouts) feed a sliding-window crash counter; at
+    ``breaker_threshold`` crashes inside ``breaker_window_s`` the
+    circuit breaker trips and the engine is rebuilt through the router's
+    hot-swap path while ``/healthz`` reports the model degraded (until
+    the next clean batch completes).
+    """
+    max_retries: int = 2               # same-batch retries for transient
+                                       # failures before bisection; also the
+                                       # per-request re-queue cap on the
+                                       # engine-fatal path
+    backoff_base_s: float = 0.05       # retry delay: base * 2^(attempt-1),
+    backoff_cap_s: float = 2.0         # capped here, with seeded jitter
+    watchdog_s: float = 0.0            # per-BLOCK decode timeout (0 = off).
+                                       # A block that exceeds it abandons
+                                       # the batch: engine-fatal (the engine
+                                       # may be wedged), requests re-queued
+    breaker_threshold: int = 3         # engine-fatal crashes inside the
+    breaker_window_s: float = 60.0     # window that trip the breaker
+    drain_deadline_s: float = 5.0      # graceful-drain bound: queued work
+                                       # gets this long to finish before the
+                                       # remainder is shut down
+
+
+@dataclass(frozen=True)
+class LadderRung:
+    """One graceful-degradation rung: when queue depth reaches
+    ``at_depth`` (as a fraction of ``max_queue_depth``), effective steps
+    are scaled by ``steps_scale``.  Fewer denoising steps over the same
+    ``gen_length`` means MORE tokens committed in parallel per step —
+    the cheapen-before-shed response ParallelBench's workload-dependent
+    quality/latency frontier calls for."""
+    at_depth: float
+    steps_scale: float
+
+
+@dataclass(frozen=True)
+class DegradeConfig:
+    """Graceful-degradation ladder (scheduler admission path).
+
+    Under queue-depth or deadline-headroom pressure the scheduler
+    progressively cheapens per-request effective configs before
+    resorting to 429: rung 1 halves the step budget, rung 2 quarters it
+    (never below one step per block).  The default rungs come from the
+    recorded frontier curves: BENCH_ablation_carry shows the sum testbed
+    holds EM within ~2 points at half the forwards, and
+    BENCH_decode_loop shows steps/sec is step-budget-linear — so halving
+    steps roughly halves queue drain time, which is the lever that keeps
+    the 429 count down at pressure (see ``benchmarks/serving_load.py``'s
+    degraded-mode scenario).
+    """
+    enabled: bool = True
+    rungs: Tuple[LadderRung, ...] = (LadderRung(at_depth=0.5,
+                                                steps_scale=0.5),
+                                     LadderRung(at_depth=0.8,
+                                                steps_scale=0.25))
+
+
+@dataclass(frozen=True)
 class ServerConfig:
     """Async serving front end (``repro.serving.server``) knobs.
 
-    Admission control is two-sided: ``max_queue_depth`` bounds the
+    Admission control is three-sided: ``max_queue_depth`` bounds the
     per-model engine queue (submits beyond it are rejected with HTTP 429
     — closed-loop clients back off instead of growing an unbounded
-    queue), and ``default_deadline_s`` expires requests that sit QUEUED
+    queue), ``default_deadline_s`` expires requests that sit QUEUED
     longer than their deadline (they are dropped at batch-selection time,
-    never decoded, and their streams get a terminal ``expired`` event).
-    Both act at the scheduling grain of blockwise diffusion decoding —
-    between batches — because a running batch is batch-synchronous and
-    cannot be preempted mid-decode.
+    never decoded, and their streams get a terminal ``expired`` event),
+    and the ``degrade`` ladder cheapens per-request step budgets under
+    pressure BEFORE the queue fills (shed steps before shedding
+    requests).  All act at the scheduling grain of blockwise diffusion
+    decoding — between batches — because a running batch is
+    batch-synchronous and cannot be preempted mid-decode.
     """
     host: str = "127.0.0.1"
     port: int = 8000                   # 0 = pick an ephemeral port
@@ -327,7 +396,11 @@ class ServerConfig:
                                        # QUEUED time)
     stream_retain: int = 256           # finished event streams kept for a
                                        # late GET /v1/stream/{rid}
-    max_body_bytes: int = 1 << 20      # POST body cap (413 beyond)
+    max_body_bytes: int = 1 << 20      # POST body cap (413 beyond; chunked
+                                       # bodies are rejected outright)
+    retry_after_s: float = 1.0         # Retry-After header on 429/503
+    supervisor: SupervisorConfig = SupervisorConfig()
+    degrade: DegradeConfig = DegradeConfig()
 
 
 @dataclass(frozen=True)

@@ -13,6 +13,11 @@ the endpoint surface.
 ``--selftest`` instead boots the server on an ephemeral port, runs one
 streamed request through the blocking client, prints the events, and
 exits — the offline end-to-end sanity check.
+
+SIGTERM / SIGINT drain gracefully: admission stops (new submits answer
+503 + Retry-After), in-flight and queued requests get up to the drain
+deadline (``SupervisorConfig.drain_deadline_s``) to finish, leftover
+streams receive terminal ``shutdown`` events, then the process exits.
 """
 from __future__ import annotations
 
@@ -20,6 +25,7 @@ import argparse
 import asyncio
 import json
 import os
+import signal
 import tempfile
 
 import jax
@@ -124,6 +130,23 @@ def main() -> None:
     async def serve() -> None:
         server = ServingServer(router, scfg, tokenizer=tokenizer)
         host, port = await server.start()
+        loop = asyncio.get_running_loop()
+        drained = loop.create_future()
+
+        def _on_sigterm() -> None:
+            # graceful drain: admission stops (503 + Retry-After),
+            # in-flight work finishes within the drain deadline,
+            # leftover streams get terminal `shutdown` events
+            if not drained.done():
+                print("SIGTERM: draining "
+                      f"(deadline {scfg.supervisor.drain_deadline_s:g}s)…")
+                drained.set_result(None)
+
+        try:
+            loop.add_signal_handler(signal.SIGTERM, _on_sigterm)
+            loop.add_signal_handler(signal.SIGINT, _on_sigterm)
+        except NotImplementedError:
+            pass                        # non-Unix event loop
         base = f"http://{host}:{port}"
         example = first_ds.prompts_only(
             first_ds.eval_batch(1))[0].tolist()
@@ -138,7 +161,18 @@ def main() -> None:
               "print(json.load(sys.stdin)[\"rid\"])')")
         print(f"  curl -N {base}/v1/stream/$rid        # SSE blocks")
         print(f"  curl {base}/metrics")
-        await server.serve_forever()
+        serve_task = asyncio.ensure_future(server.serve_forever())
+        await drained
+        # drain BEFORE tearing the accept loop down: open SSE readers
+        # keep their connections and collect terminal events during the
+        # drain window; only then does the listener close
+        await server.drain()
+        serve_task.cancel()
+        try:
+            await serve_task
+        except (asyncio.CancelledError, RuntimeError):
+            pass
+        print("drained; bye")
 
     try:
         asyncio.run(serve())

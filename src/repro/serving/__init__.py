@@ -1,25 +1,44 @@
 """The serving stack, bottom-up:
 
-* ``engine``    — batched, bucket-scheduled decoding over one model's
-                  weights (synchronous; the batch-selection/decode split
-                  the async layer builds on)
-* ``scheduler`` — the async continuous-batching loop: admission control,
-                  deadlines, per-request event streams at the block grain
-* ``router``    — named-model routing over engines under a bytes-budget
-                  LRU, with hot swap and observable cache eviction
-* ``server``    — stdlib asyncio HTTP/1.1 + SSE front end over a router
-* ``client``    — small blocking client (tests / examples / load gen)
+* ``engine``     — batched, bucket-scheduled decoding over one model's
+                   weights (synchronous; the batch-selection/decode split
+                   the async layer builds on)
+* ``faults``     — deterministic fault injection at the engine's block
+                   grain (scheduled + seeded-chaos failures; the
+                   always-on output validator lives here too)
+* ``supervisor`` — supervision policy pieces: retry backoff, circuit
+                   breaker, the degradation ladder, failure
+                   classification
+* ``scheduler``  — the async continuous-batching loop: admission control
+                   (depth / deadline / degradation ladder), per-request
+                   event streams at the block grain, and batch
+                   supervision (watchdog, retries, bisection quarantine,
+                   engine rebuild, graceful drain)
+* ``router``     — named-model routing over engines under a bytes-budget
+                   LRU, with hot swap and observable cache eviction
+* ``server``     — stdlib asyncio HTTP/1.1 + SSE front end over a router
+* ``client``     — small blocking client with backoff retries (tests /
+                   examples / load gen)
 """
 from repro.serving.client import ServerError, ServingClient
 from repro.serving.engine import Batch, Request, ServingEngine
+from repro.serving.faults import (CorruptOutputError, Fault,
+                                  FaultInjector, InjectedFault,
+                                  SimulatedOOM, is_engine_fatal)
 from repro.serving.router import ModelRouter, params_bytes
 from repro.serving.scheduler import (AsyncScheduler, QueueFullError,
-                                     stats_dict)
+                                     SchedulerDrainingError, stats_dict)
 from repro.serving.server import ServerThread, ServingServer
+from repro.serving.supervisor import (Backoff, CircuitBreaker,
+                                      DegradationLadder, WatchdogTimeout)
 
 __all__ = [
     "Request", "Batch", "ServingEngine",
-    "AsyncScheduler", "QueueFullError", "stats_dict",
+    "Fault", "FaultInjector", "InjectedFault", "SimulatedOOM",
+    "CorruptOutputError", "is_engine_fatal",
+    "Backoff", "CircuitBreaker", "DegradationLadder", "WatchdogTimeout",
+    "AsyncScheduler", "QueueFullError", "SchedulerDrainingError",
+    "stats_dict",
     "ModelRouter", "params_bytes",
     "ServingServer", "ServerThread",
     "ServingClient", "ServerError",

@@ -61,6 +61,7 @@ import numpy as np
 from repro.configs.base import DecodeConfig, ModelConfig
 from repro.core.decoder import Decoder, SampleStats
 from repro.core.strategies import resolve_strategy
+from repro.serving.faults import FaultInjector, validate_block_tokens
 
 
 @dataclasses.dataclass
@@ -76,7 +77,13 @@ class Request:
                                           # which decoding must have STARTED
     cancelled: bool = False
     expired: bool = False
+    failed: bool = False                  # quarantined / retries exhausted
     pad_cols: int = 0                     # mask pad columns this request got
+    retries: int = 0                      # supervision re-queues so far
+    group: int = 0                        # bisection cohort (requests only
+                                          # co-batch within a group; fresh
+                                          # ids keep a failed batch's halves
+                                          # from re-merging)
 
     @property
     def latency(self) -> float:
@@ -88,6 +95,8 @@ class Request:
             return "cancelled"
         if self.expired:
             return "expired"
+        if self.failed:
+            return "error"
         return "done" if self.result is not None else "queued"
 
 
@@ -107,7 +116,8 @@ class ServingEngine:
     def __init__(self, params, cfg: ModelConfig, dcfg: DecodeConfig,
                  max_batch: int = 8, seed: int = 0,
                  length_bucket: int = 8,
-                 on_block_committed: Optional[Callable] = None):
+                 on_block_committed: Optional[Callable] = None,
+                 fault_injector: Optional[FaultInjector] = None):
         self.params = params
         self.cfg = cfg
         self.dcfg = dcfg
@@ -115,11 +125,20 @@ class ServingEngine:
         self.max_batch = max_batch
         self.length_bucket = max(length_bucket, 1)
         self.on_block_committed = on_block_committed
+        self.fault_injector = fault_injector
         self.queue: Deque[Request] = deque()
         self.done: Dict[int, Request] = {}
         self._next_id = 0
+        self._next_group = 1
         self._rng = jax.random.PRNGKey(seed)
         self._decoders: Dict[DecodeConfig, Decoder] = {dcfg: self.decoder}
+
+    def set_fault_injector(self,
+                           injector: Optional[FaultInjector]) -> None:
+        """Attach (or detach) the deterministic fault-injection harness;
+        it fires inside ``decode_batch_blocks`` — the supervision
+        grain."""
+        self.fault_injector = injector
 
     # -- client API --------------------------------------------------------
     def submit(self, prompt: np.ndarray, *,
@@ -196,8 +215,51 @@ class ServingEngine:
 
     def _bucket_key(self, req: Request) -> Tuple:
         """Requests batch together iff this matches: same prompt-length
-        bucket AND same effective DecodeConfig (frozen → hashable)."""
-        return (self._bucket_len(req.prompt.shape[0]), req.dcfg)
+        bucket AND same effective DecodeConfig (frozen → hashable) AND
+        same bisection cohort (supervision re-queues a failed batch's
+        halves under fresh group ids precisely so they cannot re-merge
+        into the batch that just failed)."""
+        return (self._bucket_len(req.prompt.shape[0]), req.dcfg, req.group)
+
+    # -- supervision hooks (used by the async scheduler) -------------------
+    def requeue(self, requests: List[Request],
+                fresh_group: bool = False) -> None:
+        """Push requests back at the queue FRONT, preserving their order
+        (retried work should not queue behind traffic that arrived after
+        it).  ``fresh_group=True`` moves the cohort to a new bisection
+        group id — the half of a failed batch must never re-co-batch
+        with the other half."""
+        if fresh_group:
+            group = self._next_group
+            self._next_group += 1
+            for req in requests:
+                req.group = group
+        for req in reversed(list(requests)):
+            req.pad_cols = 0            # re-derived at the next select
+            self.queue.appendleft(req)
+
+    def record_failed(self, req: Request,
+                      now: Optional[float] = None) -> None:
+        """Terminal supervision failure (quarantine / retries exhausted):
+        the request lands in ``done`` with no result, visible to
+        ``result(rid)`` and excluded from throughput accounting exactly
+        like a cancelled one."""
+        req.failed = True
+        req.finish_time = time.perf_counter() if now is None else now
+        self.done[req.rid] = req
+
+    def adopt(self, old: "ServingEngine") -> None:
+        """Carry another engine's in-flight bookkeeping into this one —
+        the supervisor's engine-rebuild path: queued requests (their
+        effective configs ride along), finished history, and the rid /
+        bisection-group counters, so streams and ``result(rid)`` survive
+        the swap.  The fault injector and hooks are NOT adopted: the
+        rebuilt engine starts with whatever its factory installed."""
+        self.queue.extend(old.queue)
+        old.queue.clear()
+        self.done.update(old.done)
+        self._next_id = max(self._next_id, old._next_id)
+        self._next_group = max(self._next_group, old._next_group)
 
     def reap_expired(self, now: Optional[float] = None) -> List[Request]:
         """Drop queued requests whose deadline passed; returns them (also
@@ -301,19 +363,41 @@ class ServingEngine:
         events and keep its event loop live.  The engine-level
         ``on_block_committed`` hook fires here too, with the same
         signature as in ``decode_batch``.
+
+        This is also the FAULT BOUNDARY: an attached ``FaultInjector``
+        fires here (raised exceptions / simulated OOM / injected stalls
+        before a block, NaN-style token corruption after it), and every
+        committed block passes the always-on output validator
+        (``CorruptOutputError`` on out-of-vocab tokens — the host-side
+        signature of non-finite logits).  Failures therefore surface at
+        a block boundary of a specific batch, which is the grain the
+        supervision layer retries, bisects, and quarantines at.  A
+        failed attempt never reaches ``_finish_batch``: results and
+        stats only land on success, so a retried batch is
+        bit-identical to a fault-free decode.
         """
+        inj = self.fault_injector
+        bi = inj.begin_batch() if inj is not None else 0
+        rids = [r.rid for r in batch.requests]
         dec = self._decoder_for(batch.dcfg)
         blocks = dec.generate_blocks(batch.rng, jnp.asarray(batch.prompts))
+        block_index = 0
         while True:
+            if inj is not None:
+                inj.before_block(bi, rids, block_index)
             try:
                 ev = next(blocks)
             except StopIteration as fin:
                 out, stats = fin.value
                 return self._finish_batch(batch, out, stats)
+            block_index += 1
+            tokens = np.asarray(ev.x[:, ev.lo:ev.hi])
+            if inj is not None:
+                tokens = inj.filter_tokens(bi, rids, ev.block, tokens)
+            validate_block_tokens(tokens, self.cfg.vocab_size)
             if self.on_block_committed is not None:
                 self.on_block_committed(batch.requests, ev.block, ev.lo,
                                         ev.hi, ev.x)
-            tokens = np.asarray(ev.x[:, ev.lo:ev.hi])
             yield (ev.block, ev.lo, ev.hi, tokens)
 
     def _finish_batch(self, batch: Batch, out, stats: SampleStats

@@ -70,7 +70,8 @@ class ModelRouter:
         self._factories: "OrderedDict[str, Callable[[], ServingEngine]]" \
             = OrderedDict()
         self._slots: "OrderedDict[str, _Slot]" = OrderedDict()
-        self.counters = {"builds": 0, "evictions": 0, "swaps": 0}
+        self.counters = {"builds": 0, "evictions": 0, "swaps": 0,
+                         "rebuilds": 0}
 
     # -- registration ------------------------------------------------------
     def register(self, name: str,
@@ -181,6 +182,15 @@ class ModelRouter:
         self.evict(name, force=True)
         self.counters["swaps"] += 1
         return self.engine(name)
+
+    def rebuild(self, name: str) -> ServingEngine:
+        """Supervision-triggered hot swap (the circuit breaker tripped):
+        same mechanics as ``hot_swap`` with the existing factory —
+        force-drop, fresh build — but counted separately, because swaps
+        are operator intent and rebuilds are the engine crashing."""
+        engine = self.hot_swap(name)
+        self.counters["rebuilds"] += 1
+        return engine
 
     # -- introspection -----------------------------------------------------
     def info(self) -> Dict:

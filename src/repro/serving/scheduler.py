@@ -17,34 +17,72 @@ admission control lives at the queue: depth-bounded (``QueueFullError`` →
 HTTP 429) and deadline-bounded (queued longer than the deadline → dropped
 un-decoded with a terminal ``expired`` event).
 
+Supervision (PR 6): every batch runs under the ``SupervisorConfig``
+policy.  A per-block watchdog bounds each decode resumption; decode
+failures are caught at the batch boundary and classified
+(``supervisor.classify_failure``): transient ones are retried in place
+with capped exponential backoff, persistent ones are bisected — the
+batch's halves re-queued under fresh cohort ids until the poison request
+is isolated and quarantined with a single terminal ``error`` event, its
+co-batched neighbours re-queued and served normally.  Engine-fatal
+failures (OOM-shaped, watchdog) feed a sliding-window ``CircuitBreaker``;
+on trip the engine is rebuilt through the router's hot-swap path
+(``rebuild_engine`` callable, installed by ``ServingServer``) and
+``health`` reports ``degraded`` until the next clean batch.  If a failed
+attempt had already streamed block events, its streams get a non-final
+``reset`` event telling readers to discard them (the retry re-decodes
+from scratch, so results stay bit-identical to a fault-free run).
+
+Admission additionally runs the ``DegradationLadder``: under queue-depth
+or deadline-headroom pressure a request's effective step budget is
+progressively cheapened (fewer steps = more parallel commits per step)
+BEFORE the 429 cliff — shed steps before shedding requests.
+
 Event streams: every request gets an ordered in-memory event log —
 ``block`` events as blocks commit (already sliced per request, replica
-rows dropped, offsets rebased to the request's own coordinates) and ONE
-terminal event (``done`` / ``cancelled`` / ``expired`` / ``shutdown``,
+rows dropped, offsets rebased to the request's own coordinates), possibly
+``reset`` events after a failed attempt, and ONE terminal event
+(``done`` / ``cancelled`` / ``expired`` / ``error`` / ``shutdown``,
 marked ``"final": true``).  ``events(rid)`` replays the log then follows
 it live, so an SSE reader may attach before, during, or after the decode
 and still see every event exactly once, in commit order.  Finished logs
 are retained for ``stream_retain`` requests, then dropped FIFO.
 
-Threading contract: all queue mutation (submit / cancel / select) happens
-on the event-loop thread; ONLY the block-grain ``next()`` resumptions run
-on the executor thread.  The engine itself is never touched from two
-threads at once.
+Graceful drain: ``drain(deadline_s)`` stops admission (submits raise
+``SchedulerDrainingError`` → HTTP 503), lets the backlog finish within
+the deadline, then stops the worker — the in-flight batch completes its
+current block, whatever remains gets a terminal ``shutdown`` event.
+
+Threading contract: all queue mutation (submit / cancel / select /
+requeue) happens on the event-loop thread; ONLY the block-grain
+``next()`` resumptions run on the executor thread.  The engine itself is
+never touched from two threads at once (a watchdog-abandoned resumption
+finishes its current block in the background and its generator is never
+resumed again).
 """
 from __future__ import annotations
 
 import asyncio
 from collections import deque
-from typing import AsyncIterator, Deque, Dict, List, Optional
+from typing import AsyncIterator, Callable, Deque, Dict, List, Optional
 
 import numpy as np
 
+from repro.configs.base import DegradeConfig, SupervisorConfig
 from repro.core.decoder import SampleStats
-from repro.serving.engine import Request, ServingEngine
+from repro.serving.engine import Batch, Request, ServingEngine
+from repro.serving.supervisor import (Backoff, CircuitBreaker,
+                                      DegradationLadder, WatchdogTimeout,
+                                      bisect, classify_failure)
 
 
 class QueueFullError(RuntimeError):
     """Admission control: the engine queue is at max depth (HTTP 429)."""
+
+
+class SchedulerDrainingError(RuntimeError):
+    """Admission stopped: the scheduler is draining for shutdown
+    (HTTP 503 + Retry-After — retryable against a replacement)."""
 
 
 def stats_dict(stats: Optional[SampleStats]) -> Dict:
@@ -77,27 +115,51 @@ class _Stream:
         return bool(self.events) and self.events[-1].get("final", False)
 
 
+class _AbandonBatch(Exception):
+    """Drain deadline passed mid-batch: stop at this block boundary."""
+
+
 class AsyncScheduler:
     """See the module docstring.  Construct, then ``await start()``."""
 
     def __init__(self, engine: ServingEngine, *,
                  max_queue_depth: int = 64,
                  default_deadline_s: float = 0.0,
-                 stream_retain: int = 256):
+                 stream_retain: int = 256,
+                 svcfg: SupervisorConfig = SupervisorConfig(),
+                 dgcfg: DegradeConfig = DegradeConfig(),
+                 rebuild_engine: Optional[
+                     Callable[[], ServingEngine]] = None):
         self.engine = engine
         self.max_queue_depth = max_queue_depth
         self.default_deadline_s = default_deadline_s
         self.stream_retain = max(stream_retain, 1)
+        self.svcfg = svcfg
+        self.dgcfg = dgcfg
+        self.rebuild_engine = rebuild_engine
+        self.breaker = CircuitBreaker(svcfg.breaker_threshold,
+                                      svcfg.breaker_window_s)
+        self.ladder = DegradationLadder(dgcfg, max_queue_depth)
+        self._backoff = Backoff(svcfg.backoff_base_s, svcfg.backoff_cap_s)
         self._streams: Dict[int, _Stream] = {}
         self._retired: Deque[int] = deque()
         self._wake = asyncio.Event()
         self._task: Optional[asyncio.Task] = None
         self._loop: Optional[asyncio.AbstractEventLoop] = None
         self._closed = False
+        self._draining = False
+        self._abandon = False
         self._decoding = False
+        self._inflight: set = set()
+        self._batch_ema_s = 0.0
         self.counters = {"submitted": 0, "finished": 0, "rejected": 0,
                          "cancelled": 0, "expired": 0, "errors": 0,
-                         "batches": 0, "blocks": 0}
+                         "batches": 0, "blocks": 0,
+                         # supervision
+                         "retries": 0, "requeued": 0, "quarantined": 0,
+                         "watchdog_timeouts": 0, "engine_faults": 0,
+                         "engine_rebuilds": 0, "rebuild_failures": 0,
+                         "resets": 0, "degraded": 0}
 
     # -- lifecycle ---------------------------------------------------------
     async def start(self) -> "AsyncScheduler":
@@ -108,19 +170,51 @@ class AsyncScheduler:
 
     async def close(self) -> None:
         """Finish the in-flight batch (if any), stop the worker, and end
-        every still-open stream with a terminal ``shutdown`` event."""
+        every still-open stream with a terminal event — the in-flight
+        batch's requests get their REAL ``done`` events (its decode
+        completes), only still-queued work gets ``shutdown``."""
         self.shutdown_nowait()
         if self._task is not None:
             await self._task
+            self._task = None
+
+    async def drain(self, deadline_s: Optional[float] = None) -> None:
+        """Graceful shutdown (the SIGTERM path): stop admission NOW,
+        give the backlog up to ``deadline_s`` (default
+        ``svcfg.drain_deadline_s``) to finish, then stop.  The in-flight
+        batch finishes the block it is on; whatever is still unfinished
+        at the deadline gets a terminal ``shutdown`` event."""
+        if deadline_s is None:
+            deadline_s = self.svcfg.drain_deadline_s
+        self._draining = True
+        loop = asyncio.get_running_loop()
+        t_end = loop.time() + max(deadline_s, 0.0)
+        while (self.engine.queue_depth or self._decoding) \
+                and loop.time() < t_end:
+            await asyncio.sleep(0.02)
+        self.shutdown_nowait()
+        if self._task is not None:
+            remaining = max(t_end - loop.time(), 0.05)
+            try:
+                await asyncio.wait_for(asyncio.shield(self._task),
+                                       remaining)
+            except asyncio.TimeoutError:
+                # past the deadline: the worker stops at the next block
+                # boundary instead of finishing the batch
+                self._abandon = True
+                await self._task
             self._task = None
 
     def shutdown_nowait(self) -> None:
         """Synchronous shutdown request (the router's eviction hook runs
         in sync context — possibly on a worker thread when the server
         builds engines off-loop): the worker exits after the batch it is
-        on, and open streams get their terminal event.  Thread-safe: the
-        asyncio primitives are only touched from the scheduler's own
-        loop."""
+        on, and open streams get their terminal event.  Streams of the
+        IN-FLIGHT batch are skipped here — its decode completes and they
+        get their real ``done`` events (see the shutdown-race regression
+        test); anything the worker abandons is swept with ``shutdown``
+        when the loop exits.  Thread-safe: the asyncio primitives are
+        only touched from the scheduler's own loop."""
         if self._loop is not None:
             try:
                 on_loop = asyncio.get_running_loop() is self._loop
@@ -134,7 +228,7 @@ class AsyncScheduler:
         self._closed = True
         self._wake.set()
         for rid, stream in self._streams.items():
-            if not stream.finished:
+            if not stream.finished and rid not in self._inflight:
                 stream.emit({"type": "shutdown", "rid": rid,
                              "status": "shutdown", "final": True})
 
@@ -142,6 +236,18 @@ class AsyncScheduler:
     def idle(self) -> bool:
         """No queued work and no batch in flight — safe to evict."""
         return not self._decoding and self.engine.queue_depth == 0
+
+    @property
+    def health(self) -> str:
+        """``ok`` | ``degraded`` (breaker tripped, engine rebuilt, no
+        clean batch yet) | ``draining`` | ``shutdown``."""
+        if self._closed:
+            return "shutdown"
+        if self._draining:
+            return "draining"
+        if self.breaker.degraded:
+            return "degraded"
+        return "ok"
 
     # -- client API (event-loop thread only) -------------------------------
     def submit(self, prompt: np.ndarray, *,
@@ -151,12 +257,18 @@ class AsyncScheduler:
                block_size: Optional[int] = None,
                deadline_s: Optional[float] = None) -> int:
         """Admit a request; returns its rid.  Raises ``QueueFullError``
-        at max queue depth, ``KeyError`` on an unknown strategy and
-        ``ValueError`` on infeasible geometry (both from
-        ``engine.submit``'s boundary validation)."""
+        at max queue depth, ``SchedulerDrainingError`` while draining,
+        ``KeyError`` on an unknown strategy and ``ValueError`` on
+        infeasible geometry (both from ``engine.submit``'s boundary
+        validation).  Under pressure the degradation ladder cheapens the
+        request's effective step budget before the queue-full cliff."""
         if self._closed:
             raise RuntimeError("scheduler is shut down")
-        if self.engine.queue_depth >= self.max_queue_depth:
+        if self._draining:
+            raise SchedulerDrainingError(
+                "scheduler is draining for shutdown; retry elsewhere")
+        depth = self.engine.queue_depth
+        if depth >= self.max_queue_depth:
             self.counters["rejected"] += 1
             raise QueueFullError(
                 f"queue at max depth {self.max_queue_depth}; retry later")
@@ -166,6 +278,14 @@ class AsyncScheduler:
             # raw semantics (deadline_s=0.0 there = already expired)
             deadline_s = self.default_deadline_s \
                 if self.default_deadline_s > 0 else None
+        rung = self.ladder.rung_for(depth, deadline_s, self._batch_ema_s)
+        if rung:
+            cheap = self.ladder.cheapen_steps(rung, self.engine.dcfg,
+                                              steps, gen_length,
+                                              block_size)
+            if cheap != steps:
+                steps = cheap
+                self.counters["degraded"] += 1
         rid = self.engine.submit(prompt, strategy=strategy, steps=steps,
                                  gen_length=gen_length,
                                  block_size=block_size,
@@ -212,7 +332,14 @@ class AsyncScheduler:
         return {"queue_depth": self.engine.queue_depth,
                 "decoding": self._decoding,
                 "open_streams": len(self._streams),
+                "health": self.health,
+                "ladder_rung": self.ladder.rung_for(
+                    self.engine.queue_depth),
+                "breaker_trips": self.breaker.trips,
                 **self.counters,
+                "faults_injected":
+                    dict(self.engine.fault_injector.counters)
+                    if self.engine.fault_injector is not None else {},
                 "engine": self.engine.summary()}
 
     # -- internals ---------------------------------------------------------
@@ -239,59 +366,179 @@ class AsyncScheduler:
 
     async def _run(self) -> None:
         loop = asyncio.get_running_loop()
-        while not self._closed:
-            for req in self.engine.reap_expired():
-                self.counters["expired"] += 1
-                self._emit(req.rid, {"type": "expired", "rid": req.rid,
-                                     "status": "expired", "final": True})
-            # busy BEFORE popping the queue: the router's idle probe may
-            # run (from an executor thread) in the instant between
-            # select_batch emptying the queue and the decode starting —
-            # it must not see that window as evictable idleness
-            self._decoding = True
-            batch = self.engine.select_batch()
-            if batch is None:
-                self._decoding = False
-                self._wake.clear()
-                # re-check before sleeping: a submit may have landed
-                # between select_batch and clear (same thread, so only if
-                # select awaited — it doesn't — but cheap paranoia)
-                if self.engine.queue_depth == 0 and not self._closed:
-                    await self._wake.wait()
-                continue
-            self.counters["batches"] += 1
+        try:
+            while not self._closed:
+                for req in self.engine.reap_expired():
+                    self.counters["expired"] += 1
+                    self._emit(req.rid,
+                               {"type": "expired", "rid": req.rid,
+                                "status": "expired", "final": True})
+                # busy BEFORE popping the queue: the router's idle probe
+                # may run (from an executor thread) in the instant
+                # between select_batch emptying the queue and the decode
+                # starting — it must not see that window as evictable
+                # idleness
+                self._decoding = True
+                batch = self.engine.select_batch()
+                if batch is None:
+                    self._decoding = False
+                    self._wake.clear()
+                    # re-check before sleeping: a submit may have landed
+                    # between select_batch and clear (same thread, so
+                    # only if select awaited — it doesn't — but cheap
+                    # paranoia)
+                    if self.engine.queue_depth == 0 and not self._closed:
+                        await self._wake.wait()
+                    continue
+                self.counters["batches"] += 1
+                t0 = loop.time()
+                try:
+                    await self._decode_supervised(loop, batch)
+                except _AbandonBatch:
+                    break           # drain deadline: swept below
+                finally:
+                    self._decoding = False
+                    self._inflight = set()
+                dt = loop.time() - t0
+                self._batch_ema_s = dt if not self._batch_ema_s \
+                    else 0.8 * self._batch_ema_s + 0.2 * dt
+        finally:
+            self._decoding = False
+            self._inflight = set()
+            # final sweep: whatever never reached a terminal event
+            # (abandoned in-flight work, late re-queues) ends with
+            # `shutdown` — no stream is left dangling
+            for rid, stream in list(self._streams.items()):
+                if not stream.finished:
+                    self._emit(rid, {"type": "shutdown", "rid": rid,
+                                     "status": "shutdown", "final": True})
+
+    async def _decode_supervised(self, loop, batch: Batch) -> None:
+        """One batch under the supervision policy (module docstring)."""
+        svc = self.svcfg
+        attempt = 0
+        while True:
+            self._inflight = {r.rid for r in batch.requests}
+            progress = {"blocks": 0}
             try:
-                blocks = self.engine.decode_batch_blocks(batch)
-                while True:
-                    kind, payload = await loop.run_in_executor(
-                        None, _drive, blocks)
-                    if kind == "done":
-                        break
-                    blk, lo, hi, tokens = payload
-                    self.counters["blocks"] += 1
-                    for i, req in enumerate(batch.requests):
-                        # rebase to the request's own coordinates (mask
-                        # pad columns sit left of its prompt)
-                        self._emit(req.rid, {
-                            "type": "block", "rid": req.rid, "block": blk,
-                            "lo": lo - req.pad_cols,
-                            "hi": hi - req.pad_cols,
-                            "tokens": tokens[i].tolist()})
+                await self._drive_batch(loop, batch, progress)
+                self.breaker.record_success()
                 for req in batch.requests:
                     self.counters["finished"] += 1
                     self._emit(req.rid, self._done_event(req))
+                return
+            except _AbandonBatch:
+                raise
             except Exception as e:
-                # a failed batch must not kill the serving loop: its
-                # requests get a terminal error event, everyone queued
-                # behind it still gets served
-                self.counters["errors"] += 1
-                for req in batch.requests:
+                if progress["blocks"]:
+                    # blocks already fanned out this attempt are stale —
+                    # the retry re-decodes from scratch
+                    for req in batch.requests:
+                        self.counters["resets"] += 1
+                        self._emit(req.rid,
+                                   {"type": "reset", "rid": req.rid})
+                if classify_failure(e) == "fatal":
+                    await self._engine_fault(loop, batch, e)
+                    return
+                attempt += 1
+                if attempt <= svc.max_retries:
+                    self.counters["retries"] += 1
+                    await asyncio.sleep(self._backoff.delay(attempt))
+                    continue
+                if len(batch.requests) == 1:
+                    # the poison request, isolated: exactly one terminal
+                    # error event; nobody else was in this batch
+                    req = batch.requests[0]
+                    self.counters["errors"] += 1
+                    self.counters["quarantined"] += 1
+                    self.engine.record_failed(req)
                     self._emit(req.rid, {
                         "type": "error", "rid": req.rid,
                         "status": "error", "final": True,
                         "error": f"{type(e).__name__}: {e}"})
-            finally:
-                self._decoding = False
+                    return
+                # persistent multi-request failure: bisect.  Fresh
+                # cohort ids per half keep the halves from re-merging
+                # into the batch that just failed; the poison's cohort
+                # keeps shrinking until it is alone
+                for half in bisect(batch.requests):
+                    self.engine.requeue(half, fresh_group=True)
+                    self.counters["requeued"] += len(half)
+                self._wake.set()
+                return
+
+    async def _drive_batch(self, loop, batch: Batch, progress: Dict
+                           ) -> None:
+        """Drive one decode attempt block by block, under the watchdog;
+        fans block events out to the per-request streams."""
+        svc = self.svcfg
+        blocks = self.engine.decode_batch_blocks(batch)
+        while True:
+            fut = loop.run_in_executor(None, _drive, blocks)
+            if svc.watchdog_s > 0:
+                try:
+                    kind, payload = await asyncio.wait_for(
+                        asyncio.shield(fut), svc.watchdog_s)
+                except asyncio.TimeoutError:
+                    # the resumption keeps running on its executor
+                    # thread but is never resumed again; the engine may
+                    # be wedged, so this is engine-fatal
+                    fut.add_done_callback(_retrieve)
+                    self.counters["watchdog_timeouts"] += 1
+                    raise WatchdogTimeout(
+                        f"block exceeded the {svc.watchdog_s:g}s "
+                        f"watchdog") from None
+            else:
+                kind, payload = await fut
+            if kind == "done":
+                return
+            blk, lo, hi, tokens = payload
+            self.counters["blocks"] += 1
+            progress["blocks"] += 1
+            for i, req in enumerate(batch.requests):
+                # rebase to the request's own coordinates (mask pad
+                # columns sit left of its prompt)
+                self._emit(req.rid, {
+                    "type": "block", "rid": req.rid, "block": blk,
+                    "lo": lo - req.pad_cols,
+                    "hi": hi - req.pad_cols,
+                    "tokens": tokens[i].tolist()})
+            if self._abandon:
+                raise _AbandonBatch()
+
+    async def _engine_fault(self, loop, batch: Batch,
+                            exc: Exception) -> None:
+        """Engine-fatal failure: count it, maybe trip the breaker and
+        rebuild the engine, re-queue the batch's requests (per-request
+        retry cap → terminal error)."""
+        self.counters["engine_faults"] += 1
+        if self.breaker.record_fault() and self.rebuild_engine is not None:
+            try:
+                rebuilt = await loop.run_in_executor(
+                    None, self.rebuild_engine)
+            except Exception:
+                self.counters["rebuild_failures"] += 1
+                rebuilt = None
+            if rebuilt is not None:
+                rebuilt.adopt(self.engine)
+                self.engine = rebuilt
+                self.counters["engine_rebuilds"] += 1
+        survivors = []
+        for req in batch.requests:
+            req.retries += 1
+            if req.retries > self.svcfg.max_retries:
+                self.counters["errors"] += 1
+                self.engine.record_failed(req)
+                self._emit(req.rid, {
+                    "type": "error", "rid": req.rid,
+                    "status": "error", "final": True,
+                    "error": f"{type(exc).__name__}: {exc}"})
+            else:
+                survivors.append(req)
+        if survivors:
+            self.engine.requeue(survivors)
+            self.counters["requeued"] += len(survivors)
+            self._wake.set()
 
     @staticmethod
     def _done_event(req: Request) -> Dict:
@@ -308,3 +555,10 @@ def _drive(blocks):
         return ("block", next(blocks))
     except StopIteration as fin:
         return ("done", fin.value)
+
+
+def _retrieve(fut) -> None:
+    """Mark an abandoned (watchdog-timed-out) future's eventual
+    exception as retrieved so it can't warn at GC time."""
+    if not fut.cancelled():
+        fut.exception()

@@ -21,15 +21,24 @@ web framework, zero new runtime dependencies.  The endpoint surface:
 * ``GET /v1/stream/{rid}?model=name`` — Server-Sent Events: one ``block``
   event per committed semi-AR block (the natural streaming grain of
   blockwise diffusion decoding — tokens inside a block finalize
-  together), then exactly one terminal event (``done`` / ``cancelled`` /
-  ``expired`` / ``shutdown``).  Events replay from the start, so
-  attaching after (or long after) the decode still yields the full
-  ordered stream.
+  together), possibly ``reset`` events (supervision retried the batch:
+  discard earlier blocks), then exactly one terminal event (``done`` /
+  ``cancelled`` / ``expired`` / ``error`` / ``shutdown``).  Events
+  replay from the start, so attaching after (or long after) the decode
+  still yields the full ordered stream.
 
 * ``POST /v1/cancel`` — ``{"rid", "model"}``; true iff still queued.
 * ``GET /v1/models`` — registered models (+ residency) and strategies.
-* ``GET /healthz`` — liveness + per-model queue depths.
-* ``GET /metrics`` — Prometheus-style text exposition.
+* ``GET /healthz`` — liveness + per-model health (``ok`` / ``degraded``
+  after a circuit-breaker engine rebuild / ``draining``) + queue depths.
+* ``GET /metrics`` — Prometheus-style text exposition, including the
+  supervision counters (retries, quarantines, watchdog timeouts, engine
+  faults/rebuilds, injected faults) and the active degradation rung.
+
+Backpressure answers carry ``Retry-After``: 429 at queue depth, 503
+while draining for shutdown.  Bodies are bounded by Content-Length
+against ``max_body_bytes`` before buffering; chunked uploads are
+rejected (413).
 
 Multi-model: requests route through a ``ModelRouter``; each resident
 engine gets its own ``AsyncScheduler`` (created lazily, torn down by the
@@ -50,7 +59,8 @@ from repro.configs.base import ServerConfig
 from repro.core.decoder import decode_cache_info
 from repro.core.strategies import available_strategies
 from repro.serving.router import ModelRouter
-from repro.serving.scheduler import AsyncScheduler, QueueFullError
+from repro.serving.scheduler import (AsyncScheduler, QueueFullError,
+                                     SchedulerDrainingError)
 
 _MAX_HEADER_BYTES = 32 * 1024
 
@@ -65,7 +75,8 @@ class _HttpError(Exception):
 _STATUS_TEXT = {200: "OK", 202: "Accepted", 400: "Bad Request",
                 404: "Not Found", 405: "Method Not Allowed",
                 413: "Payload Too Large", 429: "Too Many Requests",
-                500: "Internal Server Error"}
+                500: "Internal Server Error",
+                503: "Service Unavailable"}
 
 
 class ServingServer:
@@ -91,6 +102,10 @@ class ServingServer:
         # not clobbered.
         self._chained_on_evict = router.on_evict
         router.on_evict = self._on_evict
+        # models mid-supervised-rebuild: their eviction (inside
+        # router.rebuild) must NOT tear down the scheduler driving the
+        # rebuild — it adopts the fresh engine and keeps its streams
+        self._rebuilding: set = set()
 
     # -- lifecycle ---------------------------------------------------------
     async def start(self) -> Tuple[str, int]:
@@ -114,13 +129,47 @@ class ServingServer:
             await self._server.wait_closed()
             self._server = None
 
+    async def drain(self, deadline_s: Optional[float] = None) -> None:
+        """Graceful shutdown (the SIGTERM path): every model stops
+        admission immediately (new submits answer 503 + Retry-After),
+        in-flight and queued work gets up to the drain deadline to
+        finish — terminal ``shutdown`` events for whatever remains —
+        then the listener closes.  Streams and /healthz stay servable
+        for the duration, so clients see their terminal events instead
+        of a reset connection."""
+        scheds = list(self._scheds.values())
+        if scheds:
+            await asyncio.gather(
+                *(s.drain(deadline_s) for s in scheds))
+        await self.close()
+
     # -- model plumbing ----------------------------------------------------
     def _on_evict(self, name: str, engine) -> None:
-        sched = self._scheds.pop(name, None)
-        if sched is not None:
-            sched.shutdown_nowait()
+        if name not in self._rebuilding:
+            sched = self._scheds.pop(name, None)
+            if sched is not None:
+                sched.shutdown_nowait()
         if self._chained_on_evict is not None:
             self._chained_on_evict(name, engine)
+
+    def _rebuild_engine(self, name: str):
+        """The scheduler's circuit-breaker rebuild callable (runs on an
+        executor thread).  Hot-swaps the engine through the router —
+        real mechanics: force-evict + fresh factory build, compiled
+        runners and params of the crashed engine actually free — while
+        suppressing the eviction hook's scheduler teardown: the calling
+        scheduler survives, adopts the fresh engine, and its streams
+        ride through the swap."""
+        self._rebuilding.add(name)
+        try:
+            engine = self.router.rebuild(name)
+        finally:
+            self._rebuilding.discard(name)
+        sched = self._scheds.get(name)
+        if sched is not None:
+            # eviction dropped the old slot's busy probe with the slot
+            self.router.set_busy_probe(name, lambda s=sched: not s.idle)
+        return engine
 
     async def scheduler(self, name: str) -> AsyncScheduler:
         """Resident scheduler for a model (engine built/touched through
@@ -155,7 +204,10 @@ class ServingServer:
                 engine,
                 max_queue_depth=self.scfg.max_queue_depth,
                 default_deadline_s=self.scfg.default_deadline_s,
-                stream_retain=self.scfg.stream_retain)
+                stream_retain=self.scfg.stream_retain,
+                svcfg=self.scfg.supervisor,
+                dgcfg=self.scfg.degrade,
+                rebuild_engine=lambda n=name: self._rebuild_engine(n))
             await sched.start()
             self._scheds[name] = sched
             self.router.set_busy_probe(
@@ -189,7 +241,12 @@ class ServingServer:
                     self._respond(writer, 400, {"error": str(e)})
                     close = False
                 except QueueFullError as e:
-                    self._respond(writer, 429, {"error": str(e)})
+                    self._respond(writer, 429, {"error": str(e)},
+                                  headers=self._retry_after())
+                    close = False
+                except SchedulerDrainingError as e:
+                    self._respond(writer, 503, {"error": str(e)},
+                                  headers=self._retry_after())
                     close = False
                 except (ConnectionError, asyncio.IncompleteReadError):
                     raise
@@ -240,11 +297,23 @@ class ServingServer:
                 break
             key, _, val = hline.decode("latin-1").partition(":")
             headers[key.strip().lower()] = val.strip()
+        if "chunked" in headers.get("transfer-encoding", "").lower():
+            # no framing by declared size means no pre-buffer cap;
+            # reject before reading a single body byte (the connection
+            # drops — the stream position past the headers is unknowable
+            # without decoding the chunks we just refused to read)
+            raise _HttpError(413, "chunked bodies are not accepted; "
+                                  "send Content-Length")
         try:
             length = int(headers.get("content-length", "0") or "0")
         except ValueError:
             raise _HttpError(400, "bad Content-Length")
+        if length < 0:
+            raise _HttpError(400, "bad Content-Length")
         if length > self.scfg.max_body_bytes:
+            # EVERY route shares this cap, and it fires before any body
+            # byte is buffered — an oversized POST costs the server its
+            # header read, nothing more
             raise _HttpError(413, "request body too large")
         body = await reader.readexactly(length) if length else b""
         url = urllib.parse.urlsplit(target)
@@ -267,11 +336,24 @@ class ServingServer:
                 "models": self.router.info()["models"],
                 "strategies": list(available_strategies())})
         elif method == "GET" and path == "/healthz":
+            # snapshot: evictions may pop entries from an executor thread
+            scheds = list(self._scheds.items())
+            health = {n: s.health for n, s in scheds}
+            status = "ok"
+            for state in health.values():
+                if state != "ok":
+                    status = state
+                    break
+            # "ok" stays a liveness bool (the process answers); per-model
+            # readiness lives in "status"/"health" — degraded = breaker
+            # tripped and no clean batch yet, draining = SIGTERM received
             self._respond(writer, 200, {
                 "ok": True,
+                "status": status,
                 "models": self.router.names(),
+                "health": health,
                 "queue_depth": {n: s.engine.queue_depth
-                                for n, s in list(self._scheds.items())}})
+                                for n, s in scheds}})
         elif method == "GET" and path == "/metrics":
             self._respond_raw(writer, 200, self._metrics_text(),
                               "text/plain; version=0.0.4")
@@ -431,16 +513,27 @@ class ServingServer:
         emit("router_evictions_total", info["evictions"])
         emit("router_builds_total", info["builds"])
         emit("router_swaps_total", info["swaps"])
+        emit("router_rebuilds_total", info["rebuilds"])
         # snapshot: evictions may pop entries from an executor thread
         for name, sched in list(self._scheds.items()):
             m = sched.metrics()
             labels = lab(name)
             emit("queue_depth", m["queue_depth"], labels)
             emit("decoding", int(m["decoding"]), labels)
+            emit("health_degraded",
+                 int(m["health"] == "degraded"), labels)
+            emit("ladder_rung", m["ladder_rung"], labels)
+            emit("breaker_trips_total", m["breaker_trips"], labels)
             for counter in ("submitted", "finished", "rejected",
                             "cancelled", "expired", "errors", "batches",
-                            "blocks"):
+                            "blocks", "retries", "requeued",
+                            "quarantined", "watchdog_timeouts",
+                            "engine_faults", "engine_rebuilds",
+                            "rebuild_failures", "resets", "degraded"):
                 emit(f"requests_{counter}_total", m[counter], labels)
+            for kind, fired in m["faults_injected"].items():
+                emit("faults_injected_total", fired,
+                     lab(name, kind=kind))
             summary = m["engine"]
             if summary:
                 emit("latency_seconds", summary["mean_latency_s"],
@@ -455,17 +548,27 @@ class ServingServer:
         return "\n".join(lines) + "\n"
 
     # -- response helpers --------------------------------------------------
+    def _retry_after(self) -> Dict[str, str]:
+        """429/503 both carry Retry-After (integer seconds per RFC
+        9110): backpressure is a *schedule*, not just a refusal — the
+        blocking client honors it."""
+        return {"Retry-After": str(max(1, round(self.scfg.retry_after_s)))}
+
     def _respond(self, writer: asyncio.StreamWriter, status: int,
-                 obj: Dict) -> None:
+                 obj: Dict, headers: Optional[Dict[str, str]] = None
+                 ) -> None:
         self._respond_raw(writer, status, json.dumps(obj),
-                          "application/json")
+                          "application/json", headers)
 
     def _respond_raw(self, writer: asyncio.StreamWriter, status: int,
-                     text: str, ctype: str) -> None:
+                     text: str, ctype: str,
+                     headers: Optional[Dict[str, str]] = None) -> None:
         data = text.encode()
+        extra = "".join(f"{k}: {v}\r\n"
+                        for k, v in (headers or {}).items())
         head = (f"HTTP/1.1 {status} {_STATUS_TEXT.get(status, '?')}\r\n"
                 f"Content-Type: {ctype}\r\n"
-                f"Content-Length: {len(data)}\r\n"
+                f"Content-Length: {len(data)}\r\n{extra}"
                 f"Connection: keep-alive\r\n\r\n")
         writer.write(head.encode() + data)
 

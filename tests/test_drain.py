@@ -1,0 +1,412 @@
+"""Graceful shutdown + client resilience + request-body limits.
+
+The shutdown-race regression (a close() racing an in-flight batch must
+deliver that batch's REAL terminal events), scheduler drain semantics
+(admission stops → 503, bounded by the drain deadline, leftovers get
+``shutdown``), the blocking client's retry policy, and the HTTP body
+limits (Content-Length cap before buffering, chunked rejection,
+Retry-After on backpressure).
+"""
+import asyncio
+import socket
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import (DecodeConfig, RouterConfig, ServerConfig,
+                           SupervisorConfig, get_config)
+from repro.models.model import init_model
+from repro.serving import (AsyncScheduler, ModelRouter,
+                           SchedulerDrainingError, ServerError,
+                           ServerThread, ServingClient, ServingEngine)
+
+CFG = get_config("llada-8b").reduced()
+DCFG = DecodeConfig(gen_length=16, block_size=8, steps=16,
+                    strategy="probability")
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_model(jax.random.PRNGKey(0), CFG)
+
+
+def _engine(params, **kw):
+    kw.setdefault("max_batch", 4)
+    return ServingEngine(params, CFG, DCFG, **kw)
+
+
+def _prompt(i=0):
+    return np.asarray([3, 5, 2, 7, 4, 6 + i], np.int32)
+
+
+# --------------------------------------------------------------------------
+# the shutdown race: close() vs an in-flight batch
+# --------------------------------------------------------------------------
+
+def test_close_during_decode_keeps_real_terminal_events(params):
+    """Regression: ``close()`` while a batch is in flight must NOT stamp
+    the in-flight streams with ``shutdown`` — the batch completes and
+    its requests get their real ``done`` events (the old code emitted
+    shutdown to every unfinished stream, losing the batch's results)."""
+    async def main():
+        sched = AsyncScheduler(_engine(params))
+        await sched.start()
+        rid = sched.submit(_prompt())
+        events = sched.events(rid)
+        first = await anext(events)
+        assert first["type"] == "block"     # decode is in flight NOW
+        await sched.close()                 # races the running batch
+        rest = [e async for e in events]
+        finals = [e for e in rest if e.get("final")]
+        assert len(finals) == 1
+        assert finals[0]["type"] == "done"  # real result, not shutdown
+        assert finals[0]["tokens"]          # with the decoded tokens
+
+    asyncio.run(main())
+
+
+def test_close_stamps_queued_requests_with_shutdown(params):
+    """The complement: requests still QUEUED at close() (worker never
+    started) end with exactly one terminal ``shutdown`` event."""
+    async def main():
+        sched = AsyncScheduler(_engine(params))
+        rids = [sched.submit(_prompt(i)) for i in range(3)]
+        await sched.close()
+        for rid in rids:
+            events = [e async for e in sched.events(rid)]
+            assert [e["type"] for e in events] == ["shutdown"]
+            assert events[-1]["final"] is True
+
+    asyncio.run(main())
+
+
+# --------------------------------------------------------------------------
+# drain: admission stops, backlog finishes, deadline bounds the wait
+# --------------------------------------------------------------------------
+
+def test_drain_finishes_backlog_and_blocks_admission(params):
+    async def main():
+        sched = AsyncScheduler(
+            _engine(params),
+            svcfg=SupervisorConfig(drain_deadline_s=60.0))
+        await sched.start()
+        rids = [sched.submit(_prompt(i)) for i in range(2)]
+        drain = asyncio.create_task(sched.drain())
+        await asyncio.sleep(0)              # drain flips _draining
+        assert sched.health == "draining"
+        with pytest.raises(SchedulerDrainingError):
+            sched.submit(_prompt(9))
+        await drain
+        for rid in rids:                    # backlog completed for real
+            events = [e async for e in sched.events(rid)]
+            assert events[-1]["type"] == "done"
+        assert sched.health == "shutdown"
+
+    asyncio.run(main())
+
+
+def test_drain_deadline_stamps_leftovers_with_shutdown(params):
+    """A drain whose deadline cannot cover the backlog stops anyway:
+    whatever never decoded gets exactly one terminal ``shutdown``."""
+    async def main():
+        sched = AsyncScheduler(_engine(params))   # worker never started
+        rids = [sched.submit(_prompt(i)) for i in range(3)]
+        t0 = time.perf_counter()
+        await sched.drain(deadline_s=0.05)
+        assert time.perf_counter() - t0 < 5.0     # bounded, not hung
+        for rid in rids:
+            events = [e async for e in sched.events(rid)]
+            finals = [e for e in events if e.get("final")]
+            assert len(finals) == 1
+            assert finals[0]["type"] == "shutdown"
+
+    asyncio.run(main())
+
+
+def test_server_drain_returns_503_with_retry_after(params):
+    """Server-level drain over sockets: during the drain window new
+    submissions answer 503 + Retry-After (retryable against a
+    replacement), and the drain completes."""
+    router = ModelRouter(RouterConfig())
+    router.register("tiny", lambda: _engine(params))
+    handle = ServerThread(router, ServerConfig(port=0)).start()
+    try:
+        client = ServingClient(handle.host, handle.port, max_retries=0)
+        # cold submit: the first decode (compile included) holds the
+        # drain open while we probe admission
+        client.generate(_prompt().tolist(), wait=False)
+        fut = asyncio.run_coroutine_threadsafe(
+            handle.server.drain(30.0), handle._loop)
+        saw_503 = False
+        for _ in range(200):
+            try:
+                client.generate(_prompt(1).tolist(), wait=False)
+            except ServerError as e:
+                if e.status == 503:
+                    saw_503 = True
+                    assert e.retry_after is not None
+                    break
+            except OSError:
+                break               # listener already closed
+            time.sleep(0.01)
+        fut.result(timeout=60)
+        assert saw_503
+    finally:
+        handle.stop()
+
+
+# --------------------------------------------------------------------------
+# client retry policy (no sockets: the transport layer is stubbed)
+# --------------------------------------------------------------------------
+
+def _retry_client(**kw):
+    kw.setdefault("max_retries", 2)
+    kw.setdefault("backoff_base_s", 0.001)
+    kw.setdefault("backoff_cap_s", 0.002)
+    return ServingClient("127.0.0.1", 1, **kw)
+
+
+def test_client_retries_connection_errors_then_succeeds():
+    client = _retry_client()
+    calls = []
+
+    def flaky(method, path, body=None):
+        calls.append(1)
+        if len(calls) < 3:
+            raise ConnectionResetError("mid-handshake")
+        return {"ok": True}
+
+    client._request_once = flaky
+    assert client._request("GET", "/healthz") == {"ok": True}
+    assert len(calls) == 3
+
+
+def test_client_gives_up_after_max_retries():
+    client = _retry_client(max_retries=1)
+    calls = []
+
+    def dead(method, path, body=None):
+        calls.append(1)
+        raise ConnectionRefusedError("down")
+
+    client._request_once = dead
+    with pytest.raises(ConnectionRefusedError):
+        client._request("GET", "/healthz")
+    assert len(calls) == 2                  # first try + one retry
+
+
+def test_client_retries_429_honoring_retry_after():
+    client = _retry_client()
+    calls = []
+
+    def busy(method, path, body=None):
+        calls.append(1)
+        if len(calls) < 2:
+            raise ServerError(429, "full", retry_after=0.0)
+        return {"rid": 1}
+
+    client._request_once = busy
+    assert client._request("POST", "/v1/generate", {})["rid"] == 1
+    assert len(calls) == 2
+
+
+def test_client_never_retries_client_errors():
+    client = _retry_client()
+    calls = []
+
+    def bad(method, path, body=None):
+        calls.append(1)
+        raise ServerError(400, "bad geometry")
+
+    client._request_once = bad
+    with pytest.raises(ServerError):
+        client._request("POST", "/v1/generate", {})
+    assert len(calls) == 1
+
+
+def test_client_max_retries_zero_is_single_shot():
+    client = _retry_client(max_retries=0)
+    calls = []
+
+    def busy(method, path, body=None):
+        calls.append(1)
+        raise ServerError(429, "full", retry_after=0.0)
+
+    client._request_once = busy
+    with pytest.raises(ServerError):
+        client._request("POST", "/v1/generate", {})
+    assert len(calls) == 1
+
+
+def test_stream_retries_only_before_first_event():
+    client = _retry_client()
+    calls = []
+
+    def flaky(path):
+        calls.append(1)
+        if len(calls) == 1:
+            raise ConnectionResetError("pre-yield")
+        yield ("done", {"type": "done", "final": True})
+
+    client._stream_once = flaky
+    events = list(client.stream(0))
+    assert [name for name, _ in events] == ["done"]
+    assert len(calls) == 2                  # pre-yield failure retried
+
+    calls.clear()
+
+    def mid_stream(path):
+        calls.append(1)
+        yield ("block", {"type": "block"})
+        raise ConnectionResetError("mid-stream")
+
+    client._stream_once = mid_stream
+    with pytest.raises(ConnectionResetError):
+        list(client.stream(0))
+    assert len(calls) == 1                  # NEVER retried after a yield
+
+
+# --------------------------------------------------------------------------
+# request-body limits over raw sockets
+# --------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def limited_server(params):
+    router = ModelRouter(RouterConfig())
+    router.register("tiny", lambda: _engine(params))
+    handle = ServerThread(router, ServerConfig(
+        port=0, max_body_bytes=2048)).start()
+    yield handle
+    handle.stop()
+
+
+def _raw_http(host, port, payload: bytes) -> bytes:
+    with socket.create_connection((host, port), timeout=30) as s:
+        s.sendall(payload)
+        chunks = []
+        while True:
+            data = s.recv(4096)
+            if not data:
+                break
+            chunks.append(data)
+    return b"".join(chunks)
+
+
+def test_oversized_body_is_413_before_buffering(limited_server):
+    body = b"x" * 4096                      # 2x the cap
+    req = (f"POST /v1/generate HTTP/1.1\r\nHost: t\r\n"
+           f"Content-Type: application/json\r\n"
+           f"Content-Length: {len(body)}\r\n\r\n").encode() + body
+    resp = _raw_http(limited_server.host, limited_server.port, req)
+    assert resp.startswith(b"HTTP/1.1 413")
+    assert b"too large" in resp
+
+
+def test_chunked_body_is_rejected_413(limited_server):
+    req = (b"POST /v1/generate HTTP/1.1\r\nHost: t\r\n"
+           b"Content-Type: application/json\r\n"
+           b"Transfer-Encoding: chunked\r\n\r\n"
+           b"5\r\nhello\r\n0\r\n\r\n")
+    resp = _raw_http(limited_server.host, limited_server.port, req)
+    assert resp.startswith(b"HTTP/1.1 413")
+    assert b"chunked" in resp
+
+
+def test_negative_content_length_is_400(limited_server):
+    req = (b"POST /v1/generate HTTP/1.1\r\nHost: t\r\n"
+           b"Content-Length: -5\r\n\r\n")
+    resp = _raw_http(limited_server.host, limited_server.port, req)
+    assert resp.startswith(b"HTTP/1.1 400")
+
+
+def test_oversized_get_body_is_also_capped(limited_server):
+    """The cap is route-independent: a GET with an absurd declared body
+    is refused the same way (every route shares _read_request)."""
+    req = (b"GET /healthz HTTP/1.1\r\nHost: t\r\n"
+           b"Content-Length: 999999\r\n\r\n")
+    resp = _raw_http(limited_server.host, limited_server.port, req)
+    assert resp.startswith(b"HTTP/1.1 413")
+
+
+# --------------------------------------------------------------------------
+# untested error paths: cancel-mid-block, deadline-during-decode,
+# eviction racing an active stream
+# --------------------------------------------------------------------------
+
+def test_cancel_mid_block_cannot_preempt_and_result_arrives(params):
+    async def main():
+        sched = AsyncScheduler(_engine(params))
+        await sched.start()
+        rid = sched.submit(_prompt())
+        events = sched.events(rid)
+        first = await anext(events)
+        assert first["type"] == "block"     # decoding now
+        assert sched.cancel(rid) is False   # batch-synchronous: no
+        rest = [e async for e in events]    # preemption, result lands
+        assert rest[-1]["type"] == "done"
+        assert sched.counters["cancelled"] == 0
+        await sched.close()
+
+    asyncio.run(main())
+
+
+def test_deadline_expires_while_another_batch_decodes(params):
+    """Deadlines bound QUEUE time: a request whose deadline lapses while
+    the worker is busy with an earlier batch is reaped with a terminal
+    ``expired`` event, never decoded; the busy batch is unaffected."""
+    async def main():
+        sched = AsyncScheduler(_engine(params))
+        await sched.start()
+        slow = sched.submit(_prompt())
+        events = sched.events(slow)
+        first = await anext(events)
+        assert first["type"] == "block"     # slow batch in flight
+        doomed = sched.submit(_prompt(1), deadline_s=0.001)
+        terminal = await sched.result(doomed)
+        assert terminal["type"] == "expired"
+        rest = [e async for e in events]
+        assert rest[-1]["type"] == "done"
+        assert sched.counters["expired"] == 1
+        await sched.close()
+
+    asyncio.run(main())
+
+
+def test_router_eviction_races_active_stream(params):
+    """hot_swap from a foreign thread while a stream is live: the stream
+    ends with exactly one terminal event (its real ``done`` if the batch
+    completed, else ``shutdown`` — never a hang, never a dropped
+    connection), and the model serves fresh requests afterwards."""
+    router = ModelRouter(RouterConfig())
+    router.register("tiny", lambda: _engine(params))
+    handle = ServerThread(router, ServerConfig(port=0)).start()
+    try:
+        client = ServingClient(handle.host, handle.port)
+        sub = client.generate(_prompt().tolist(), wait=False)
+        events = []
+        got_first = threading.Event()
+
+        def consume():
+            for name, event in client.stream(sub["rid"],
+                                             model=sub["model"]):
+                events.append((name, event))
+                got_first.set()
+            got_first.set()
+
+        t = threading.Thread(target=consume)
+        t.start()
+        assert got_first.wait(timeout=120)
+        router.hot_swap("tiny")             # foreign-thread eviction
+        t.join(timeout=120)
+        assert not t.is_alive()
+        finals = [e for _, e in events if e.get("final")]
+        assert len(finals) == 1
+        assert finals[0]["type"] in ("done", "shutdown")
+        # the swapped-in engine serves a fresh request end to end
+        res = client.generate(_prompt(1).tolist(), wait=True)
+        assert res["status"] == "ok"
+    finally:
+        handle.stop()

@@ -1,0 +1,433 @@
+"""Fault injection + supervision: the deterministic failure matrix.
+
+Every recovery path is driven by the ``FaultInjector`` at the engine's
+block grain — scheduled errors, NaN-style token corruption (caught by
+the always-on output validator), simulated OOM (circuit breaker →
+engine rebuild), injected latency (watchdog) — and asserted at the
+scheduler's event streams: the poison request gets exactly ONE terminal
+``error`` event, co-batched requests survive bit-identical to a
+fault-free decode, the worker loop never dies.
+"""
+import asyncio
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import (DecodeConfig, DegradeConfig, LadderRung,
+                           SupervisorConfig, get_config)
+from repro.configs.base import RouterConfig, ServerConfig
+from repro.core import Decoder
+from repro.models.model import init_model
+from repro.serving import (AsyncScheduler, CorruptOutputError, Fault,
+                           FaultInjector, InjectedFault, ModelRouter,
+                           ServingEngine, SimulatedOOM, is_engine_fatal)
+from repro.serving.faults import backoff_delay, validate_block_tokens
+from repro.serving.supervisor import (Backoff, CircuitBreaker,
+                                      DegradationLadder, WatchdogTimeout,
+                                      bisect, classify_failure)
+
+CFG = get_config("llada-8b").reduced()
+DCFG = DecodeConfig(gen_length=16, block_size=8, steps=16,
+                    strategy="probability")
+# fast supervision for tests: near-zero backoff, small breaker window
+SVCFG = SupervisorConfig(max_retries=2, backoff_base_s=0.001,
+                         backoff_cap_s=0.002, breaker_threshold=2,
+                         breaker_window_s=60.0)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_model(jax.random.PRNGKey(0), CFG)
+
+
+def _engine(params, faults=(), **kw):
+    kw.setdefault("max_batch", 4)
+    inj = FaultInjector(faults) if faults else None
+    return ServingEngine(params, CFG, DCFG, fault_injector=inj, **kw)
+
+
+def _prompt(i=0):
+    return np.asarray([3, 5, 2, 7, 4, 6 + i], np.int32)
+
+
+def _direct(params, prompt):
+    out, _ = Decoder(params, CFG, DCFG).generate(
+        jax.random.PRNGKey(99), np.asarray(prompt, np.int32)[None])
+    return np.asarray(out)[0]
+
+
+# --------------------------------------------------------------------------
+# the injector itself (no model, no asyncio)
+# --------------------------------------------------------------------------
+
+def test_fault_matching_and_firing_budget():
+    f = Fault(kind="error", batch_index=1, block=0, times=1)
+    assert not f.matches(0, [1, 2], 0)          # wrong batch
+    assert not f.matches(1, [1, 2], 1)          # wrong block
+    assert f.matches(1, [1, 2], 0)
+    inj = FaultInjector([f])
+    assert inj.begin_batch() == 0
+    inj.before_block(0, [1, 2], 0)              # batch 0: no fire
+    with pytest.raises(InjectedFault):
+        inj.before_block(1, [1, 2], 0)
+    # times=1: spent — a retry of the same batch index sails through
+    inj.before_block(1, [1, 2], 0)
+    assert inj.counters["error"] == 1
+
+
+def test_fault_rid_follows_poison_request():
+    """A rid-keyed fault fires in EVERY batch containing the poison rid
+    — the contract bisection quarantine depends on."""
+    f = Fault(kind="error", rid=7, times=None)
+    inj = FaultInjector([f])
+    with pytest.raises(InjectedFault):
+        inj.before_block(0, [5, 6, 7, 8], 0)
+    with pytest.raises(InjectedFault):
+        inj.before_block(1, [7], 0)
+    inj.before_block(2, [5, 6], 0)              # poison not present
+    assert inj.counters["error"] == 2
+
+
+def test_unknown_fault_kind_rejected():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        Fault(kind="explode")
+
+
+def test_nan_fault_corrupts_and_validator_catches():
+    inj = FaultInjector([Fault(kind="nan", block=0)])
+    tokens = np.asarray([[1, 2], [3, 4]])
+    bad = inj.filter_tokens(0, [1, 2], 0, tokens)
+    assert (bad == -1).all()
+    with pytest.raises(CorruptOutputError, match="out-of-vocab"):
+        validate_block_tokens(bad, CFG.vocab_size)
+    validate_block_tokens(tokens, CFG.vocab_size)   # clean passes
+
+
+def test_chaos_mode_is_seeded_and_counted():
+    def schedule(seed):
+        inj = FaultInjector([], chaos_rate=0.5, seed=seed,
+                            chaos_kinds=("error",))
+        fired = []
+        for block in range(32):
+            try:
+                inj.before_block(0, [1], block)
+                fired.append(False)
+            except InjectedFault:
+                fired.append(True)
+        return fired, inj.total_fired
+
+    a, na = schedule(7)
+    b, nb = schedule(7)
+    c, _ = schedule(8)
+    assert a == b and na == nb          # same seed → same schedule
+    assert a != c                       # different seed → different one
+    assert 0 < na < 32
+
+
+def test_oom_classification():
+    assert is_engine_fatal(SimulatedOOM("boom"))
+    assert is_engine_fatal(RuntimeError("RESOURCE_EXHAUSTED: hbm"))
+    assert is_engine_fatal(RuntimeError("Out of memory while trying"))
+    assert not is_engine_fatal(RuntimeError("boom"))
+    assert classify_failure(WatchdogTimeout("slow")) == "fatal"
+    assert classify_failure(InjectedFault("x")) == "transient"
+    assert classify_failure(CorruptOutputError("x")) == "transient"
+
+
+def test_backoff_is_capped_exponential_with_jitter():
+    assert backoff_delay(1, 0.1, 10.0) == pytest.approx(0.1)
+    assert backoff_delay(3, 0.1, 10.0) == pytest.approx(0.4)
+    assert backoff_delay(30, 0.1, 10.0) == pytest.approx(10.0)  # capped
+    b = Backoff(0.1, 10.0, seed=1)
+    d = b.delay(2)
+    assert 0.1 <= d < 0.3               # jitter in [0.5, 1.5) of 0.2
+    assert Backoff(0.1, 10.0, seed=1).delay(2) == pytest.approx(d)
+
+
+def test_circuit_breaker_window_and_reset():
+    cb = CircuitBreaker(threshold=3, window_s=10.0)
+    assert not cb.record_fault(now=0.0)
+    assert not cb.record_fault(now=1.0)
+    assert cb.record_fault(now=2.0)             # 3 inside the window
+    assert cb.degraded and cb.trips == 1
+    cb.record_success()
+    assert not cb.degraded
+    # faults spread wider than the window never trip
+    assert not cb.record_fault(now=100.0)
+    assert not cb.record_fault(now=120.0)
+    assert not cb.record_fault(now=140.0)
+    assert cb.trips == 1
+
+
+def test_degradation_ladder_rungs_and_cheapening():
+    dg = DegradeConfig(rungs=(LadderRung(0.5, 0.5),
+                              LadderRung(0.8, 0.25)))
+    ladder = DegradationLadder(dg, max_queue_depth=10)
+    assert ladder.rung_for(0) == 0
+    assert ladder.rung_for(5) == 1
+    assert ladder.rung_for(8) == 2
+    # deadline headroom bumps one extra rung (clamped at the top)
+    assert ladder.rung_for(5, deadline_s=0.5, batch_ema_s=0.2) == 2
+    assert ladder.rung_for(8, deadline_s=0.5, batch_ema_s=0.2) == 2
+    # steps scale down but never below one step per block
+    assert ladder.cheapen_steps(1, DCFG, None, None, None) == 8
+    assert ladder.cheapen_steps(2, DCFG, None, None, None) == 4
+    assert ladder.cheapen_steps(2, DCFG, 64, 16, 2) == 16
+    assert ladder.cheapen_steps(0, DCFG, 12, None, None) == 12
+    # infeasible geometry passes through for the engine to reject
+    assert ladder.cheapen_steps(2, DCFG, 12, 10, 8) == 12
+    disabled = DegradationLadder(DegradeConfig(enabled=False), 10)
+    assert disabled.rung_for(9) == 0
+
+
+def test_bisect_shapes():
+    assert bisect([1]) == [[1]]
+    assert bisect([1, 2]) == [[1], [2]]
+    assert bisect([1, 2, 3]) == [[1], [2, 3]]
+    assert bisect([1, 2, 3, 4]) == [[1, 2], [3, 4]]
+
+
+# --------------------------------------------------------------------------
+# engine-level: the injector fires at the block grain
+# --------------------------------------------------------------------------
+
+def test_engine_block_fault_and_clean_retry(params):
+    """An injected block fault aborts the attempt BEFORE results land;
+    re-driving the same batch (same rng) is bit-identical to an
+    uninjected decode."""
+    engine = _engine(params,
+                     faults=[Fault(kind="error", batch_index=0, block=1)])
+    rid = engine.submit(_prompt())
+    batch = engine.select_batch()
+    with pytest.raises(InjectedFault):
+        for _ in engine.decode_batch_blocks(batch):
+            pass
+    assert engine.result(rid).result is None if rid in engine.done \
+        else rid not in engine.done          # no result from the failure
+    # retry: fault budget spent, same batch decodes clean
+    blocks = list(engine.decode_batch_blocks(batch))
+    assert len(blocks) == DCFG.gen_length // DCFG.block_size
+    assert engine.result(rid).status == "done"
+    np.testing.assert_array_equal(engine.result(rid).result,
+                                  _direct(params, _prompt()))
+
+
+def test_engine_nan_fault_raises_corrupt_output(params):
+    engine = _engine(params, faults=[Fault(kind="nan", block=0)])
+    engine.submit(_prompt())
+    batch = engine.select_batch()
+    with pytest.raises(CorruptOutputError):
+        for _ in engine.decode_batch_blocks(batch):
+            pass
+    assert engine.fault_injector.counters["nan"] == 1
+
+
+# --------------------------------------------------------------------------
+# scheduler-level supervision: retry, bisect, quarantine, breaker
+# --------------------------------------------------------------------------
+
+def _run(coro):
+    asyncio.run(coro)
+
+
+def test_transient_fault_is_retried_bit_identical(params):
+    """One injected fault on the first attempt: supervision retries and
+    the final tokens are BIT-IDENTICAL to a fault-free decode — plus a
+    `reset` event if blocks had already streamed."""
+    async def main():
+        engine = _engine(params, faults=[
+            Fault(kind="error", batch_index=0, block=1)])
+        sched = AsyncScheduler(engine, svcfg=SVCFG)
+        await sched.start()
+        rid = sched.submit(_prompt())
+        events = [e async for e in sched.events(rid)]
+        kinds = [e["type"] for e in events]
+        # block 0 streamed, fault on block 1 → reset → clean re-decode
+        assert kinds == ["block", "reset", "block", "block", "done"]
+        assert events[-1]["tokens"] == _direct(params, _prompt()).tolist()
+        assert sched.counters["retries"] == 1
+        assert sched.counters["resets"] == 1
+        assert sched.counters["errors"] == 0
+        assert sched.health == "ok"
+        await sched.close()
+
+    _run(main())
+
+
+def test_poison_request_quarantined_cobatch_survives(params):
+    """THE acceptance test: a rid-keyed persistent fault in a 4-request
+    batch.  Supervision retries, bisects, and quarantines — the poison
+    rid gets exactly one terminal `error` event; the three co-batched
+    requests all finish bit-identical to fault-free decodes."""
+    async def main():
+        engine = _engine(params, max_batch=4)
+        sched = AsyncScheduler(engine, svcfg=SVCFG)
+        # submit FIRST so rids are known, then arm the injector before
+        # starting the worker: deterministic co-batching
+        rids = [sched.submit(_prompt(i)) for i in range(4)]
+        poison = rids[2]
+        engine.set_fault_injector(FaultInjector(
+            [Fault(kind="error", rid=poison, times=None)]))
+        await sched.start()
+        terminals = {}
+        for i, rid in enumerate(rids):
+            events = [e async for e in sched.events(rid)]
+            finals = [e for e in events if e.get("final")]
+            assert len(finals) == 1, f"rid {rid}: {events}"
+            terminals[rid] = finals[0]
+        assert terminals[poison]["type"] == "error"
+        assert "injected fault" in terminals[poison]["error"]
+        for i, rid in enumerate(rids):
+            if rid == poison:
+                continue
+            assert terminals[rid]["type"] == "done", terminals[rid]
+            assert terminals[rid]["tokens"] == \
+                _direct(params, _prompt(i)).tolist()
+        assert sched.counters["quarantined"] == 1
+        assert sched.counters["errors"] == 1
+        assert sched.counters["requeued"] > 0
+        assert sched.health == "ok"         # loop alive, breaker quiet
+        m = sched.metrics()
+        assert m["faults_injected"]["error"] >= 3
+        await sched.close()
+
+    _run(main())
+
+
+def test_oom_trips_breaker_and_rebuilds_engine(params):
+    """Two simulated OOMs (breaker_threshold=2) trip the circuit
+    breaker: the engine is rebuilt through the rebuild callable, health
+    reports degraded until the next clean batch, and the request that
+    rode through the crashes still completes on the fresh engine."""
+    async def main():
+        rebuilds = []
+
+        def make_engine(faults=()):
+            return _engine(params, faults=faults)
+
+        engine = make_engine(faults=[
+            Fault(kind="oom", batch_index=0),
+            Fault(kind="oom", batch_index=1)])
+
+        def rebuild():
+            rebuilds.append(1)
+            return make_engine()
+
+        sched = AsyncScheduler(engine, svcfg=SVCFG,
+                               rebuild_engine=rebuild)
+        await sched.start()
+        rid = sched.submit(_prompt())
+        degraded_seen = False
+        # poll health while the worker crashes / rebuilds underneath
+        for _ in range(200):
+            if sched.health == "degraded":
+                degraded_seen = True
+                break
+            await asyncio.sleep(0.01)
+        terminal = await sched.result(rid)
+        assert terminal["type"] == "done"
+        assert terminal["tokens"] == _direct(params, _prompt()).tolist()
+        assert degraded_seen
+        assert rebuilds == [1]
+        assert sched.engine is not engine       # actually swapped
+        assert sched.counters["engine_faults"] == 2
+        assert sched.counters["engine_rebuilds"] == 1
+        assert sched.breaker.trips == 1
+        assert sched.health == "ok"             # clean batch cleared it
+        await sched.close()
+
+    _run(main())
+
+
+def test_watchdog_timeout_is_engine_fatal(params):
+    """A block slower than the watchdog raises WatchdogTimeout; with no
+    rebuild callable and retries exhausted the request errors out — but
+    the loop survives for the next request."""
+    async def main():
+        engine = _engine(params, faults=[
+            Fault(kind="latency", delay_s=0.6, block=0, times=None,
+                  rid=0)])
+        svcfg = dataclasses.replace(SVCFG, watchdog_s=0.25,
+                                    max_retries=1, breaker_threshold=99)
+        sched = AsyncScheduler(engine, svcfg=svcfg)
+        await sched.start()
+        rid = sched.submit(_prompt())
+        terminal = await sched.result(rid)
+        assert terminal["type"] == "error"
+        assert "watchdog" in terminal["error"]
+        assert sched.counters["watchdog_timeouts"] >= 1
+        assert sched.counters["engine_faults"] >= 1
+        ok = sched.submit(_prompt(1))
+        terminal = await sched.result(ok)
+        assert terminal["type"] == "done"
+        await sched.close()
+
+    _run(main())
+
+
+def test_ladder_cheapens_under_pressure(params):
+    """Submissions past the rung thresholds decode with scaled-down
+    steps; the degraded counter records each cheapened admission."""
+    async def main():
+        engine = _engine(params)
+        sched = AsyncScheduler(
+            engine, max_queue_depth=4,
+            dgcfg=DegradeConfig(rungs=(LadderRung(0.5, 0.5),)),
+            svcfg=SVCFG)
+        # no worker: the queue holds still while we probe admission
+        rids = [sched.submit(_prompt(i)) for i in range(4)]
+        assert sched.counters["degraded"] == 2      # depth 2,3 ≥ 50%
+        cheapened = [engine.queue[i].dcfg.steps for i in range(4)]
+        assert cheapened == [16, 16, 8, 8]
+        assert sched.metrics()["ladder_rung"] == 1
+        # the cheapened request still decodes (geometry stays feasible)
+        await sched.start()
+        for rid in rids:
+            terminal = await sched.result(rid)
+            assert terminal["type"] == "done"
+        await sched.close()
+
+    _run(main())
+
+
+# --------------------------------------------------------------------------
+# end-to-end over sockets: faults through the HTTP front end
+# --------------------------------------------------------------------------
+
+def test_server_survives_poison_request(params):
+    """Fault smoke over real sockets: a poisoned rid errors, a healthy
+    request right behind it completes, /healthz stays ok, /metrics
+    exposes the supervision counters."""
+    from repro.serving import ServerThread, ServingClient
+
+    injector = FaultInjector([Fault(kind="error", rid=0, times=None)])
+
+    def factory():
+        return ServingEngine(params, CFG, DCFG, max_batch=4,
+                             fault_injector=injector)
+
+    router = ModelRouter(RouterConfig())
+    router.register("tiny", factory)
+    scfg = ServerConfig(port=0, supervisor=SVCFG)
+    handle = ServerThread(router, scfg).start()
+    try:
+        client = ServingClient(handle.host, handle.port, max_retries=0)
+        events = list(client.generate_stream(_prompt().tolist()))
+        assert events[-1][0] == "error"
+        assert events[-1][1]["final"] is True
+        ok = client.generate(_prompt(1).tolist(), wait=True)
+        assert ok["status"] == "ok"
+        assert ok["tokens"] == _direct(params, _prompt(1)).tolist()
+        health = client.healthz()
+        assert health["ok"] is True
+        assert health["status"] == "ok"
+        assert health["health"]["tiny"] == "ok"
+        text = client.metrics_text()
+        assert 'repro_requests_quarantined_total{model="tiny"} 1' in text
+        assert 'repro_faults_injected_total{model="tiny",kind="error"}' \
+            in text
+        assert 'repro_health_degraded{model="tiny"} 0' in text
+    finally:
+        handle.stop()

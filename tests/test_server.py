@@ -230,10 +230,15 @@ def test_backpressure_429(params):
     handle = ServerThread(router, ServerConfig(
         port=0, max_queue_depth=0)).start()
     try:
-        client = ServingClient(handle.host, handle.port)
+        # max_retries=0: this test PROBES the 429, so the client must
+        # not helpfully retry it away
+        client = ServingClient(handle.host, handle.port, max_retries=0)
         with pytest.raises(ServerError) as err:
             client.generate([3, 5, 2])
         assert err.value.status == 429
+        # backpressure is a schedule, not just a refusal
+        assert err.value.retry_after is not None
+        assert err.value.retry_after >= 1
     finally:
         handle.stop()
 
@@ -276,8 +281,10 @@ def test_scheduler_backpressure_and_cancel_events(params):
 
 
 def test_scheduler_batch_error_does_not_kill_the_loop(params):
-    """A failing batch gets terminal error events; requests behind it
-    are still served (the worker loop survives)."""
+    """A once-flaky batch is retried by supervision and COMPLETES; a
+    persistently failing singleton gets a terminal error event; requests
+    behind both are still served (the worker loop survives).  The full
+    supervision matrix lives in test_faults.py."""
     async def main():
         engine = ServingEngine(params, CFG, DCFG, max_batch=4)
         real = engine.decode_batch_blocks
@@ -292,14 +299,26 @@ def test_scheduler_batch_error_does_not_kill_the_loop(params):
         engine.decode_batch_blocks = flaky
         sched = AsyncScheduler(engine)
         await sched.start()
+        flaky_rid = sched.submit(np.full((6,), 3, np.int32))
+        terminal = await sched.result(flaky_rid)
+        assert terminal["type"] == "done"       # transient → retried
+        assert sched.counters["retries"] == 1
+
+        def always(batch):
+            calls["n"] += 1
+            raise RuntimeError("boom")
+
+        engine.decode_batch_blocks = always
         bad = sched.submit(np.full((6,), 3, np.int32))
         terminal = await sched.result(bad)
-        assert terminal["type"] == "error"
+        assert terminal["type"] == "error"      # retries exhausted
         assert "boom" in terminal["error"]
+        engine.decode_batch_blocks = real
         good = sched.submit(np.full((6,), 3, np.int32))
         terminal = await sched.result(good)
         assert terminal["type"] == "done"
         assert sched.counters["errors"] == 1
+        assert sched.counters["quarantined"] == 1
         await sched.close()
 
     asyncio.run(main())
