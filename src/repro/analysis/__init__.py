@@ -1,0 +1,27 @@
+"""Static analysis for the repo's fused-decode and serving contracts.
+
+Two grains (DESIGN.md "Static contracts"):
+
+* **AST** (``astpass``) — source-level rules over ``src/``: host syncs
+  reachable from fused roots, jit identity churn, PRNG key reuse,
+  strong params refs in caches, blocking calls in async defs, unordered
+  ``io_callback``.
+* **jaxpr** (``conformance``) — trace-level contracts for every
+  registered strategy: the carry is a driver fixed-point, fused jaxprs
+  carry no unsanctioned callbacks, no baked weights, no f64 promotion.
+
+CLI: ``python -m repro.analysis src`` (or ``tools/repro_lint.py``) —
+the gating CI job.  ``assert_conforms`` is the programmatic guard
+``tests/conftest.py`` applies to every strategy a test registers.
+"""
+from repro.analysis.astpass import AST_RULES, analyze_source
+from repro.analysis.conformance import (ConformanceError, assert_conforms,
+                                        check_strategy,
+                                        conformance_findings)
+from repro.analysis.findings import Finding, RULES
+
+__all__ = [
+    "AST_RULES", "ConformanceError", "Finding", "RULES",
+    "analyze_source", "assert_conforms", "check_strategy",
+    "conformance_findings",
+]

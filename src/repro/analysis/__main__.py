@@ -1,0 +1,12 @@
+"""``python -m repro.analysis`` — see ``repro.analysis.cli``."""
+import os
+import sys
+
+from repro.analysis.cli import main
+
+try:
+    rc = main()
+except BrokenPipeError:    # stdout piped into a closed head/grep
+    os.dup2(os.open(os.devnull, os.O_WRONLY), sys.stdout.fileno())
+    rc = 0
+sys.exit(rc)

@@ -1,0 +1,533 @@
+"""AST grain: source-level rules over ``src/`` (no imports, no tracing).
+
+The pass parses each file once, builds a *module-local* call graph
+(enough for the contracts this repo cares about — fused roots and their
+helpers always live in the same module), and runs the rule set:
+
+  ANA001  host-sync calls (``.item()``, ``device_get``, ``np.asarray``,
+          ``float()/int()/bool()`` on non-literals, ``block_until_ready``)
+          in any function *reachable from fused decode roots*.  Roots:
+          functions named ``fused_step``/``drive_block``/``drive_request``,
+          ``@jax.jit``-decorated defs, and functions passed into
+          ``lax.while_loop/scan/cond/fori_loop/switch``.
+  ANA002  jit identity churn: ``jax.jit(lambda …)``, jit calls inside
+          Python loops, and nested ``@jax.jit`` defs returned by a
+          factory — every call builds a fresh callable, so XLA's jit
+          cache misses and silently recompiles per call.  Exemption: a
+          factory whose *name* is handed to a ``….get(…)`` call is the
+          runner-cache builder idiom (``core/decoder.py``) — the cache
+          guarantees the factory runs once per key.
+  ANA003  PRNG key reuse: the same key name consumed by two
+          ``jax.random.*`` sampling calls with no intervening rebind
+          (or consumed inside a loop that never rebinds it) — correlated
+          samples, the classic silent-degradation bug.
+  ANA004  ``lru_cache``/``cache`` decorators over params-like arguments
+          (``params``/``model_fn``/…): the cache owns a strong reference
+          and the weights can never be garbage collected.  The repo's
+          contract is the weak, identity-keyed ``RunnerCache``.
+  ANA005  blocking calls (``time.sleep``, sync file/socket/subprocess
+          IO) directly inside ``async def`` bodies — they stall the
+          whole event loop, not one request.  Nested sync ``def``s are
+          exempt (the scheduler runs those via ``run_in_executor``).
+  ANA006  ``io_callback(…)`` without a literal ``ordered=True``:
+          unordered callbacks may observe blocks out of commit order,
+          breaking the SSE streaming contract.
+
+Reachability is an over-approximation (all call sites, no data flow);
+anything intentional gets an inline suppression with a rationale
+(``suppressions.py``).  Each rule is a function over ``ModuleModel`` so
+adding one is: write the function, append to ``AST_RULES``, document it
+in ``findings.RULES`` and DESIGN.md, add a seeded-bug + clean test.
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+from repro.analysis.findings import Finding, make_finding
+
+_FUSED_ROOT_NAMES = {"fused_step", "drive_block", "drive_request"}
+_LAX_CONTROL_FLOW = {"while_loop", "scan", "cond", "fori_loop", "switch",
+                     "associative_scan"}
+_HOST_SYNC_METHODS = {"item", "block_until_ready", "tolist"}
+_NP_MODULES = {"np", "numpy", "onp"}
+_NP_SYNC_FNS = {"asarray", "array"}
+_RANDOM_EXEMPT = {"split", "fold_in", "PRNGKey", "key", "key_data",
+                  "wrap_key_data", "clone", "key_impl"}
+_PARAMS_LIKE = {"params", "model", "model_fn", "weights", "apply_fn",
+                "state", "fn"}
+_BLOCKING_CALLS = {       # dotted-name suffixes that block the event loop
+    "time.sleep", "os.system", "subprocess.run", "subprocess.call",
+    "subprocess.check_output", "subprocess.check_call",
+    "subprocess.Popen", "urllib.request.urlopen", "urlopen",
+    "socket.create_connection", "requests.get", "requests.post",
+    "requests.request",
+}
+
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """`a.b.c` -> "a.b.c"; None for anything not a pure name chain."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _is_jit_name(name: Optional[str]) -> bool:
+    return name in ("jit", "jax.jit")
+
+
+def _is_jit_decorator(dec: ast.AST) -> bool:
+    """@jax.jit / @jit / @functools.partial(jax.jit, …) / @jax.jit(…)."""
+    if _is_jit_name(dotted_name(dec)):
+        return True
+    if isinstance(dec, ast.Call):
+        fn = dotted_name(dec.func)
+        if _is_jit_name(fn):
+            return True
+        if fn in ("functools.partial", "partial"):
+            return any(_is_jit_name(dotted_name(a)) for a in dec.args)
+    return False
+
+
+@dataclass
+class FuncInfo:
+    qualname: str                       # "Class.method" / "outer.inner"
+    node: ast.AST                       # FunctionDef | AsyncFunctionDef
+    cls: Optional[str]                  # innermost enclosing class name
+    parent: Optional[str]               # enclosing function qualname
+    is_async: bool
+    jit_decorated: bool
+    calls: Set[str] = field(default_factory=set)   # resolved qualnames
+
+
+def own_nodes(fn_node: ast.AST) -> Iterator[ast.AST]:
+    """Walk a function's own body, NOT descending into nested def/class.
+
+    Lambdas stay in — they execute in the enclosing trace context."""
+    stack = list(ast.iter_child_nodes(fn_node))
+    while stack:
+        node = stack.pop()
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            continue
+        yield node
+        stack.extend(ast.iter_child_nodes(node))
+
+
+class ModuleModel:
+    """One parsed file: function table, local call graph, fused roots."""
+
+    def __init__(self, path: str, source: str):
+        self.path = path
+        self.source = source
+        self.tree = ast.parse(source, filename=path)
+        self.functions: Dict[str, FuncInfo] = {}
+        self._collect(self.tree, scope=(), cls=None)
+        self._resolve_calls()
+        self.roots = self._find_roots()
+        self.reachable = self._reach(self.roots)
+
+    # -- construction ------------------------------------------------------
+
+    def _collect(self, node: ast.AST, scope: Tuple[str, ...],
+                 cls: Optional[str]) -> None:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                qual = ".".join(scope + (child.name,))
+                self.functions[qual] = FuncInfo(
+                    qualname=qual, node=child, cls=cls,
+                    parent=".".join(scope) or None,
+                    is_async=isinstance(child, ast.AsyncFunctionDef),
+                    jit_decorated=any(_is_jit_decorator(d)
+                                      for d in child.decorator_list))
+                self._collect(child, scope + (child.name,), cls)
+            elif isinstance(child, ast.ClassDef):
+                self._collect(child, scope + (child.name,), child.name)
+            else:
+                self._collect(child, scope, cls)
+
+    def resolve(self, name: str, from_qual: str) -> Optional[str]:
+        """Resolve a bare name from inside ``from_qual``: own nested defs
+        first, then enclosing scopes outward, then module level."""
+        parts = from_qual.split(".")
+        for depth in range(len(parts), -1, -1):
+            cand = ".".join(parts[:depth] + [name])
+            if cand in self.functions:
+                return cand
+        return None
+
+    def _resolve_calls(self) -> None:
+        for qual, info in self.functions.items():
+            for node in own_nodes(info.node):
+                if not isinstance(node, ast.Call):
+                    continue
+                fn = node.func
+                if isinstance(fn, ast.Name):
+                    tgt = self.resolve(fn.id, qual)
+                    if tgt:
+                        info.calls.add(tgt)
+                elif (isinstance(fn, ast.Attribute)
+                      and isinstance(fn.value, ast.Name)
+                      and fn.value.id == "self" and info.cls):
+                    # class-local only: Strategy.fused_step -> self.step
+                    # must not leak across subclasses in other files
+                    tgt = self._method(info.cls, fn.attr)
+                    if tgt:
+                        info.calls.add(tgt)
+
+    def _method(self, cls: str, name: str) -> Optional[str]:
+        for qual, info in self.functions.items():
+            if info.cls == cls and qual.split(".")[-1] == name:
+                return qual
+        return None
+
+    def _find_roots(self) -> Set[str]:
+        roots = {q for q, i in self.functions.items()
+                 if i.node.name in _FUSED_ROOT_NAMES or i.jit_decorated}
+        # functions handed to lax control flow become traced loop bodies
+        for qual, info in self.functions.items():
+            for node in own_nodes(info.node):
+                if not isinstance(node, ast.Call):
+                    continue
+                fn = dotted_name(node.func)
+                if fn and fn.split(".")[-1] in _LAX_CONTROL_FLOW:
+                    for arg in node.args:
+                        if isinstance(arg, ast.Name):
+                            tgt = self.resolve(arg.id, qual)
+                            if tgt:
+                                roots.add(tgt)
+        return roots
+
+    def _reach(self, roots: Set[str]) -> Set[str]:
+        seen: Set[str] = set()
+        frontier = list(roots)
+        while frontier:
+            qual = frontier.pop()
+            if qual in seen or qual not in self.functions:
+                continue
+            seen.add(qual)
+            frontier.extend(self.functions[qual].calls)
+        return seen
+
+
+# -- ANA001: host syncs reachable from fused roots -------------------------
+
+def _host_sync_reason(node: ast.Call) -> Optional[str]:
+    fn = node.func
+    if isinstance(fn, ast.Attribute):
+        if fn.attr in _HOST_SYNC_METHODS:
+            return f".{fn.attr}() forces a device->host sync"
+        name = dotted_name(fn)
+        if name and name.split(".")[-1] == "device_get":
+            return "device_get() blocks on device results"
+        if (isinstance(fn.value, ast.Name) and fn.value.id in _NP_MODULES
+                and fn.attr in _NP_SYNC_FNS):
+            return (f"{fn.value.id}.{fn.attr}() materializes the array "
+                    "on host")
+    elif isinstance(fn, ast.Name):
+        if fn.id == "device_get":
+            return "device_get() blocks on device results"
+        if fn.id in ("float", "int", "bool") and node.args and not all(
+                _statically_concrete(a) for a in node.args):
+            return (f"{fn.id}() on a traced value concretizes it "
+                    "(host sync / TracerBoolConversionError)")
+    return None
+
+
+def _statically_concrete(arg: ast.AST) -> bool:
+    """True when float()/int()/bool() of ``arg`` cannot sync: literals,
+    and shape/len() arithmetic (static under trace)."""
+    if isinstance(arg, ast.Constant):
+        return True
+    for n in ast.walk(arg):
+        if isinstance(n, ast.Attribute) and n.attr in ("shape", "ndim",
+                                                       "size"):
+            return True
+        if (isinstance(n, ast.Call) and isinstance(n.func, ast.Name)
+                and n.func.id == "len"):
+            return True
+    return False
+
+
+def rule_host_sync(mod: ModuleModel) -> List[Finding]:
+    out = []
+    for qual in sorted(mod.reachable):
+        info = mod.functions[qual]
+        for node in own_nodes(info.node):
+            if isinstance(node, ast.Call):
+                reason = _host_sync_reason(node)
+                if reason:
+                    out.append(make_finding(
+                        "ANA001", mod.path, node.lineno,
+                        f"{reason} — reachable from fused decode root "
+                        f"(via {qual})"))
+    return out
+
+
+# -- ANA002: jit identity churn --------------------------------------------
+
+def _loop_jit_calls(body_owner: ast.AST) -> Iterator[ast.AST]:
+    """jit expressions / @jit defs syntactically inside for/while loops."""
+    for node in ast.walk(body_owner):
+        if not isinstance(node, (ast.For, ast.AsyncFor, ast.While)):
+            continue
+        for inner in ast.walk(node):
+            if inner is node:
+                continue
+            if (isinstance(inner, ast.Call)
+                    and _is_jit_name(dotted_name(inner.func))):
+                yield inner
+            elif (isinstance(inner, (ast.FunctionDef,
+                                     ast.AsyncFunctionDef))
+                  and any(_is_jit_decorator(d)
+                          for d in inner.decorator_list)):
+                yield inner
+
+
+def rule_jit_churn(mod: ModuleModel) -> List[Finding]:
+    out = []
+    # (a) jit of a lambda: fresh identity per call site execution
+    for node in ast.walk(mod.tree):
+        if (isinstance(node, ast.Call)
+                and _is_jit_name(dotted_name(node.func))
+                and node.args and isinstance(node.args[0], ast.Lambda)):
+            out.append(make_finding(
+                "ANA002", mod.path, node.lineno,
+                "jax.jit(lambda …): a new lambda object per evaluation "
+                "defeats the jit cache — hoist to a module-level def"))
+    # (b) jit inside a Python loop
+    for node in _loop_jit_calls(mod.tree):
+        out.append(make_finding(
+            "ANA002", mod.path, node.lineno,
+            "jit inside a Python loop re-wraps every iteration — "
+            "jit once outside the loop"))
+    # (c) nested @jit def returned by a factory (new jit per factory
+    # call), unless the factory feeds a `.get(…)` runner-cache call
+    cached_builders = set()
+    for node in ast.walk(mod.tree):
+        if (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr == "get"):
+            for arg in node.args:
+                if isinstance(arg, ast.Name):
+                    cached_builders.add(arg.id)
+    for qual, info in mod.functions.items():
+        if not info.jit_decorated or info.parent is None:
+            continue
+        parent = mod.functions.get(info.parent)
+        if parent is None or parent.node.name in cached_builders:
+            continue
+        returned = any(
+            isinstance(n, ast.Return) and isinstance(n.value, ast.Name)
+            and n.value.id == info.node.name
+            for n in own_nodes(parent.node))
+        if returned:
+            out.append(make_finding(
+                "ANA002", mod.path, info.node.lineno,
+                f"@jax.jit def {info.node.name} is rebuilt and returned "
+                f"on every {parent.node.name}() call — each carries a "
+                "fresh jit cache (silent recompiles); route through the "
+                "runner cache or jit at module level"))
+    return out
+
+
+# -- ANA003: PRNG key reuse ------------------------------------------------
+
+def _assigned_names(node: ast.AST) -> Iterator[str]:
+    targets: List[ast.AST] = []
+    if isinstance(node, ast.Assign):
+        targets = list(node.targets)
+    elif isinstance(node, (ast.AugAssign, ast.AnnAssign, ast.NamedExpr)):
+        targets = [node.target]
+    elif isinstance(node, (ast.For, ast.AsyncFor)):
+        targets = [node.target]
+    elif isinstance(node, (ast.With, ast.AsyncWith)):
+        targets = [i.optional_vars for i in node.items if i.optional_vars]
+    for t in targets:
+        for n in ast.walk(t):
+            if isinstance(n, ast.Name):
+                yield n.id
+
+
+def _key_consumption(node: ast.AST) -> Optional[str]:
+    """Name of the PRNG key consumed by a jax.random sampler call."""
+    if not (isinstance(node, ast.Call) and node.args
+            and isinstance(node.args[0], ast.Name)):
+        return None
+    fn = dotted_name(node.func)
+    if not fn:
+        return None
+    parts = fn.split(".")
+    if (len(parts) >= 2 and parts[-2] == "random"
+            and parts[-1] not in _RANDOM_EXEMPT):
+        return node.args[0].id
+    return None
+
+
+class _KeyFlow:
+    """Ordered, branch-aware scan for double key consumption."""
+
+    def __init__(self, path: str):
+        self.path = path
+        self.findings: List[Finding] = []
+        self._emitted: Set[int] = set()
+
+    def run(self, fn_node: ast.AST) -> None:
+        self._stmts(list(ast.iter_child_nodes(fn_node)), {})
+
+    def _stmts(self, stmts, live: Dict[str, int]) -> None:
+        for node in stmts:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                continue
+            if isinstance(node, ast.If):
+                a, b = dict(live), dict(live)
+                self._expr(node.test, live)
+                self._stmts(node.body, a)
+                self._stmts(node.orelse, b)
+                live.clear()
+                live.update({**a, **b})
+                continue
+            if isinstance(node, (ast.For, ast.AsyncFor, ast.While)):
+                # two passes: the second sees the first's consumptions, so
+                # a loop that samples without rebinding its key trips here
+                if isinstance(node, ast.While):
+                    self._expr(node.test, live)
+                for n in _assigned_names(node):
+                    live.pop(n, None)
+                self._stmts(node.body, live)
+                self._stmts(node.body, live)
+                self._stmts(node.orelse, live)
+                continue
+            if isinstance(node, ast.Try):
+                self._stmts(node.body, live)
+                for h in node.handlers:
+                    self._stmts(h.body, dict(live))
+                self._stmts(node.orelse, live)
+                self._stmts(node.finalbody, live)
+                continue
+            # plain statement: expressions first, then its (re)bindings
+            self._expr(node, live)
+            for n in _assigned_names(node):
+                live.pop(n, None)
+            if isinstance(node, (ast.With, ast.AsyncWith)):
+                self._stmts(node.body, live)
+
+    def _expr(self, node: ast.AST, live: Dict[str, int]) -> None:
+        for n in ast.walk(node):
+            name = _key_consumption(n)
+            if name is None:
+                continue
+            if name in live and n.lineno not in self._emitted:
+                self._emitted.add(n.lineno)
+                self.findings.append(make_finding(
+                    "ANA003", self.path, n.lineno,
+                    f"PRNG key {name!r} already consumed at line "
+                    f"{live[name]} and reused without jax.random.split — "
+                    "correlated samples"))
+            live[name] = n.lineno
+
+
+def rule_key_reuse(mod: ModuleModel) -> List[Finding]:
+    out: List[Finding] = []
+    for qual in sorted(mod.functions):
+        flow = _KeyFlow(mod.path)
+        flow.run(mod.functions[qual].node)
+        out.extend(flow.findings)
+    return out
+
+
+# -- ANA004: strong params refs in cache decorators ------------------------
+
+def rule_strong_cache(mod: ModuleModel) -> List[Finding]:
+    out = []
+    for info in mod.functions.values():
+        for dec in info.node.decorator_list:
+            name = dotted_name(dec.func if isinstance(dec, ast.Call)
+                               else dec)
+            if name not in ("functools.lru_cache", "lru_cache",
+                            "functools.cache", "cache"):
+                continue
+            args = info.node.args
+            names = [a.arg for a in
+                     args.posonlyargs + args.args + args.kwonlyargs]
+            hot = sorted(set(names) & _PARAMS_LIKE)
+            if hot:
+                out.append(make_finding(
+                    "ANA004", mod.path, info.node.lineno,
+                    f"{name} over {info.node.name}({', '.join(hot)}) "
+                    "pins model weights forever — use the weak, "
+                    "identity-keyed RunnerCache (core/decoder.py)"))
+    return out
+
+
+# -- ANA005: blocking calls in async defs ----------------------------------
+
+def rule_async_blocking(mod: ModuleModel) -> List[Finding]:
+    out = []
+    for info in mod.functions.values():
+        if not info.is_async:
+            continue
+        for node in own_nodes(info.node):
+            if not isinstance(node, ast.Call):
+                continue
+            name = dotted_name(node.func)
+            blocked = None
+            if isinstance(node.func, ast.Name) and node.func.id == "open":
+                blocked = "open()"
+            elif name and (name in _BLOCKING_CALLS or any(
+                    name.endswith("." + b) for b in _BLOCKING_CALLS)):
+                blocked = name + "()"
+            if blocked:
+                out.append(make_finding(
+                    "ANA005", mod.path, node.lineno,
+                    f"{blocked} inside `async def {info.node.name}` "
+                    "stalls the whole event loop — await an async "
+                    "equivalent or push it through run_in_executor"))
+    return out
+
+
+# -- ANA006: unordered io_callback -----------------------------------------
+
+def rule_unordered_callback(mod: ModuleModel) -> List[Finding]:
+    out = []
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = dotted_name(node.func)
+        if not name or name.split(".")[-1] != "io_callback":
+            continue
+        ordered = any(
+            kw.arg == "ordered" and isinstance(kw.value, ast.Constant)
+            and kw.value.value is True for kw in node.keywords)
+        if not ordered:
+            out.append(make_finding(
+                "ANA006", mod.path, node.lineno,
+                "io_callback without ordered=True may observe blocks out "
+                "of commit order — the streaming contract requires the "
+                "ordered variant"))
+    return out
+
+
+AST_RULES = (rule_host_sync, rule_jit_churn, rule_key_reuse,
+             rule_strong_cache, rule_async_blocking,
+             rule_unordered_callback)
+
+
+def analyze_source(path: str, source: str) -> List[Finding]:
+    """Run every AST rule over one file's source (no suppressions)."""
+    try:
+        mod = ModuleModel(path, source)
+    except SyntaxError as e:
+        return [make_finding("ANA000", path, e.lineno or 0,
+                             f"file does not parse: {e.msg}")]
+    out: List[Finding] = []
+    for rule in AST_RULES:
+        out.extend(rule(mod))
+    return out

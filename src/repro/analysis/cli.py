@@ -1,0 +1,126 @@
+"""CLI for the static-analysis pass.
+
+    python -m repro.analysis src            # the CI gate
+    python tools/repro_lint.py src          # same, from a checkout
+
+Exit status 0 = zero unbaselined, unsuppressed findings (warnings
+included — severity describes blast radius, the gate is absolute).
+Honored suppressions are printed WITH their rationales so intent
+survives into CI logs; ``--format github`` emits workflow annotations
+that land on the PR diff.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from typing import Dict, List, Tuple
+
+from repro.analysis import astpass, suppressions
+from repro.analysis.findings import (Finding, RULES, format_text, render)
+
+DEFAULT_BASELINE = os.path.join("tools", "repro_lint_baseline.txt")
+_SKIP_DIRS = {"__pycache__", ".git", ".ruff_cache", ".pytest_cache"}
+
+
+def collect_files(paths: List[str]) -> List[str]:
+    out = []
+    for p in paths:
+        if os.path.isfile(p):
+            out.append(p)
+            continue
+        for root, dirs, files in os.walk(p):
+            dirs[:] = sorted(d for d in dirs if d not in _SKIP_DIRS)
+            out.extend(os.path.join(root, f) for f in sorted(files)
+                       if f.endswith(".py"))
+    return out
+
+
+def run_ast_grain(files: List[str]) -> Tuple[
+        List[Finding], Dict[str, Dict[int, suppressions.Suppression]]]:
+    findings: List[Finding] = []
+    sups: Dict[str, Dict[int, suppressions.Suppression]] = {}
+    for path in files:
+        try:
+            with open(path, encoding="utf-8") as fh:
+                source = fh.read()
+        except OSError as e:
+            print(f"repro-lint: cannot read {path}: {e}", file=sys.stderr)
+            continue
+        file_sups, sup_problems = suppressions.scan_suppressions(path,
+                                                                 source)
+        sups[path] = file_sups
+        findings.extend(sup_problems)
+        findings.extend(astpass.analyze_source(path, source))
+    return findings, sups
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro_lint",
+        description="AST + jaxpr static analysis for the fused-decode "
+                    "and serving contracts (see DESIGN.md).")
+    ap.add_argument("paths", nargs="*", default=["src"],
+                    help="files/directories to scan (default: src)")
+    ap.add_argument("--format", choices=("text", "github"),
+                    default="text", dest="fmt")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help=f"baseline file (default: {DEFAULT_BASELINE})")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="accept the current findings as the baseline")
+    ap.add_argument("--skip-jaxpr", action="store_true",
+                    help="AST grain only (skip strategy tracing)")
+    ap.add_argument("--strategies", default=None,
+                    help="comma list for the jaxpr grain (default: every "
+                         "registered strategy)")
+    ap.add_argument("--const-bytes", type=int,
+                    default=None,
+                    help="ANA103 baked-constant threshold in bytes")
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rule, (severity, summary) in sorted(RULES.items()):
+            print(f"{rule}  {severity:7s}  {summary}")
+        return 0
+
+    files = collect_files(args.paths or ["src"])
+    findings, sups = run_ast_grain(files)
+
+    if not args.skip_jaxpr:
+        from repro.analysis import conformance
+        names = (args.strategies.split(",") if args.strategies else None)
+        kw = {}
+        if args.const_bytes is not None:
+            kw["const_bytes"] = args.const_bytes
+        findings.extend(conformance.conformance_findings(names, **kw))
+
+    active, suppressed = suppressions.apply_suppressions(findings, sups)
+    baseline = suppressions.load_baseline(args.baseline)
+    active, baselined = suppressions.apply_baseline(active, baseline)
+
+    if args.write_baseline:
+        n = suppressions.write_baseline(args.baseline, active)
+        print(f"repro-lint: wrote {n} finding(s) to {args.baseline}")
+        return 0
+
+    for f in sorted(suppressed):
+        print(f"suppressed: {format_text(f)}  [rationale: {f.suppressed}]")
+    if baselined:
+        print(f"repro-lint: {len(baselined)} baselined finding(s) "
+              f"skipped ({args.baseline})")
+    for line in render(active, args.fmt):
+        print(line)
+    checked = f"{len(files)} file(s)" + (
+        "" if args.skip_jaxpr else " + strategy conformance")
+    if active:
+        print(f"repro-lint: {len(active)} finding(s) in {checked}",
+              file=sys.stderr)
+        return 1
+    print(f"repro-lint: clean ({checked}, "
+          f"{len(suppressed)} suppressed)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,85 @@
+"""Finding model and output formats for the static-analysis pass.
+
+A ``Finding`` is one rule violation at one location.  Findings are plain
+frozen dataclasses so rules can build them cheaply, tests can compare
+them, and the CLI can sort/dedupe them.  Two output formats:
+
+* ``text``   — ``path:line: RULE severity: message`` (editors hotlink it)
+* ``github`` — GitHub Actions workflow annotations (``::error file=…``)
+  so the gating CI job paints violations onto the PR diff.
+
+The *baseline key* deliberately omits the line number: a committed
+baseline must survive unrelated edits shifting code up and down, so a
+finding is identified by what and where-ish (file, rule, message), not
+by its exact line.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Iterable, List, Optional
+
+SEVERITIES = ("error", "warning")
+
+# Rule catalog: id -> (severity, one-line summary).  DESIGN.md "Static
+# contracts" documents each in full; ``--list-rules`` prints this table.
+RULES = {
+    "ANA000": ("error", "suppression comment without a rationale"),
+    "ANA001": ("error", "host sync reachable from fused decode code"),
+    "ANA002": ("error", "jit identity churn (recompile per call)"),
+    "ANA003": ("error", "PRNG key consumed twice without split"),
+    "ANA004": ("error", "cache decorator strongly references params"),
+    "ANA005": ("error", "blocking call inside async def"),
+    "ANA006": ("warning", "io_callback without ordered=True"),
+    "ANA101": ("error", "strategy carry is not a driver fixed-point"),
+    "ANA102": ("error", "unsanctioned callback in fused jaxpr"),
+    "ANA103": ("warning", "large constant baked into fused jaxpr"),
+    "ANA104": ("error", "float64 promotion under enable_x64"),
+}
+
+
+@dataclass(frozen=True, order=True)
+class Finding:
+    """One rule violation.  ``path`` is as given to the analyzer (repo-
+    relative in CI); jaxpr-grain findings use the pseudo-path
+    ``strategy:<name>`` and line 0."""
+
+    path: str
+    line: int
+    rule: str
+    message: str
+    severity: str = "error"
+    suppressed: Optional[str] = None   # rationale text when suppressed
+
+    @property
+    def baseline_key(self) -> str:
+        return f"{self.path}::{self.rule}::{self.message}"
+
+    def suppress(self, rationale: str) -> "Finding":
+        return replace(self, suppressed=rationale)
+
+
+def make_finding(rule: str, path: str, line: int, message: str) -> Finding:
+    severity = RULES.get(rule, ("error",))[0]
+    return Finding(path=path, line=line, rule=rule, message=message,
+                   severity=severity)
+
+
+def format_text(f: Finding) -> str:
+    return f"{f.path}:{f.line}: {f.rule} {f.severity}: {f.message}"
+
+
+def format_github(f: Finding) -> str:
+    """One GitHub Actions annotation command per finding."""
+    level = "error" if f.severity == "error" else "warning"
+    msg = (f.message.replace("%", "%25").replace("\r", "%0D")
+           .replace("\n", "%0A"))
+    if f.line > 0:
+        loc = f"file={f.path},line={f.line},title={f.rule}"
+    else:
+        loc = f"title={f.rule} {f.path}"
+    return f"::{level} {loc}::{msg}"
+
+
+def render(findings: Iterable[Finding], fmt: str) -> List[str]:
+    fn = format_github if fmt == "github" else format_text
+    return [fn(f) for f in sorted(findings)]

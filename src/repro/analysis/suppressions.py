@@ -1,0 +1,140 @@
+"""Inline suppressions and the committed baseline file.
+
+Two escape hatches, with different intents:
+
+* **Inline suppression** — a comment on (or immediately above) the
+  finding's line::
+
+      x = thing.item()  # repro-lint: ignore[ANA001] -- host-side stats path
+
+    The rationale after ``--`` is MANDATORY (a bare ``ignore`` is itself
+    a finding, ANA000) and the CLI prints every suppression it honored,
+    rationale included, so intent stays visible in CI logs.
+    ``ignore[*]`` suppresses every rule on that line; a comma list
+    (``ignore[ANA001,ANA003]``) suppresses several.
+
+* **Baseline file** — ``tools/repro_lint_baseline.txt``, one
+  ``path::rule::message`` key per line (line numbers excluded so the
+  baseline survives unrelated edits).  The baseline exists to land the
+  analyzer on a repo with pre-existing findings without fixing them all
+  in one PR; this repo's baseline is kept EMPTY — new findings must be
+  fixed or inline-suppressed with a rationale, not baselined.
+  ``--write-baseline`` regenerates it from the current run.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+from typing import Dict, Iterable, List, Set, Tuple
+
+from repro.analysis.findings import Finding, make_finding
+
+_SUPPRESS_RE = re.compile(
+    r"#\s*repro-lint:\s*ignore\[([A-Za-z0-9*,\s]+)\]"
+    r"(?:\s*--\s*(?P<why>.+?))?\s*$")
+
+
+@dataclass(frozen=True)
+class Suppression:
+    line: int
+    rules: Tuple[str, ...]       # ("*",) = every rule
+    rationale: str               # "" = missing (ANA000)
+
+    def covers(self, rule: str) -> bool:
+        return "*" in self.rules or rule in self.rules
+
+
+def scan_suppressions(path: str, source: str
+                      ) -> Tuple[Dict[int, Suppression], List[Finding]]:
+    """Parse inline suppression comments out of one file's source.
+
+    Returns ``{line: Suppression}`` plus ANA000 findings for any
+    suppression missing its rationale (those suppressions still apply —
+    the missing-rationale finding itself is what fails the run, which
+    reads better than the original finding resurfacing)."""
+    out: Dict[int, Suppression] = {}
+    problems: List[Finding] = []
+    lines = source.splitlines()
+    for lineno, text in enumerate(lines, start=1):
+        m = _SUPPRESS_RE.search(text)
+        if not m:
+            continue
+        rules = tuple(r.strip() for r in m.group(1).split(",") if r.strip())
+        why = (m.group("why") or "").strip()
+        sup = Suppression(lineno, rules, why)
+        out[lineno] = sup
+        if text.lstrip().startswith("#"):
+            # standalone comment (possibly a multi-line block): it
+            # annotates the next code line, so anchor it there too
+            j = lineno            # 0-based index of the line after it
+            while j < len(lines) and (not lines[j].strip()
+                                      or lines[j].lstrip().startswith("#")):
+                j += 1
+            if j < len(lines):
+                out.setdefault(j + 1, sup)
+        if not why:
+            problems.append(make_finding(
+                "ANA000", path, lineno,
+                f"suppression ignore[{','.join(rules)}] has no rationale "
+                f"(append `-- <why this is intentional>`)"))
+    return out, problems
+
+
+def apply_suppressions(findings: Iterable[Finding],
+                       by_file: Dict[str, Dict[int, Suppression]]
+                       ) -> Tuple[List[Finding], List[Finding]]:
+    """Split findings into (active, suppressed).
+
+    A suppression covers its own line and the line directly below it, so
+    the comment can sit either trailing the offending statement or on
+    its own line above a statement too long to share one."""
+    active: List[Finding] = []
+    suppressed: List[Finding] = []
+    for f in findings:
+        sups = by_file.get(f.path, {})
+        hit = None
+        for line in (f.line, f.line - 1):
+            s = sups.get(line)
+            if s is not None and s.covers(f.rule):
+                hit = s
+                break
+        if hit is None:
+            active.append(f)
+        else:
+            suppressed.append(f.suppress(hit.rationale or "<no rationale>"))
+    return active, suppressed
+
+
+# -- baseline --------------------------------------------------------------
+
+BASELINE_HEADER = (
+    "# repro-lint baseline — `path::rule::message` keys the analyzer\n"
+    "# ignores.  Kept EMPTY on purpose: fix new findings or suppress\n"
+    "# inline with a rationale.  Regenerate: repro_lint --write-baseline.\n")
+
+
+def load_baseline(path: str) -> Set[str]:
+    try:
+        with open(path, encoding="utf-8") as fh:
+            lines = fh.read().splitlines()
+    except OSError:
+        return set()
+    return {ln.strip() for ln in lines
+            if ln.strip() and not ln.lstrip().startswith("#")}
+
+
+def write_baseline(path: str, findings: Iterable[Finding]) -> int:
+    keys = sorted({f.baseline_key for f in findings})
+    with open(path, "w", encoding="utf-8") as fh:
+        fh.write(BASELINE_HEADER)
+        for k in keys:
+            fh.write(k + "\n")
+    return len(keys)
+
+
+def apply_baseline(findings: Iterable[Finding], baseline: Set[str]
+                   ) -> Tuple[List[Finding], List[Finding]]:
+    active, known = [], []
+    for f in findings:
+        (known if f.baseline_key in baseline else active).append(f)
+    return active, known

@@ -45,6 +45,10 @@ def make_model_fn(params, cfg: ModelConfig, **extras) -> Callable:
     import jax.numpy as jnp
     from repro.models.model import forward
 
+    # repro-lint: ignore[ANA002] -- build-once helper: callers keep the closure
+    # for the model's lifetime and the Decoder runner cache keys on its
+    # identity, so the jit cache lives exactly as long as the params it
+    # closes over
     @jax.jit
     def model_fn(x):
         kw = {}

@@ -7,3 +7,47 @@ import pytest
 @pytest.fixture(scope="session")
 def rng():
     return jax.random.PRNGKey(0)
+
+
+class _RecordingRegistry(dict):
+    """Registry stand-in that remembers every registration made while a
+    test runs, even ones the test unregisters before finishing."""
+
+    def __init__(self, base):
+        super().__init__(base)
+        self.added = {}
+
+    def __setitem__(self, key, value):
+        self.added[key] = value
+        super().__setitem__(key, value)
+
+
+@pytest.fixture(autouse=True)
+def strategy_conformance_guard(request):
+    """Every strategy a test registers is conformance-checked for free.
+
+    The fused-decode contracts (carry fixed-point across both fused
+    drivers, no unsanctioned callbacks, no baked weights, no f64
+    promotion — ``repro.analysis.conformance``) quantify over *future*
+    strategies, so throwaway test strategies are exactly the ones that
+    need checking: a test can pass end-to-end on the host driver while
+    its strategy would break the ``lax.while_loop`` carry invariant in
+    production.  Opt out with ``@pytest.mark.no_conformance`` (for tests
+    that register deliberately broken strategies)."""
+    from repro.core import strategies as S
+
+    S._ensure_builtins()          # builtin imports must not count as new
+    original = S._REGISTRY
+    recording = _RecordingRegistry(original)
+    S._REGISTRY = recording
+    try:
+        yield
+    finally:
+        original.clear()
+        original.update(recording)
+        S._REGISTRY = original
+    if request.node.get_closest_marker("no_conformance"):
+        return
+    from repro.analysis import assert_conforms
+    for name, strat in recording.added.items():
+        assert_conforms(strat)

@@ -1,0 +1,201 @@
+"""Jaxpr-grain conformance (``repro.analysis.conformance``): seeded-bug
+strategies trip each contract, every registered strategy passes across
+both fused drivers, the conftest guard auto-checks test registrations,
+and the full analyzer run over the live repo is clean."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.experimental import io_callback
+
+from repro.analysis import (ConformanceError, assert_conforms,
+                            check_strategy, conformance_findings)
+from repro.core import (Strategy, available_strategies,
+                        register_strategy, unregister_strategy)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _commit_all(x, active, model_fn):
+    logits = model_fn(x)
+    return jnp.where(active, jnp.argmax(logits, -1).astype(x.dtype), x)
+
+
+class CountingStrategy(Strategy):
+    """Clean carry-ful strategy: conforms on every contract."""
+
+    name = "seeded-clean"
+
+    def init_carry(self, cfg, dcfg):
+        return jnp.zeros((), jnp.int32)
+
+    def step(self, rng, carry, x, active, model_fn, cfg, dcfg, n):
+        return _commit_all(x, active, model_fn), carry + 1, 1
+
+
+class GrowingCarryStrategy(CountingStrategy):
+    """Seeded ANA101: the carry doubles every step — breaks the
+    while_loop carry invariant on the first real request."""
+
+    name = "seeded-grow"
+
+    def step(self, rng, carry, x, active, model_fn, cfg, dcfg, n):
+        return _commit_all(x, active, model_fn), (carry, carry), 1
+
+
+class DtypeDriftStrategy(CountingStrategy):
+    """Seeded ANA101: same structure, drifting dtype (i32 -> f32)."""
+
+    name = "seeded-dtype"
+
+    def step(self, rng, carry, x, active, model_fn, cfg, dcfg, n):
+        new_x = _commit_all(x, active, model_fn)
+        return new_x, carry + jnp.asarray(1.0, jnp.float32), 1
+
+
+class BeginBlockLeakStrategy(CountingStrategy):
+    """Seeded ANA101: begin_block swaps the carry's structure."""
+
+    name = "seeded-beginblock"
+
+    def begin_block(self, carry, x, in_block):
+        return (carry,)
+
+
+class CallbackStrategy(CountingStrategy):
+    """Seeded ANA102: smuggles a host callback into the fused step."""
+
+    name = "seeded-callback"
+
+    def step(self, rng, carry, x, active, model_fn, cfg, dcfg, n):
+        io_callback(lambda *_: None, None, carry)
+        return _commit_all(x, active, model_fn), carry + 1, 1
+
+
+class BakedConstStrategy(CountingStrategy):
+    """Seeded ANA103: closes over a weight-sized array, which bakes
+    into the fused jaxpr as a constant."""
+
+    name = "seeded-baked"
+
+    def __init__(self):
+        self.table = jnp.ones((400, 400), jnp.float32)   # 640 KB
+
+    def step(self, rng, carry, x, active, model_fn, cfg, dcfg, n):
+        bias = (self.table.sum() * 0).astype(jnp.int32)
+        return _commit_all(x, active, model_fn) + bias, carry + 1, 1
+
+
+class F64Strategy(CountingStrategy):
+    """Seeded ANA104: a strongly-typed numpy double in the carry math —
+    invisible at x32 (canonicalized away), doubles FLOPs under x64."""
+
+    name = "seeded-f64"
+
+    def init_carry(self, cfg, dcfg):
+        return jnp.zeros((), jnp.float32)
+
+    def step(self, rng, carry, x, active, model_fn, cfg, dcfg, n):
+        return _commit_all(x, active, model_fn), carry + np.float64(0.5), 1
+
+
+def rules_of(strategy):
+    return {f.rule for f in check_strategy(strategy)}
+
+
+# --------------------------------------------------------------------------
+# seeded bugs fire
+# --------------------------------------------------------------------------
+
+def test_growing_carry_detected():
+    assert rules_of(GrowingCarryStrategy()) == {"ANA101"}
+
+
+def test_dtype_drift_detected():
+    found = check_strategy(DtypeDriftStrategy())
+    assert {f.rule for f in found} == {"ANA101"}
+    assert any("fixed-point" in f.message for f in found)
+
+
+def test_begin_block_leak_detected():
+    found = check_strategy(BeginBlockLeakStrategy())
+    assert any(f.rule == "ANA101" and "begin_block" in f.message
+               for f in found)
+
+
+def test_callback_in_fused_detected():
+    found = check_strategy(CallbackStrategy())
+    assert {f.rule for f in found} == {"ANA102"}
+    # flagged under BOTH fused drivers
+    assert any("drive_block" in f.message for f in found)
+    assert any("drive_request" in f.message for f in found)
+
+
+def test_baked_const_detected():
+    found = check_strategy(BakedConstStrategy())
+    assert {f.rule for f in found} == {"ANA103"}
+    assert any("constant" in f.message for f in found)
+    # a roomier threshold clears it — the knob works
+    assert check_strategy(BakedConstStrategy(),
+                          const_bytes=1 << 20) == []
+
+
+def test_f64_promotion_detected():
+    found = check_strategy(F64Strategy())
+    assert {f.rule for f in found} == {"ANA104"}
+
+
+def test_clean_strategy_passes():
+    assert check_strategy(CountingStrategy()) == []
+    assert_conforms(CountingStrategy())       # and the raising wrapper
+
+
+def test_assert_conforms_raises_with_rule_ids():
+    with pytest.raises(ConformanceError, match="ANA101"):
+        assert_conforms(GrowingCarryStrategy())
+
+
+# --------------------------------------------------------------------------
+# the real registry: all 10 strategies, both fused drivers
+# --------------------------------------------------------------------------
+
+def test_every_registered_strategy_conforms():
+    names = available_strategies()
+    assert len(names) >= 10
+    findings = conformance_findings(names)
+    assert findings == [], [f.message for f in findings]
+
+
+# --------------------------------------------------------------------------
+# conftest guard
+# --------------------------------------------------------------------------
+
+def test_guard_checks_strategies_registered_by_tests():
+    # the autouse guard conformance-checks this at teardown; a clean
+    # strategy must sail through even though it is unregistered again
+    register_strategy(CountingStrategy(), replace=True)
+    unregister_strategy("seeded-clean")
+
+
+@pytest.mark.no_conformance
+def test_guard_marker_opts_out_for_broken_strategies():
+    register_strategy(GrowingCarryStrategy(), replace=True)
+    unregister_strategy("seeded-grow")
+
+
+# --------------------------------------------------------------------------
+# tier-1 gate: the live repo is clean (AST + jaxpr, committed baseline)
+# --------------------------------------------------------------------------
+
+def test_live_repo_has_zero_unbaselined_findings(capsys):
+    from repro.analysis.cli import main
+    rc = main([os.path.join(REPO, "src"),
+               "--baseline",
+               os.path.join(REPO, "tools", "repro_lint_baseline.txt")])
+    out = capsys.readouterr().out
+    assert rc == 0, out
+    assert "clean" in out
+    # the one honored suppression prints its rationale
+    assert "sampler.py" in out and "rationale" in out

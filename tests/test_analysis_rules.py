@@ -1,0 +1,396 @@
+"""AST-grain rules of ``repro.analysis``: every rule fires on a seeded
+bug snippet and stays quiet on the closest clean variant, suppressions
+require rationales, and the baseline machinery round-trips."""
+import textwrap
+
+import pytest
+
+from repro.analysis import analyze_source
+from repro.analysis.findings import RULES, Finding
+from repro.analysis.suppressions import (apply_baseline,
+                                         apply_suppressions,
+                                         load_baseline,
+                                         scan_suppressions,
+                                         write_baseline)
+
+
+def run(src, rule=None):
+    fs = analyze_source("snippet.py", textwrap.dedent(src))
+    return [f for f in fs if rule is None or f.rule == rule]
+
+
+# --------------------------------------------------------------------------
+# ANA001 — host syncs reachable from fused roots
+# --------------------------------------------------------------------------
+
+def test_host_sync_fires_in_fused_step():
+    fs = run("""
+        def fused_step(rng, carry, x):
+            v = x.mean()
+            return v.item()
+    """, "ANA001")
+    assert len(fs) == 1 and ".item()" in fs[0].message
+
+
+def test_host_sync_fires_via_local_call_chain():
+    fs = run("""
+        import numpy as np
+
+        def helper(x):
+            return np.asarray(x)
+
+        def drive_block(x):
+            return helper(x)
+    """, "ANA001")
+    assert len(fs) == 1 and "np.asarray" in fs[0].message
+
+
+def test_host_sync_fires_in_jit_and_while_loop_bodies():
+    fs = run("""
+        import jax
+
+        @jax.jit
+        def run(x):
+            return float(x)
+
+        def outer(x):
+            def body(c):
+                return bool(c)
+            return jax.lax.while_loop(lambda c: True, body, x)
+    """, "ANA001")
+    assert {"float() on" in f.message or "bool() on" in f.message
+            for f in fs} == {True}
+    assert len(fs) == 2
+
+
+def test_host_sync_quiet_outside_fused_reachability():
+    # same syncs, but only reachable from plain host functions
+    assert run("""
+        import numpy as np
+
+        def host_stats(x):
+            return float(np.asarray(x).mean())
+
+        def fused_step(rng, carry, x):
+            return x
+    """, "ANA001") == []
+
+
+def test_host_sync_quiet_on_static_shape_coercion():
+    assert run("""
+        def fused_step(rng, carry, x):
+            b = int(x.shape[0])
+            return x[:b]
+    """, "ANA001") == []
+
+
+# --------------------------------------------------------------------------
+# ANA002 — jit identity churn
+# --------------------------------------------------------------------------
+
+def test_jit_lambda_fires():
+    fs = run("""
+        import jax
+
+        def make(params):
+            return jax.jit(lambda x: x + 1)
+    """, "ANA002")
+    assert len(fs) == 1 and "lambda" in fs[0].message
+
+
+def test_jit_in_loop_fires():
+    fs = run("""
+        import jax
+
+        def sweep(fns, x):
+            for fn in fns:
+                x = jax.jit(fn)(x)
+            return x
+    """, "ANA002")
+    assert len(fs) == 1 and "loop" in fs[0].message
+
+
+def test_returned_nested_jit_fires():
+    fs = run("""
+        import jax
+
+        def factory(params):
+            @jax.jit
+            def run(x):
+                return x + params
+            return run
+    """, "ANA002")
+    assert len(fs) == 1 and "factory" in fs[0].message
+
+
+def test_runner_cache_builder_idiom_is_exempt():
+    # core/decoder.py: the factory's name feeds `cache.get(…)`, which
+    # guarantees one build per key — no churn
+    assert run("""
+        import jax
+
+        def runner(self, key):
+            def build():
+                @jax.jit
+                def run(x):
+                    return x
+                return run
+            return self._cache.get(key, build)
+    """, "ANA002") == []
+
+
+def test_module_level_jit_is_clean():
+    assert run("""
+        import functools
+        import jax
+
+        @functools.partial(jax.jit, static_argnames=("flag",))
+        def kernel(x, flag=False):
+            return x
+    """, "ANA002") == []
+
+
+# --------------------------------------------------------------------------
+# ANA003 — PRNG key reuse
+# --------------------------------------------------------------------------
+
+def test_key_reuse_fires():
+    fs = run("""
+        import jax
+
+        def sample(key, shape):
+            a = jax.random.uniform(key, shape)
+            b = jax.random.normal(key, shape)
+            return a + b
+    """, "ANA003")
+    assert len(fs) == 1 and "'key'" in fs[0].message
+
+
+def test_key_reuse_in_loop_without_rebind_fires():
+    fs = run("""
+        import jax
+
+        def sample(key, n):
+            out = []
+            for _ in range(n):
+                out.append(jax.random.uniform(key, (2,)))
+            return out
+    """, "ANA003")
+    assert len(fs) == 1
+
+
+def test_key_reuse_quiet_with_split():
+    assert run("""
+        import jax
+
+        def sample(key, shape):
+            key, k1 = jax.random.split(key)
+            a = jax.random.uniform(k1, shape)
+            key, k2 = jax.random.split(key)
+            b = jax.random.normal(k2, shape)
+            return a + b
+    """, "ANA003") == []
+
+
+def test_key_reuse_quiet_across_branches():
+    # one branch runs, not both: no double consumption
+    assert run("""
+        import jax
+
+        def sample(key, flag, shape):
+            if flag:
+                return jax.random.uniform(key, shape)
+            else:
+                return jax.random.normal(key, shape)
+    """, "ANA003") == []
+
+
+# --------------------------------------------------------------------------
+# ANA004 — strong params refs in cache decorators
+# --------------------------------------------------------------------------
+
+def test_lru_cache_over_params_fires():
+    fs = run("""
+        import functools
+
+        @functools.lru_cache(maxsize=8)
+        def runner_for(params, shape):
+            return params
+    """, "ANA004")
+    assert len(fs) == 1 and "params" in fs[0].message
+
+
+def test_lru_cache_over_scalars_is_clean():
+    assert run("""
+        import functools
+
+        @functools.lru_cache()
+        def geometry(gen_length, block_size):
+            return gen_length // block_size
+    """, "ANA004") == []
+
+
+# --------------------------------------------------------------------------
+# ANA005 — blocking calls in async defs
+# --------------------------------------------------------------------------
+
+def test_blocking_sleep_in_async_fires():
+    fs = run("""
+        import time
+
+        async def handler(req):
+            time.sleep(0.1)
+            return req
+    """, "ANA005")
+    assert len(fs) == 1 and "time.sleep" in fs[0].message
+
+
+def test_blocking_open_in_async_fires():
+    fs = run("""
+        async def handler(path):
+            with open(path) as fh:
+                return fh.name
+    """, "ANA005")
+    assert len(fs) == 1 and "open()" in fs[0].message
+
+
+def test_async_clean_and_executor_exempt():
+    # awaited sleeps and nested sync defs (run_in_executor bodies) are
+    # exactly how the scheduler is written — must stay quiet
+    assert run("""
+        import asyncio
+        import time
+
+        async def handler(loop, req):
+            await asyncio.sleep(0.1)
+
+            def _work():
+                time.sleep(0.5)
+                return req
+            return await loop.run_in_executor(None, _work)
+    """, "ANA005") == []
+
+
+# --------------------------------------------------------------------------
+# ANA006 — unordered io_callback
+# --------------------------------------------------------------------------
+
+def test_unordered_io_callback_fires():
+    fs = run("""
+        from jax.experimental import io_callback
+
+        def stream(emit, blk, canvas):
+            io_callback(emit, None, blk, canvas)
+    """, "ANA006")
+    assert len(fs) == 1 and "ordered" in fs[0].message
+
+
+def test_ordered_io_callback_is_clean():
+    assert run("""
+        from jax.experimental import io_callback
+
+        def stream(emit, blk, canvas):
+            io_callback(emit, None, blk, canvas, ordered=True)
+    """, "ANA006") == []
+
+
+# --------------------------------------------------------------------------
+# ANA000 + suppression mechanics
+# --------------------------------------------------------------------------
+
+def test_suppression_without_rationale_is_a_finding():
+    sups, problems = scan_suppressions("snippet.py", textwrap.dedent("""
+        x = 1  # repro-lint: ignore[ANA001]
+    """))
+    assert len(problems) == 1 and problems[0].rule == "ANA000"
+    assert "rationale" in problems[0].message
+
+
+def test_suppression_with_rationale_silences_and_prints():
+    src = textwrap.dedent("""
+        import jax
+
+        def make(params):
+            return jax.jit(lambda x: x)  # repro-lint: ignore[ANA002] -- test double
+    """)
+    sups, problems = scan_suppressions("snippet.py", src)
+    assert problems == []
+    findings = analyze_source("snippet.py", src)
+    active, suppressed = apply_suppressions(findings, {"snippet.py": sups})
+    assert active == []
+    assert len(suppressed) == 1
+    assert suppressed[0].suppressed == "test double"
+
+
+def test_suppression_comment_block_covers_next_code_line():
+    src = textwrap.dedent("""
+        import jax
+
+        def make(params):
+            # repro-lint: ignore[ANA002] -- wraps a decorated def below
+            # (continuation line of the comment block)
+            f = jax.jit(lambda x: x)
+            return f
+    """)
+    sups, _ = scan_suppressions("snippet.py", src)
+    findings = analyze_source("snippet.py", src)
+    active, suppressed = apply_suppressions(findings, {"snippet.py": sups})
+    assert active == [] and len(suppressed) == 1
+
+
+def test_wildcard_suppression_covers_every_rule():
+    src = ("import time\nasync def h():\n    time.sleep(1)  "
+           "# repro-lint: ignore[*] -- seeded test fixture\n")
+    sups, _ = scan_suppressions("snippet.py", src)
+    active, suppressed = apply_suppressions(
+        analyze_source("snippet.py", src), {"snippet.py": sups})
+    assert active == [] and len(suppressed) == 1
+
+
+# --------------------------------------------------------------------------
+# baseline round-trip
+# --------------------------------------------------------------------------
+
+def test_baseline_roundtrip(tmp_path):
+    f1 = Finding("a.py", 3, "ANA001", "sync in fused", "error")
+    f2 = Finding("b.py", 9, "ANA002", "jit churn", "error")
+    path = str(tmp_path / "baseline.txt")
+    assert write_baseline(path, [f1, f2]) == 2
+    baseline = load_baseline(path)
+    # line drift must not invalidate the baseline
+    drifted = Finding("a.py", 30, "ANA001", "sync in fused", "error")
+    active, known = apply_baseline([drifted, f2], baseline)
+    assert active == [] and len(known) == 2
+    fresh = Finding("c.py", 1, "ANA001", "new sync", "error")
+    active, known = apply_baseline([fresh], baseline)
+    assert active == [fresh]
+
+
+def test_every_ast_rule_has_catalog_entry():
+    seen = {f.rule for f in run("""
+        import functools, time, jax
+        from jax.experimental import io_callback
+
+        def fused_step(rng, carry, x):
+            return x.item()
+
+        def churn(params):
+            return jax.jit(lambda x: x)
+
+        def reuse(key):
+            a = jax.random.uniform(key, (2,))
+            return a + jax.random.normal(key, (2,))
+
+        @functools.lru_cache()
+        def pin(params):
+            return params
+
+        async def block():
+            time.sleep(1)
+
+        def stream(emit, x):
+            io_callback(emit, None, x)
+    """)}
+    assert seen == {"ANA001", "ANA002", "ANA003", "ANA004", "ANA005",
+                    "ANA006"}
+    assert seen <= set(RULES)

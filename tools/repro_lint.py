@@ -1,0 +1,24 @@
+#!/usr/bin/env python
+"""Checkout-friendly wrapper over ``python -m repro.analysis``.
+
+Prepends ``src/`` relative to the repo root so it runs without
+PYTHONPATH, then defers entirely to ``repro.analysis.cli``:
+
+    python tools/repro_lint.py src
+    python tools/repro_lint.py --list-rules
+"""
+import os
+import sys
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_REPO, "src"))
+
+from repro.analysis.cli import main  # noqa: E402
+
+if __name__ == "__main__":
+    try:
+        rc = main()
+    except BrokenPipeError:    # stdout piped into a closed head/grep
+        os.dup2(os.open(os.devnull, os.O_WRONLY), sys.stdout.fileno())
+        rc = 0
+    sys.exit(rc)
