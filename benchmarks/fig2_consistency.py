@@ -21,7 +21,11 @@ TASK = "sort"
 
 def run(n_examples: int = 16, k: int = 2, gamma: float = 0.6):
     params, cfg, ds, tok = trained_model(TASK)
-    model_fn = jax.jit(lambda x: forward(params, x, cfg)[0])
+
+    @jax.jit
+    def model_fn(x):
+        return forward(params, x, cfg)[0]
+
     batch = ds.eval_batch(n_examples)
     prompts = jnp.asarray(ds.prompts_only(batch))
     gen = ds.seq_len - prompts.shape[1]

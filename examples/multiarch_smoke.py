@@ -15,16 +15,20 @@ from repro.models.model import init_model
 def main():
     rng = jax.random.PRNGKey(0)
     for arch in ASSIGNED_ARCHS:
+        rng, init_key, enc_key, patch_key, prompt_key = \
+            jax.random.split(rng, 5)
         cfg = get_config(arch).reduced()
-        params = init_model(rng, cfg)
+        params = init_model(init_key, cfg)
         kw = {}
         if cfg.is_encdec:
             kw["enc_embeds"] = jax.random.normal(
-                rng, (2, min(cfg.encdec.encoder_seq, 32) or 32, cfg.d_model))
+                enc_key,
+                (2, min(cfg.encdec.encoder_seq, 32) or 32, cfg.d_model))
         if cfg.encdec is not None and cfg.encdec.frontend == "vision_stub":
             kw["patch_embeds"] = jax.random.normal(
-                rng, (2, cfg.encdec.num_patch_tokens, cfg.d_model))
-        prompt = jax.random.randint(rng, (2, 4), 0, cfg.vocab_size - 1)
+                patch_key, (2, cfg.encdec.num_patch_tokens, cfg.d_model))
+        prompt = jax.random.randint(prompt_key, (2, 4), 0,
+                                    cfg.vocab_size - 1)
         x = fully_masked(cfg, prompt, 12)
         model_fn = make_model_fn(params, cfg, **kw)
         logits = model_fn(x)

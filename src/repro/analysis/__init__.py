@@ -1,6 +1,6 @@
 """Static analysis for the repo's fused-decode and serving contracts.
 
-Two grains (DESIGN.md "Static contracts"):
+Three grains (DESIGN.md "Static contracts"):
 
 * **AST** (``astpass``) — source-level rules over ``src/``: host syncs
   reachable from fused roots, jit identity churn, PRNG key reuse,
@@ -9,19 +9,27 @@ Two grains (DESIGN.md "Static contracts"):
 * **jaxpr** (``conformance``) — trace-level contracts for every
   registered strategy: the carry is a driver fixed-point, fused jaxprs
   carry no unsanctioned callbacks, no baked weights, no f64 promotion.
+* **concurrency** (``concpass``) — asyncio/thread contracts over the
+  serving stack: loop-affinity of shared attributes, await-spanning
+  read-modify-writes, lock discipline, task lifecycle, and the
+  event-stream protocol (exactly one terminal event per request).
 
-CLI: ``python -m repro.analysis src`` (or ``tools/repro_lint.py``) —
-the gating CI job.  ``assert_conforms`` is the programmatic guard
-``tests/conftest.py`` applies to every strategy a test registers.
+CLI: ``python -m repro.analysis`` (or ``tools/repro_lint.py``) — the
+gating CI job; ``--grain``/``--only-rules`` filter.  ``assert_conforms``
+is the programmatic guard ``tests/conftest.py`` applies to every
+strategy a test registers.
 """
 from repro.analysis.astpass import AST_RULES, analyze_source
+from repro.analysis.concpass import (CONC_RULES, EVENT_PROTOCOL,
+                                     analyze_source as
+                                     analyze_concurrency)
 from repro.analysis.conformance import (ConformanceError, assert_conforms,
                                         check_strategy,
                                         conformance_findings)
 from repro.analysis.findings import Finding, RULES
 
 __all__ = [
-    "AST_RULES", "ConformanceError", "Finding", "RULES",
-    "analyze_source", "assert_conforms", "check_strategy",
-    "conformance_findings",
+    "AST_RULES", "CONC_RULES", "ConformanceError", "EVENT_PROTOCOL",
+    "Finding", "RULES", "analyze_concurrency", "analyze_source",
+    "assert_conforms", "check_strategy", "conformance_findings",
 ]

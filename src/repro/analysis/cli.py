@@ -16,10 +16,12 @@ import os
 import sys
 from typing import Dict, List, Tuple
 
-from repro.analysis import astpass, suppressions
+from repro.analysis import astpass, concpass, suppressions
 from repro.analysis.findings import (Finding, RULES, format_text, render)
 
 DEFAULT_BASELINE = os.path.join("tools", "repro_lint_baseline.txt")
+DEFAULT_PATHS = ["src", "tools", "benchmarks", "examples"]
+GRAINS = ("ast", "jaxpr", "conc")
 _SKIP_DIRS = {"__pycache__", ".git", ".ruff_cache", ".pytest_cache"}
 
 
@@ -36,8 +38,12 @@ def collect_files(paths: List[str]) -> List[str]:
     return out
 
 
-def run_ast_grain(files: List[str]) -> Tuple[
+def run_file_grains(files: List[str], grains=("ast", "conc")) -> Tuple[
         List[Finding], Dict[str, Dict[int, suppressions.Suppression]]]:
+    """Run the per-file grains (AST and/or concurrency) over ``files``.
+
+    Suppression comments are scanned regardless of grain selection so a
+    filtered run still honors (and validates) every rationale."""
     findings: List[Finding] = []
     sups: Dict[str, Dict[int, suppressions.Suppression]] = {}
     for path in files:
@@ -51,25 +57,43 @@ def run_ast_grain(files: List[str]) -> Tuple[
                                                                  source)
         sups[path] = file_sups
         findings.extend(sup_problems)
-        findings.extend(astpass.analyze_source(path, source))
+        if "ast" in grains:
+            findings.extend(astpass.analyze_source(path, source))
+        if "conc" in grains:
+            findings.extend(concpass.analyze_source(path, source))
     return findings, sups
+
+
+def run_ast_grain(files: List[str]):
+    """Back-compat alias: AST grain only (pre-concurrency callers)."""
+    return run_file_grains(files, grains=("ast",))
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="repro_lint",
-        description="AST + jaxpr static analysis for the fused-decode "
-                    "and serving contracts (see DESIGN.md).")
-    ap.add_argument("paths", nargs="*", default=["src"],
-                    help="files/directories to scan (default: src)")
+        description="AST + jaxpr + concurrency static analysis for the "
+                    "fused-decode and serving contracts (see DESIGN.md).")
+    ap.add_argument("paths", nargs="*", default=DEFAULT_PATHS,
+                    help="files/directories to scan "
+                         f"(default: {' '.join(DEFAULT_PATHS)})")
     ap.add_argument("--format", choices=("text", "github"),
                     default="text", dest="fmt")
     ap.add_argument("--baseline", default=DEFAULT_BASELINE,
                     help=f"baseline file (default: {DEFAULT_BASELINE})")
     ap.add_argument("--write-baseline", action="store_true",
                     help="accept the current findings as the baseline")
+    ap.add_argument("--grain", action="append", choices=GRAINS,
+                    default=None, metavar="{ast,jaxpr,conc}",
+                    help="run only the named grain(s); repeatable "
+                         "(default: all three)")
+    ap.add_argument("--only-rules", default=None, metavar="ANA…,ANA…",
+                    help="keep only findings for these rule ids "
+                         "(comma list; suppression hygiene ANA000 is "
+                         "always kept)")
     ap.add_argument("--skip-jaxpr", action="store_true",
-                    help="AST grain only (skip strategy tracing)")
+                    help="legacy: drop the jaxpr grain (same as "
+                         "--grain ast --grain conc)")
     ap.add_argument("--strategies", default=None,
                     help="comma list for the jaxpr grain (default: every "
                          "registered strategy)")
@@ -84,16 +108,25 @@ def main(argv=None) -> int:
             print(f"{rule}  {severity:7s}  {summary}")
         return 0
 
-    files = collect_files(args.paths or ["src"])
-    findings, sups = run_ast_grain(files)
+    grains = set(args.grain) if args.grain else set(GRAINS)
+    if args.skip_jaxpr:
+        grains.discard("jaxpr")
 
-    if not args.skip_jaxpr:
+    files = collect_files(args.paths or DEFAULT_PATHS)
+    findings, sups = run_file_grains(files, grains)
+
+    if "jaxpr" in grains:
         from repro.analysis import conformance
         names = (args.strategies.split(",") if args.strategies else None)
         kw = {}
         if args.const_bytes is not None:
             kw["const_bytes"] = args.const_bytes
         findings.extend(conformance.conformance_findings(names, **kw))
+
+    if args.only_rules:
+        keep = {r.strip() for r in args.only_rules.split(",") if r.strip()}
+        keep.add("ANA000")
+        findings = [f for f in findings if f.rule in keep]
 
     active, suppressed = suppressions.apply_suppressions(findings, sups)
     baseline = suppressions.load_baseline(args.baseline)
@@ -112,7 +145,7 @@ def main(argv=None) -> int:
     for line in render(active, args.fmt):
         print(line)
     checked = f"{len(files)} file(s)" + (
-        "" if args.skip_jaxpr else " + strategy conformance")
+        " + strategy conformance" if "jaxpr" in grains else "")
     if active:
         print(f"repro-lint: {len(active)} finding(s) in {checked}",
               file=sys.stderr)

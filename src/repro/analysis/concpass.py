@@ -1,0 +1,724 @@
+"""Concurrency grain: asyncio/thread contracts over the serving stack.
+
+The serving layer (scheduler, router, server, supervisor) is mixed
+asyncio/thread code: one event loop owns queue mutation and event
+streams, block-grain decode resumptions run on executor threads, and a
+handful of entry points (`shutdown_nowait`, `ServerThread.stop`) are
+deliberately callable from foreign threads.  Every shipped race so far
+(the PR 6 close()-during-inflight-decode race, the `_inflight` rebind)
+lived exactly on those boundaries, so this grain turns the threading
+contract in ``scheduler.py``'s docstring into machine checks.
+
+The pass reuses the AST grain's ``ModuleModel`` (module-local call
+graph) and layers a **loop-affinity inference** on top: it classifies
+each function of a class as *loop-context* or *foreign-thread context*
+— foreign means the body of a closure handed to ``run_in_executor`` /
+``asyncio.to_thread``, a ``threading.Thread`` target, a method marked by
+the thread-entry idiom (it calls ``call_soon_threadsafe`` /
+``run_coroutine_threadsafe`` to re-dispatch onto the loop), or anything
+module-locally reachable from those — and then checks how the two sides
+share ``self`` attributes:
+
+  ANA201  cross-thread state: (a) loop-context code REBINDS a mutable
+          container attribute (``self._inflight = set()``) that
+          foreign-thread code also touches — a foreign reader can hold
+          the stale object across the swap; mutate in place
+          (``.clear()``/``.update()``) or guard with a lock;
+          (b) the symmetric foreign-side rebind; (c) a foreign-thread
+          ``self.x += 1`` on state the loop side also uses (augmented
+          assignment is a non-atomic read-modify-write across threads).
+          Reads in a thread-entry method count as foreign even after
+          its re-dispatch guard: the guard only applies once
+          ``self._loop`` is set, and the contract is cheaper to keep
+          than the flow analysis to prove it.
+  ANA202  await-spanning read-modify-write: in one ``async def``, a
+          shared attribute is read, the coroutine suspends (``await`` /
+          ``async for`` / ``async with``), and the attribute is written
+          afterwards — the written value can be stale because any other
+          task ran in the gap (the exact shape of the PR 6 race).
+          Only attributes with a second writer elsewhere in the class
+          count as shared; accesses inside a held ``with self.<lock>``
+          block are exempt (the lock serializes the RMW — ANA203 owns
+          lock correctness).  Augmented assignment and keyed stores
+          (``self.d[k] = v``, ``self.c[k] += 1``) are exempt: they
+          re-read the container at the write site with no suspension
+          in between — only a full rebind can publish a stale value.
+  ANA203  lock discipline: (a) an ``asyncio.Lock`` attribute touched
+          from a foreign-thread context (asyncio locks are loop-affine
+          — a foreign thread needs ``threading.Lock``); (b) a
+          ``threading.Lock`` entered with ``async with`` (wrong
+          protocol) or held across an ``await`` (stalls every thread
+          waiting on it for the duration of the suspension, and invites
+          lock-order deadlocks); (c) an attribute written both under a
+          held lock and outside any lock in the same class — either the
+          lock is needed everywhere or nowhere.
+  ANA204  task lifecycle: (a) ``create_task``/``ensure_future`` result
+          dropped on the floor — the task is garbage-collectable
+          mid-flight and its exception is swallowed; keep the handle
+          and await/collect it; (b) ``asyncio.wait_for`` directly on a
+          ``run_in_executor`` future without ``asyncio.shield`` — an
+          executor future cannot be cancelled mid-run, so an
+          un-shielded timeout detaches the worker AND loses its
+          result/exception; shield it and decide explicitly (the
+          scheduler's watchdog idiom).
+  ANA205  event-protocol state machine: every stream emission site is
+          checked against the declarative lifecycle spec
+          ``EVENT_PROTOCOL`` (queued -> block* -> reset? -> exactly one
+          terminal of done/cancelled/expired/error/shutdown).  An
+          emission is a call to an ``emit``-suffixed function carrying a
+          (statically resolvable) dict payload with a ``"type"`` key.
+          Checks: the type is in the spec; terminal types carry a
+          literal ``"final": True``; non-terminal types don't; a
+          payload the checker cannot resolve is itself a finding (a
+          hole in the proof, not a free pass); and —
+          the exactly-one-terminal proof — every raw ``<stream>.emit()``
+          call lives inside the single *guarded emitter* (a method that
+          checks ``.finished`` and returns before emitting), so no
+          emission path can double-terminate a stream.
+
+Known approximations, on purpose: the model is module-local (an engine
+method driven from another module's executor thread is that module's
+contract, see ``ServingEngine.summary``); mutating method calls
+(``.pop``/``.append``/``.clear``) count as reads, not writes — they are
+the sanctioned in-place idiom; and statement order stands in for
+control flow.  Intentional violations take an inline
+``# repro-lint: ignore[RULE] -- rationale`` like every other grain.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+from repro.analysis.astpass import ModuleModel, dotted_name, own_nodes
+from repro.analysis.findings import Finding, make_finding
+
+#: Declarative stream lifecycle (ANA205).  A request's event stream must
+#: match  queued -> block* -> reset? -> <one terminal>.  ``tools/
+#: fault_smoke.py`` asserts this dynamically; the checker proves the
+#: final-flag discipline and the single-guarded-emitter choke point
+#: statically over every emission site.
+EVENT_PROTOCOL = {
+    "nonterminal": frozenset({"block", "reset"}),
+    "terminal": frozenset({"done", "cancelled", "expired", "error",
+                           "shutdown"}),
+}
+
+_MUTABLE_CTORS = {"set", "dict", "list", "deque", "OrderedDict",
+                  "defaultdict", "Counter"}
+_THREADSAFE_MARKERS = {"call_soon_threadsafe", "run_coroutine_threadsafe"}
+_THREADING_LOCKS = {"Lock", "RLock", "Condition", "Semaphore",
+                    "BoundedSemaphore"}
+
+
+def _self_attr(node: ast.AST) -> Optional[str]:
+    """``self.X`` -> "X"; None otherwise."""
+    if (isinstance(node, ast.Attribute)
+            and isinstance(node.value, ast.Name)
+            and node.value.id == "self"):
+        return node.attr
+    return None
+
+
+def _flat_targets(target: ast.AST) -> Iterator[ast.AST]:
+    if isinstance(target, (ast.Tuple, ast.List)):
+        for elt in target.elts:
+            yield from _flat_targets(elt)
+    else:
+        yield target
+
+
+def _end_line(node: ast.AST) -> int:
+    return getattr(node, "end_lineno", None) or node.lineno
+
+
+class ConcModel:
+    """Loop-affinity model over one ``ModuleModel``: which functions run
+    on foreign threads, which attributes are locks / mutable containers,
+    and every ``self.X`` read/write site per function."""
+
+    def __init__(self, mod: ModuleModel):
+        self.mod = mod
+        # (cls, attr) -> "asyncio" | "threading"
+        self.lock_attrs: Dict[Tuple[str, str], str] = {}
+        # (cls, attr) initialised to a mutable container in __init__
+        self.container_attrs: Set[Tuple[str, str]] = set()
+        self._lock_imports = self._import_origins()
+        self._collect_inits()
+        self.foreign = self.mod._reach(self._executor_contexts()
+                                       | self._thread_entries())
+
+    # -- construction ------------------------------------------------------
+
+    def _import_origins(self) -> Dict[str, str]:
+        """Bare lock-class names -> owning module ("asyncio"/"threading")."""
+        out: Dict[str, str] = {}
+        for node in ast.walk(self.mod.tree):
+            if isinstance(node, ast.ImportFrom) and node.module in (
+                    "asyncio", "threading"):
+                for alias in node.names:
+                    if alias.name in _THREADING_LOCKS | {"Event"}:
+                        out[alias.asname or alias.name] = node.module
+        return out
+
+    def _lock_kind(self, value: ast.AST) -> Optional[str]:
+        if not isinstance(value, ast.Call):
+            return None
+        name = dotted_name(value.func)
+        if not name:
+            return None
+        parts = name.split(".")
+        if parts[-1] not in _THREADING_LOCKS:
+            return None
+        if len(parts) > 1 and parts[0] in ("asyncio", "threading"):
+            return parts[0]
+        return self._lock_imports.get(parts[0])
+
+    def _is_container_init(self, value: ast.AST) -> bool:
+        if isinstance(value, (ast.Dict, ast.List, ast.Set, ast.ListComp,
+                              ast.SetComp, ast.DictComp)):
+            return True
+        if isinstance(value, ast.Call):
+            name = dotted_name(value.func)
+            return bool(name) and name.split(".")[-1] in _MUTABLE_CTORS
+        return False
+
+    def _collect_inits(self) -> None:
+        for qual, info in self.mod.functions.items():
+            if info.cls is None or qual.split(".")[-1] != "__init__":
+                continue
+            for node in own_nodes(info.node):
+                if isinstance(node, ast.Assign):
+                    targets = [t for tgt in node.targets
+                               for t in _flat_targets(tgt)]
+                    value = node.value
+                elif isinstance(node, ast.AnnAssign) and node.value:
+                    targets = [node.target]
+                    value = node.value
+                else:
+                    continue
+                for tgt in targets:
+                    attr = _self_attr(tgt)
+                    if attr is None:
+                        continue
+                    kind = self._lock_kind(value)
+                    if kind:
+                        self.lock_attrs[(info.cls, attr)] = kind
+                    elif self._is_container_init(value):
+                        self.container_attrs.add((info.cls, attr))
+
+    def _resolve_callable(self, arg: ast.AST, qual: str,
+                          cls: Optional[str]) -> Optional[str]:
+        if isinstance(arg, ast.Name):
+            return self.mod.resolve(arg.id, qual)
+        attr = _self_attr(arg)
+        if attr and cls:
+            return self.mod._method(cls, attr)
+        return None
+
+    def _executor_contexts(self) -> Set[str]:
+        """Functions whose bodies run on a non-loop thread: executor /
+        to_thread callables and ``threading.Thread`` targets."""
+        out: Set[str] = set()
+        for qual, info in self.mod.functions.items():
+            for node in own_nodes(info.node):
+                if not isinstance(node, ast.Call):
+                    continue
+                name = dotted_name(node.func) or ""
+                last = name.split(".")[-1]
+                cand: Optional[ast.AST] = None
+                if last == "run_in_executor" and len(node.args) >= 2:
+                    cand = node.args[1]
+                elif last == "to_thread" and node.args:
+                    cand = node.args[0]
+                elif last == "Thread":
+                    for kw in node.keywords:
+                        if kw.arg == "target":
+                            cand = kw.value
+                if cand is not None:
+                    tgt = self._resolve_callable(cand, qual, info.cls)
+                    if tgt:
+                        out.add(tgt)
+        return out
+
+    def _thread_entries(self) -> Set[str]:
+        """Methods written to be CALLED from foreign threads — marked by
+        the re-dispatch idiom (``call_soon_threadsafe`` /
+        ``run_coroutine_threadsafe`` in their own body)."""
+        out: Set[str] = set()
+        for qual, info in self.mod.functions.items():
+            for node in own_nodes(info.node):
+                if (isinstance(node, ast.Call)
+                        and isinstance(node.func, ast.Attribute)
+                        and node.func.attr in _THREADSAFE_MARKERS):
+                    out.add(qual)
+                    break
+        return out
+
+    # -- per-function access sites -----------------------------------------
+
+    def writes(self, qual: str) -> List[Tuple[str, int, str]]:
+        """``self.X`` write sites: (attr, line, kind) with kind one of
+        ``rebind`` (plain assign to the attribute itself), ``aug``
+        (augmented assign), ``store`` (subscript store into it)."""
+        info = self.mod.functions[qual]
+        out: List[Tuple[str, int, str]] = []
+        for node in own_nodes(info.node):
+            if isinstance(node, ast.Assign):
+                targets = [t for tgt in node.targets
+                           for t in _flat_targets(tgt)]
+            elif isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+                targets = list(_flat_targets(node.target))
+            else:
+                continue
+            kind = "aug" if isinstance(node, ast.AugAssign) else "rebind"
+            for tgt in targets:
+                attr = _self_attr(tgt)
+                if attr is not None:
+                    out.append((attr, tgt.lineno, kind))
+                elif isinstance(tgt, ast.Subscript):
+                    attr = _self_attr(tgt.value)
+                    if attr is not None:
+                        out.append((attr, tgt.lineno, "store"))
+        return out
+
+    def reads(self, qual: str) -> List[Tuple[str, int]]:
+        info = self.mod.functions[qual]
+        out = []
+        for node in own_nodes(info.node):
+            attr = _self_attr(node)
+            if attr is not None and isinstance(node.ctx, ast.Load):
+                out.append((attr, node.lineno))
+        return out
+
+    def touched(self, qual: str) -> Set[str]:
+        return ({a for a, _ in self.reads(qual)}
+                | {a for a, _, _ in self.writes(qual)})
+
+    def locked_spans(self, qual: str) -> List[Tuple[int, int, str, bool]]:
+        """``with self.<lock>`` regions: (lo, hi, kind, is_async_with).
+        Attributes are recognised as locks when typed in ``__init__`` or,
+        failing that, when the name contains "lock"."""
+        info = self.mod.functions[qual]
+        out = []
+        for node in own_nodes(info.node):
+            if not isinstance(node, (ast.With, ast.AsyncWith)):
+                continue
+            for item in node.items:
+                attr = _self_attr(item.context_expr)
+                if attr is None:
+                    continue
+                kind = self.lock_attrs.get((info.cls, attr)) if info.cls \
+                    else None
+                if kind is None and "lock" not in attr.lower():
+                    continue
+                out.append((node.lineno, _end_line(node), kind or "unknown",
+                            isinstance(node, ast.AsyncWith)))
+        return out
+
+    def suspensions(self, qual: str) -> List[int]:
+        """Lines where the coroutine may yield to the loop."""
+        info = self.mod.functions[qual]
+        return sorted(node.lineno for node in own_nodes(info.node)
+                      if isinstance(node, (ast.Await, ast.AsyncFor,
+                                           ast.AsyncWith)))
+
+    def class_methods(self, cls: str) -> List[str]:
+        return [q for q, i in self.mod.functions.items() if i.cls == cls]
+
+
+# -- ANA201: cross-thread access to loop-affine state ----------------------
+
+def rule_loop_affinity(mod: ModuleModel) -> List[Finding]:
+    cm = ConcModel(mod)
+    if not cm.foreign:
+        return []
+    out: List[Finding] = []
+    classes = {i.cls for i in mod.functions.values() if i.cls}
+    for cls in sorted(classes):
+        methods = cm.class_methods(cls)
+        foreign_ms = [q for q in methods if q in cm.foreign]
+        loop_ms = [q for q in methods if q not in cm.foreign
+                   and not q.endswith(".__init__")]
+        if not foreign_ms:
+            continue
+        foreign_touched = {a for q in foreign_ms for a in cm.touched(q)}
+        loop_touched = {a for q in loop_ms for a in cm.touched(q)}
+        # (a) loop-side rebind of a shared mutable container
+        for qual in loop_ms:
+            for attr, line, kind in cm.writes(qual):
+                if (kind == "rebind" and attr in foreign_touched
+                        and (cls, attr) in cm.container_attrs):
+                    out.append(make_finding(
+                        "ANA201", mod.path, line,
+                        f"self.{attr} is rebound in {qual} while a "
+                        f"foreign-thread context "
+                        f"({', '.join(sorted(foreign_ms))}) also touches "
+                        "it — a foreign reader can hold the stale object "
+                        "across the swap; mutate in place "
+                        "(.clear()/.update()) or guard with a lock"))
+        for qual in foreign_ms:
+            if qual.endswith(".__init__"):
+                continue
+            for attr, line, kind in cm.writes(qual):
+                # (b) foreign-side rebind of a shared mutable container
+                if (kind == "rebind" and attr in loop_touched
+                        and (cls, attr) in cm.container_attrs):
+                    out.append(make_finding(
+                        "ANA201", mod.path, line,
+                        f"self.{attr} is rebound from the foreign-thread "
+                        f"context {qual} while event-loop code also "
+                        "touches it — publish through the loop "
+                        "(call_soon_threadsafe) or mutate in place"))
+                # (c) foreign-side augmented assign on shared state
+                elif kind == "aug" and attr in loop_touched:
+                    out.append(make_finding(
+                        "ANA201", mod.path, line,
+                        f"self.{attr} += ... in the foreign-thread "
+                        f"context {qual} races event-loop accesses — "
+                        "augmented assignment is a non-atomic "
+                        "read-modify-write across threads; hold a "
+                        "threading.Lock or hand off to the loop"))
+    return out
+
+
+# -- ANA202: await-spanning read-modify-write ------------------------------
+
+def rule_await_rmw(mod: ModuleModel) -> List[Finding]:
+    cm = ConcModel(mod)
+    out: List[Finding] = []
+    # writers per (cls, attr), excluding __init__ — an attribute with a
+    # single writer has no interleaving writer to go stale against
+    writers: Dict[Tuple[str, str], Set[str]] = {}
+    for qual, info in mod.functions.items():
+        if info.cls is None or qual.endswith(".__init__"):
+            continue
+        for attr, _, _ in cm.writes(qual):
+            writers.setdefault((info.cls, attr), set()).add(qual)
+    for qual, info in mod.functions.items():
+        if not info.is_async or info.cls is None:
+            continue
+        waits = cm.suspensions(qual)
+        if not waits:
+            continue
+        spans = cm.locked_spans(qual)
+
+        def guarded(line: int) -> bool:
+            return any(lo <= line <= hi for lo, hi, _, _ in spans)
+
+        reads: Dict[str, int] = {}
+        for attr, line in cm.reads(qual):
+            if not guarded(line) and (attr not in reads
+                                      or line < reads[attr]):
+                reads[attr] = line
+        for attr, line, kind in cm.writes(qual):
+            # only full rebinds can publish a stale value: augmented
+            # assignment and keyed stores (self.d[k] = v, self.c[k] += 1)
+            # re-read the container at the write site
+            if kind != "rebind" or guarded(line):
+                continue
+            if len(writers.get((info.cls, attr), ())) < 2:
+                continue
+            first_read = reads.get(attr)
+            if first_read is None or first_read >= line:
+                continue
+            if any(first_read < w < line for w in waits):
+                out.append(make_finding(
+                    "ANA202", mod.path, line,
+                    f"self.{attr} is read at line {first_read}, the "
+                    f"coroutine suspends, and self.{attr} is written "
+                    f"here ({qual}) — another task can interleave in "
+                    "the gap, making this write stale; re-read after "
+                    "the await, claim-then-act before it, or hold a "
+                    "lock across the whole read-modify-write"))
+    return out
+
+
+# -- ANA203: lock discipline -----------------------------------------------
+
+def rule_lock_discipline(mod: ModuleModel) -> List[Finding]:
+    cm = ConcModel(mod)
+    out: List[Finding] = []
+    # (a) asyncio locks touched from foreign-thread contexts
+    for qual in sorted(cm.foreign & set(mod.functions)):
+        info = mod.functions[qual]
+        if info.cls is None:
+            continue
+        for attr, line in cm.reads(qual):
+            if cm.lock_attrs.get((info.cls, attr)) == "asyncio":
+                out.append(make_finding(
+                    "ANA203", mod.path, line,
+                    f"asyncio.Lock self.{attr} touched from the "
+                    f"foreign-thread context {qual} — asyncio locks are "
+                    "loop-affine (not thread-safe); use threading.Lock "
+                    "for cross-thread state"))
+    for qual, info in mod.functions.items():
+        waits = cm.suspensions(qual)
+        for lo, hi, kind, is_async_with in cm.locked_spans(qual):
+            # (b) threading locks misused inside coroutines
+            if kind == "threading" and is_async_with:
+                out.append(make_finding(
+                    "ANA203", mod.path, lo,
+                    "`async with` on a threading.Lock — threading locks "
+                    "have no async protocol; use asyncio.Lock on the "
+                    "loop side"))
+            elif kind == "threading" and info.is_async and any(
+                    lo < w <= hi for w in waits):
+                out.append(make_finding(
+                    "ANA203", mod.path, lo,
+                    "threading.Lock held across an await — every thread "
+                    "contending on it blocks for the whole suspension; "
+                    "release before awaiting or use asyncio.Lock"))
+    # (c) attributes written both under a lock and outside any lock
+    classes = {i.cls for i in mod.functions.values() if i.cls}
+    for cls in sorted(classes):
+        locked_writes: Dict[str, int] = {}
+        bare_writes: Dict[str, List[Tuple[int, str]]] = {}
+        for qual in cm.class_methods(cls):
+            if qual.endswith(".__init__"):
+                continue
+            spans = cm.locked_spans(qual)
+            for attr, line, _ in cm.writes(qual):
+                if any(lo <= line <= hi for lo, hi, _, _ in spans):
+                    locked_writes.setdefault(attr, line)
+                else:
+                    bare_writes.setdefault(attr, []).append((line, qual))
+        for attr, guarded_line in sorted(locked_writes.items()):
+            for line, qual in bare_writes.get(attr, ()):
+                out.append(make_finding(
+                    "ANA203", mod.path, line,
+                    f"self.{attr} is written under a lock at line "
+                    f"{guarded_line} but without one here ({qual}) — "
+                    "mixed discipline; either every write holds the "
+                    "lock or none needs to"))
+    return out
+
+
+# -- ANA204: task lifecycle ------------------------------------------------
+
+def _is_executor_future(node: ast.AST,
+                        executor_locals: Set[str]) -> bool:
+    if isinstance(node, ast.Call):
+        name = dotted_name(node.func) or ""
+        return name.split(".")[-1] == "run_in_executor"
+    return isinstance(node, ast.Name) and node.id in executor_locals
+
+
+def rule_task_lifecycle(mod: ModuleModel) -> List[Finding]:
+    out: List[Finding] = []
+    # (a) fire-and-forget create_task: the returned handle is the ONLY
+    # strong reference keeping the task alive, and the only way its
+    # exception ever surfaces
+    for node in ast.walk(mod.tree):
+        if not (isinstance(node, ast.Expr)
+                and isinstance(node.value, ast.Call)):
+            continue
+        name = dotted_name(node.value.func) or ""
+        if name.split(".")[-1] in ("create_task", "ensure_future"):
+            out.append(make_finding(
+                "ANA204", mod.path, node.lineno,
+                f"{name}(…) result dropped — the task can be "
+                "garbage-collected mid-flight and its exception is "
+                "silently swallowed; keep the handle and await or "
+                "collect it"))
+    # (b) wait_for on a bare executor future: cancellation cannot stop
+    # the worker, it only detaches the future and loses its outcome
+    for info in mod.functions.values():
+        # pass 1: locals bound to executor futures (own_nodes has no
+        # source-order guarantee, so collect before checking)
+        executor_locals: Set[str] = set()
+        for node in own_nodes(info.node):
+            if isinstance(node, ast.Assign) and isinstance(
+                    node.value, ast.Call):
+                vname = dotted_name(node.value.func) or ""
+                if vname.split(".")[-1] == "run_in_executor":
+                    for tgt in _flat_targets(node.targets[0]):
+                        if isinstance(tgt, ast.Name):
+                            executor_locals.add(tgt.id)
+        for node in own_nodes(info.node):
+            if not isinstance(node, ast.Call):
+                continue
+            name = dotted_name(node.func) or ""
+            if name.split(".")[-1] != "wait_for" or not node.args:
+                continue
+            arg = node.args[0]
+            if isinstance(arg, ast.Call):
+                inner = dotted_name(arg.func) or ""
+                if inner.split(".")[-1] == "shield":
+                    continue
+            if _is_executor_future(arg, executor_locals):
+                out.append(make_finding(
+                    "ANA204", mod.path, node.lineno,
+                    "wait_for on a bare run_in_executor future — the "
+                    "timeout cancels the future but the worker thread "
+                    "keeps running with its result and exception "
+                    "dropped; wrap in asyncio.shield and handle the "
+                    "timeout explicitly (the scheduler watchdog idiom)"))
+    return out
+
+
+# -- ANA205: event-protocol state machine ----------------------------------
+
+def _dict_literal(node: ast.AST, qual: str,
+                  mod: ModuleModel) -> Optional[ast.Dict]:
+    """Resolve an emission payload to a dict literal: either directly,
+    or through a module-local helper whose body is ``return {…}``."""
+    if isinstance(node, ast.Dict):
+        return node
+    if isinstance(node, ast.Call):
+        info = mod.functions.get(qual)
+        tgt = None
+        if isinstance(node.func, ast.Name):
+            tgt = mod.resolve(node.func.id, qual)
+        elif info is not None:
+            attr = _self_attr(node.func)
+            if attr and info.cls:
+                tgt = mod._method(info.cls, attr)
+        if tgt:
+            for n in own_nodes(mod.functions[tgt].node):
+                if isinstance(n, ast.Return) and isinstance(n.value,
+                                                            ast.Dict):
+                    return n.value
+    return None
+
+
+def _dict_str(d: ast.Dict, key: str):
+    for k, v in zip(d.keys, d.values):
+        if isinstance(k, ast.Constant) and k.value == key:
+            return v
+    return None
+
+
+def _guarded_emitters(mod: ModuleModel) -> Set[str]:
+    """Functions that check ``.finished`` (and return) before calling
+    ``.emit`` — the sanctioned choke points for stream emission."""
+    out: Set[str] = set()
+    for qual, info in mod.functions.items():
+        guard_line = None
+        emit_line = None
+        for node in own_nodes(info.node):
+            if isinstance(node, ast.If) and any(
+                    isinstance(n, ast.Attribute) and n.attr == "finished"
+                    for n in ast.walk(node.test)) and any(
+                    isinstance(n, ast.Return) for n in node.body):
+                guard_line = node.lineno if guard_line is None \
+                    else min(guard_line, node.lineno)
+            if (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "emit"):
+                emit_line = node.lineno if emit_line is None \
+                    else max(emit_line, node.lineno)
+        if guard_line is not None and emit_line is not None \
+                and guard_line < emit_line:
+            out.add(qual)
+    return out
+
+
+def _speaks_protocol(mod: ModuleModel) -> bool:
+    """The module constructs stream-lifecycle events: some dict literal
+    carries a ``"final"`` key or a protocol ``"type"`` value."""
+    types = EVENT_PROTOCOL["terminal"] | EVENT_PROTOCOL["nonterminal"]
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Dict):
+            continue
+        if _dict_str(node, "final") is not None:
+            return True
+        t = _dict_str(node, "type")
+        if isinstance(t, ast.Constant) and t.value in types:
+            return True
+    return False
+
+
+def rule_event_protocol(mod: ModuleModel) -> List[Finding]:
+    if not _speaks_protocol(mod):
+        return []
+    out: List[Finding] = []
+    emitters = _guarded_emitters(mod)
+    terminal = EVENT_PROTOCOL["terminal"]
+    nonterminal = EVENT_PROTOCOL["nonterminal"]
+    for qual, info in mod.functions.items():
+        for node in own_nodes(info.node):
+            if not isinstance(node, ast.Call):
+                continue
+            # raw stream.emit() outside the guarded emitter breaks the
+            # exactly-one-terminal proof: nothing checks `finished`
+            if (isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "emit"
+                    and qual not in emitters):
+                out.append(make_finding(
+                    "ANA205", mod.path, node.lineno,
+                    f".emit() called directly in {qual}, bypassing the "
+                    "guarded emitter — nothing checks `finished` first, "
+                    "so a stream can receive a second terminal event; "
+                    "route every emission through the single guarded "
+                    "emitter"))
+                continue
+            name = dotted_name(node.func) or ""
+            if not name.split(".")[-1].endswith("emit") or \
+                    name.split(".")[-1] == "emit":
+                continue
+            resolved = [(a, _dict_literal(a, qual, mod))
+                        for a in node.args]
+            payloads = [(a, d) for a, d in resolved
+                        if d is not None and _dict_str(d, "type")
+                        is not None]
+            if not payloads:
+                # a site the checker cannot see through is a hole in
+                # the exactly-one-terminal proof, not a free pass
+                out.append(make_finding(
+                    "ANA205", mod.path, node.lineno,
+                    f"emission payload in {qual} cannot be resolved to "
+                    "a dict literal with a \"type\" key — pass the "
+                    "event literal (or a module-local helper returning "
+                    "one) so the lifecycle spec stays statically "
+                    "checkable"))
+                continue
+            for arg, d in payloads:
+                tnode = _dict_str(d, "type")
+                fnode = _dict_str(d, "final")
+                is_final = (isinstance(fnode, ast.Constant)
+                            and fnode.value is True)
+                if not isinstance(tnode, ast.Constant) or not isinstance(
+                        tnode.value, str):
+                    out.append(make_finding(
+                        "ANA205", mod.path, node.lineno,
+                        "event type is not a string literal — the "
+                        "lifecycle spec cannot be checked statically"))
+                    continue
+                etype = tnode.value
+                if etype not in terminal | nonterminal:
+                    out.append(make_finding(
+                        "ANA205", mod.path, node.lineno,
+                        f"unknown event type {etype!r} — the stream "
+                        f"lifecycle spec allows "
+                        f"{sorted(nonterminal)} then exactly one of "
+                        f"{sorted(terminal)}"))
+                elif etype in terminal and not is_final:
+                    out.append(make_finding(
+                        "ANA205", mod.path, node.lineno,
+                        f"terminal event {etype!r} without a literal "
+                        "`\"final\": True` — readers would never "
+                        "release the stream"))
+                elif etype in nonterminal and fnode is not None:
+                    out.append(make_finding(
+                        "ANA205", mod.path, node.lineno,
+                        f"non-terminal event {etype!r} carries a "
+                        "`final` key — it would terminate the stream "
+                        "early"))
+    return out
+
+
+CONC_RULES = (rule_loop_affinity, rule_await_rmw, rule_lock_discipline,
+              rule_task_lifecycle, rule_event_protocol)
+
+
+def analyze_source(path: str, source: str) -> List[Finding]:
+    """Run every concurrency rule over one file (no suppressions)."""
+    try:
+        mod = ModuleModel(path, source)
+    except SyntaxError as e:
+        return [make_finding("ANA000", path, e.lineno or 0,
+                             f"file does not parse: {e.msg}")]
+    out: List[Finding] = []
+    for rule in CONC_RULES:
+        out.extend(rule(mod))
+    return out

@@ -34,6 +34,11 @@ RULES = {
     "ANA102": ("error", "unsanctioned callback in fused jaxpr"),
     "ANA103": ("warning", "large constant baked into fused jaxpr"),
     "ANA104": ("error", "float64 promotion under enable_x64"),
+    "ANA201": ("error", "cross-thread access to loop-affine state"),
+    "ANA202": ("error", "await-spanning read-modify-write"),
+    "ANA203": ("error", "lock discipline violation"),
+    "ANA204": ("error", "task/future lifecycle hazard"),
+    "ANA205": ("error", "event emission violates the stream protocol"),
 }
 
 

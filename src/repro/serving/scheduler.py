@@ -174,9 +174,12 @@ class AsyncScheduler:
         batch's requests get their REAL ``done`` events (its decode
         completes), only still-queued work gets ``shutdown``."""
         self.shutdown_nowait()
-        if self._task is not None:
-            await self._task
-            self._task = None
+        # claim-then-act: take ownership of the worker handle BEFORE the
+        # await so a concurrent close()/drain() sees None instead of
+        # double-awaiting and then clobbering a restarted worker (ANA202)
+        task, self._task = self._task, None
+        if task is not None:
+            await task
 
     async def drain(self, deadline_s: Optional[float] = None) -> None:
         """Graceful shutdown (the SIGTERM path): stop admission NOW,
@@ -193,17 +196,17 @@ class AsyncScheduler:
                 and loop.time() < t_end:
             await asyncio.sleep(0.02)
         self.shutdown_nowait()
-        if self._task is not None:
+        # claim-then-act, same as close(): own the handle before awaiting
+        task, self._task = self._task, None
+        if task is not None:
             remaining = max(t_end - loop.time(), 0.05)
             try:
-                await asyncio.wait_for(asyncio.shield(self._task),
-                                       remaining)
+                await asyncio.wait_for(asyncio.shield(task), remaining)
             except asyncio.TimeoutError:
                 # past the deadline: the worker stops at the next block
                 # boundary instead of finishing the batch
                 self._abandon = True
-                await self._task
-            self._task = None
+                await task
 
     def shutdown_nowait(self) -> None:
         """Synchronous shutdown request (the router's eviction hook runs
@@ -227,10 +230,14 @@ class AsyncScheduler:
             return
         self._closed = True
         self._wake.set()
-        for rid, stream in self._streams.items():
-            if not stream.finished and rid not in self._inflight:
-                stream.emit({"type": "shutdown", "rid": rid,
-                             "status": "shutdown", "final": True})
+        # snapshot: _emit's retention trimming pops retired streams out
+        # of _streams mid-iteration.  Routing through _emit (not raw
+        # stream.emit) keeps the finished-guard — the single choke point
+        # that proves "exactly one terminal event per stream" (ANA205)
+        for rid in list(self._streams):
+            if rid not in self._inflight:
+                self._emit(rid, {"type": "shutdown", "rid": rid,
+                                 "status": "shutdown", "final": True})
 
     @property
     def idle(self) -> bool:
@@ -398,13 +405,17 @@ class AsyncScheduler:
                     break           # drain deadline: swept below
                 finally:
                     self._decoding = False
-                    self._inflight = set()
+                    # in place, NOT `= set()`: shutdown_nowait reads this
+                    # set from foreign threads; a rebind would let that
+                    # reader hold the stale object across the swap
+                    # (ANA201)
+                    self._inflight.clear()
                 dt = loop.time() - t0
                 self._batch_ema_s = dt if not self._batch_ema_s \
                     else 0.8 * self._batch_ema_s + 0.2 * dt
         finally:
             self._decoding = False
-            self._inflight = set()
+            self._inflight.clear()
             # final sweep: whatever never reached a terminal event
             # (abandoned in-flight work, late re-queues) ends with
             # `shutdown` — no stream is left dangling
@@ -418,7 +429,8 @@ class AsyncScheduler:
         svc = self.svcfg
         attempt = 0
         while True:
-            self._inflight = {r.rid for r in batch.requests}
+            self._inflight.clear()
+            self._inflight.update(r.rid for r in batch.requests)
             progress = {"blocks": 0}
             try:
                 await self._drive_batch(loop, batch, progress)

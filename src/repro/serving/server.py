@@ -124,10 +124,13 @@ class ServingServer:
         for sched in list(self._scheds.values()):
             await sched.close()
         self._scheds.clear()
-        if self._server is not None:
-            self._server.close()
-            await self._server.wait_closed()
-            self._server = None
+        # claim-then-act: a concurrent close()/drain() must see None
+        # rather than wait_closed() on a listener another task already
+        # tore down (ANA202)
+        server, self._server = self._server, None
+        if server is not None:
+            server.close()
+            await server.wait_closed()
 
     async def drain(self, deadline_s: Optional[float] = None) -> None:
         """Graceful shutdown (the SIGTERM path): every model stops

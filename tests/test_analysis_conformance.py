@@ -186,16 +186,33 @@ def test_guard_marker_opts_out_for_broken_strategies():
 
 
 # --------------------------------------------------------------------------
-# tier-1 gate: the live repo is clean (AST + jaxpr, committed baseline)
+# tier-1 gate: the live repo is clean (all three grains, the CI scope)
 # --------------------------------------------------------------------------
 
 def test_live_repo_has_zero_unbaselined_findings(capsys):
     from repro.analysis.cli import main
-    rc = main([os.path.join(REPO, "src"),
-               "--baseline",
-               os.path.join(REPO, "tools", "repro_lint_baseline.txt")])
+    rc = main([os.path.join(REPO, d)
+               for d in ("src", "tools", "benchmarks", "examples")]
+              + ["--baseline",
+                 os.path.join(REPO, "tools", "repro_lint_baseline.txt")])
     out = capsys.readouterr().out
     assert rc == 0, out
     assert "clean" in out
     # the one honored suppression prints its rationale
     assert "sampler.py" in out and "rationale" in out
+
+
+def test_live_repo_concurrency_grain_is_clean(capsys):
+    """The new grain alone, over the full CI scope — a tighter gate
+    than the combined run because it must pass with ZERO baselined
+    concurrency findings (no debt in the serving stack)."""
+    from repro.analysis.cli import main
+    rc = main([os.path.join(REPO, d)
+               for d in ("src", "tools", "benchmarks", "examples")]
+              + ["--grain", "conc", "--only-rules",
+                 "ANA201,ANA202,ANA203,ANA204,ANA205",
+                 "--baseline", os.path.join(REPO, "tools",
+                                            "repro_lint_baseline.txt")])
+    out = capsys.readouterr().out
+    assert rc == 0, out
+    assert "baselined" not in out
