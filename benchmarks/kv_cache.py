@@ -1,0 +1,119 @@
+"""KV-cache policy A/B: decode cost under none vs prefix vs dual.
+
+Speed section (always): one untrained testbed-size model, whole-request
+driver, realistic geometry (prompt 128 / gen 128 in the full run — the
+ISSUE acceptance point), best-of-N per-request wall time per policy.
+The policies change *what* is computed per step — ``prefix`` forwards
+only the ``gen_length`` window, ``dual`` only the active block, both
+against the fixed-shape cache — so the wall-time ratio is the cache's
+real saving, refresh forwards included.  ``forward_equivalents`` is
+recorded alongside as the analytic cost (windowed steps pro-rated by
+window/total, +1.0 per refresh) to separate model-compute savings from
+dispatch noise.
+
+Quality section (full runs only): exact-match on the trained sum
+testbed per policy, via ``benchmarks.common.evaluate_strategy`` — the
+policies are approximations (DESIGN.md "The KV cache") and the EM delta
+is the price tag next to the speedup.
+
+Emits ``BENCH_kv_cache.json`` at the repo root; ``benchmarks/run.py``
+gates >10% regressions of the prefix/dual speedups against the recorded
+baseline.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import _MODEL_OVERRIDES, print_table
+from repro.configs import DecodeConfig, get_config
+from repro.core import Decoder
+from repro.models.model import init_model
+
+OUT_PATH = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_kv_cache.json")
+
+POLICIES = ("none", "prefix", "dual")
+REPEATS = 3
+
+
+def _decode_seconds(params, cfg, dcfg, prompts,
+                    repeats: int = REPEATS) -> Dict:
+    """Best-of-N per-request wall seconds + exact forward-equivalents
+    (untrained model: cost is identical regardless of output quality)."""
+    decoder = Decoder(params, cfg, dcfg)
+    decoder.generate(jax.random.PRNGKey(0), prompts)     # compile
+    best, fwd = float("inf"), 0.0
+    for r in range(repeats):
+        _, stats = decoder.generate(jax.random.PRNGKey(r), prompts)
+        best = min(best, stats.wall_time)
+        fwd = stats.forward_equivalents
+    return {"seconds": best, "forward_equivalents": fwd}
+
+
+def run(fast: bool = False, n_eval: int = 0) -> List[Dict]:
+    prompt_len, gen = (64, 64) if fast else (128, 128)
+    block = 32
+    cfg = get_config("llada-8b").reduced(**_MODEL_OVERRIDES)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    prompts = jnp.ones((1, prompt_len), jnp.int32)
+    base = DecodeConfig(gen_length=gen, block_size=block, steps=gen,
+                        strategy="probability")
+
+    rows = []
+    for policy in POLICIES:
+        dcfg = dataclasses.replace(base, cache_policy=policy)
+        m = _decode_seconds(params, cfg, dcfg, prompts)
+        rows.append({"policy": policy, "prompt": prompt_len, "gen": gen,
+                     "block": block,
+                     "seconds": round(m["seconds"], 4),
+                     "forward_equivalents":
+                         round(m["forward_equivalents"], 2)})
+    by = {r["policy"]: r for r in rows}
+    for r in rows:
+        r["speedup"] = round(by["none"]["seconds"]
+                             / max(r["seconds"], 1e-9), 2)
+    print("\n== KV-cache policy A/B: per-request decode time "
+          "(whole-request driver) ==")
+    print_table(rows, ["policy", "prompt", "gen", "block", "seconds",
+                       "forward_equivalents", "speedup"])
+
+    quality = []
+    if not fast:
+        from benchmarks.common import evaluate_strategy
+        for policy in POLICIES:
+            q = evaluate_strategy("sum", "probability",
+                                  n_eval=n_eval or 32,
+                                  cache_policy=policy)
+            quality.append({"policy": policy, "task": "sum",
+                            "accuracy": round(q["accuracy"], 4),
+                            "tokens_per_forward":
+                                round(q["tokens_per_forward"], 2)})
+        print("\n== KV-cache policy quality (trained sum testbed) ==")
+        print_table(quality, ["policy", "task", "accuracy",
+                              "tokens_per_forward"])
+
+    payload = {
+        "benchmark": "kv_cache",
+        "family": "llada-8b",
+        "backend": jax.default_backend(),
+        "prompt_len": prompt_len, "gen_length": gen, "block_size": block,
+        "prefix_speedup": by["prefix"]["speedup"],
+        "dual_speedup": by["dual"]["speedup"],
+        "rows": rows,
+        "quality": quality,
+    }
+    with open(OUT_PATH, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"[wrote {OUT_PATH}; prefix {payload['prefix_speedup']}x, "
+          f"dual {payload['dual_speedup']}x vs uncached]")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

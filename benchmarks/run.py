@@ -98,6 +98,71 @@ def _loop_with_regression_gate(batches=None):
     return rows
 
 
+def _kv_cache_with_regression_gate(fast: bool = False):
+    """Run the KV-cache policy A/B and assert the prefix/dual speedups
+    have not regressed >10% vs. the recorded ``BENCH_kv_cache.json``
+    baseline.  Same baseline-stewardship rules as the loop gate:
+    ``kv_cache.run`` rewrites the file unconditionally, so the old
+    contents are snapshotted and restored on a failed gate, on partial
+    ``--fast`` runs (smaller geometry, no quality section — not a valid
+    full baseline), and on any slower-than-baseline gated number.
+    Re-recording a deliberately slower baseline means running
+    ``benchmarks.kv_cache`` directly."""
+    from benchmarks import kv_cache
+
+    baseline = raw_baseline = None
+    if os.path.exists(kv_cache.OUT_PATH):
+        with open(kv_cache.OUT_PATH) as f:
+            raw_baseline = f.read()
+        baseline = json.loads(raw_baseline)
+
+    def restore():
+        if raw_baseline is not None:
+            with open(kv_cache.OUT_PATH, "w") as f:
+                f.write(raw_baseline)
+
+    try:
+        rows = kv_cache.run(fast=fast)
+    except BaseException:
+        restore()
+        raise
+    by = {r["policy"]: r for r in rows}
+    # the speedup is geometry-dependent (the window/total ratio IS the
+    # saving), so only gate like-for-like: same backend AND the same
+    # prompt/gen point as the recorded baseline — a --fast run against a
+    # full-geometry baseline would flag a phantom regression
+    if baseline and baseline.get("backend") == \
+            __import__("jax").default_backend() and \
+            baseline.get("gen_length") == rows[0]["gen"] and \
+            baseline.get("prompt_len") == rows[0]["prompt"]:
+        slower = False
+        for key, col in (("prefix", "prefix_speedup"),
+                         ("dual", "dual_speedup")):
+            old, new = baseline.get(col), by[key]["speedup"]
+            if not (old and new):
+                continue
+            if new < 0.9 * old:
+                restore()
+                raise AssertionError(
+                    f"kv-cache regression: {key} speedup {new}x vs. "
+                    f"recorded baseline {old}x (>10% slower) — baseline "
+                    f"file left unchanged; investigate before "
+                    f"re-recording BENCH_kv_cache.json")
+            slower = slower or new < old
+            print(f"[kv-cache regression gate OK ({key}): {new}x vs. "
+                  f"baseline {old}x]")
+        if slower and not fast:
+            restore()
+            print("[slower than baseline (within tolerance): baseline "
+                  "file kept — re-record via benchmarks.kv_cache if "
+                  "intentional]")
+    if fast:
+        restore()
+        print("[--fast kv-cache run: full-geometry baseline file "
+              "restored]")
+    return rows
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
@@ -143,6 +208,8 @@ def main() -> None:
         "kernel": kernel_confidence.run,
         "loop": lambda: _loop_with_regression_gate(
             batches=(1, 4) if args.fast else None),
+        "kv_cache": lambda: _kv_cache_with_regression_gate(
+            fast=args.fast),
     }
     chosen = (args.only.split(",") if args.only else list(suites))
     t0 = time.perf_counter()

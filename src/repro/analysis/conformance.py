@@ -4,11 +4,12 @@ Every registered strategy must hold four contracts that no unit test can
 state once-for-all (they quantify over *future* strategies):
 
   ANA101  the carry pytree (structure, shapes, dtypes) is a fixed-point
-          of ``begin_block``, ``fused_step`` and ``step``, and both
-          fused drivers (``drive_block``'s while_loop, ``drive_request``'s
-          scan) trace with it — a carry that grows or re-dtypes breaks
-          the ``lax.while_loop`` carry invariant at runtime, on the
-          first request that hits the strategy.
+          of ``begin_block``, ``fused_step`` and ``step``, and every
+          fused driver (``drive_block``'s while_loop, ``drive_request``'s
+          scan, and their KV-cached twins under both cache policies)
+          traces with it — a carry that grows or re-dtypes breaks the
+          ``lax.while_loop`` carry invariant at runtime, on the first
+          request that hits the strategy.
   ANA102  the fused jaxprs contain no callback primitives, except the
           one sanctioned *ordered* streaming ``io_callback`` that
           ``drive_request`` itself plants when given ``emit``.
@@ -125,11 +126,37 @@ def _tolerated(err: Exception) -> bool:
     return type(err).__name__ in _TRACE_TOLERATED
 
 
+def _toy_cached_fns(cfg: ModelConfig) -> Tuple[Callable, Callable]:
+    """Weightless stand-ins for the KV-cached model surface: a per-column
+    f32 "cache" captured from the canvas, and a windowed forward that
+    reads it back (candidate-folded batches included) — enough for the
+    cached drivers to trace with real data dependence on the state."""
+    v = cfg.vocab_size
+
+    def refresh_fn(canvas):
+        return jnp.asarray(canvas % v, jnp.float32)
+
+    def cached_fn(w, win_lo, state):
+        bias = jax.lax.dynamic_slice_in_dim(state, win_lo, w.shape[1],
+                                            axis=1)
+        reps = w.shape[0] // state.shape[0]
+        if reps > 1:
+            bias = jnp.tile(bias, (reps, 1))
+        return jax.nn.one_hot((w + 1) % v, v, dtype=jnp.float32) * 8.0 \
+            + bias[..., None] * 1e-3
+
+    return cached_fn, refresh_fn
+
+
 def check_strategy(strategy, *, batch: int = 2, prompt_len: int = 4,
                    const_bytes: int = DEFAULT_CONST_BYTES,
                    path: Optional[str] = None) -> List[Finding]:
-    """Trace one strategy through both fused drivers; return findings."""
-    from repro.core.loop import drive_block, drive_request
+    """Trace one strategy through the fused drivers — plain AND KV-cached
+    (both cache policies) — and return findings."""
+    import dataclasses
+
+    from repro.core.loop import (drive_block, drive_cached_block,
+                                 drive_request, drive_request_cached)
     from repro.core.strategies import as_strategy
 
     strat = as_strategy(strategy)
@@ -218,16 +245,13 @@ def check_strategy(strategy, *, batch: int = 2, prompt_len: int = 4,
                              schedules, s, f, c,
                              emit=lambda blk, lo, hi, canvas: None)
 
-    for label, fn, emit_ok in (("drive_block", block_fn, False),
-                               ("drive_request", request_fn, False),
-                               ("drive_request[emit]", request_emit_fn,
-                                True)):
+    def check_jaxpr(label, fn, args, emit_ok):
         try:
-            jaxpr = jax.make_jaxpr(fn)(x0, key, steps0, fwd0, carry0)
+            jaxpr = jax.make_jaxpr(fn)(*args)
         except Exception as e:
             finding("ANA101", f"{label} does not trace with this "
                     f"strategy's carry: {e!r}")
-            continue
+            return
         for eqn in _callbacks(jaxpr):
             prim = eqn.primitive.name
             if (emit_ok and prim == "io_callback"
@@ -243,6 +267,36 @@ def check_strategy(strategy, *, batch: int = 2, prompt_len: int = 4,
                         f"{jnp.shape(const)} constant ({nbytes} B > "
                         f"{const_bytes} B) — pass weights as traced "
                         "arguments, not closure captures")
+
+    plain_args = (x0, key, steps0, fwd0, carry0)
+    check_jaxpr("drive_block", block_fn, plain_args, False)
+    check_jaxpr("drive_request", request_fn, plain_args, False)
+    check_jaxpr("drive_request[emit]", request_emit_fn, plain_args, True)
+
+    # the cached fused drivers hold the same contracts per policy: the
+    # carry AND the fixed-shape cache state ride the trace as arguments
+    # (a baked cache would be an ANA103 finding), and the only callback
+    # is still the sanctioned ordered streaming one
+    cached_fn, refresh_fn = _toy_cached_fns(cfg)
+    state0 = refresh_fn(x0)
+    lo0 = jnp.asarray(prompt_len, jnp.int32)
+    for policy in ("prefix", "dual"):
+        dc = dataclasses.replace(dcfg, cache_policy=policy)
+
+        def cblock_fn(x, k, lo, s, f, c, st, _dc=dc):
+            return drive_cached_block(strat, cached_fn, cfg, _dc, x, k,
+                                      lo, sched, s, f, c, st)
+
+        def crequest_fn(x, k, s, f, c, _dc=dc):
+            return drive_request_cached(
+                strat, cached_fn, refresh_fn, cfg, _dc, x, k, block_los,
+                schedules, s, f, c,
+                emit=lambda blk, lo, hi, canvas: None)
+
+        check_jaxpr(f"drive_cached_block[{policy}]", cblock_fn,
+                    (x0, key, lo0, steps0, fwd0, carry0, state0), False)
+        check_jaxpr(f"drive_request_cached[{policy},emit]", crequest_fn,
+                    plain_args, True)
 
     # x64 probe: same 32-bit inputs, x64 enabled — promotion to float64
     # means a float constant somewhere isn't weakly typed

@@ -5,9 +5,9 @@ import importlib
 from typing import Dict, List
 
 from repro.configs.base import (DecodeConfig, DegradeConfig, EncDecConfig,
-                                LadderRung, MLAConfig, ModelConfig,
-                                MoEConfig, RouterConfig, SSMConfig,
-                                ServerConfig, SupervisorConfig,
+                                ExecutionConfig, LadderRung, MLAConfig,
+                                ModelConfig, MoEConfig, RouterConfig,
+                                SSMConfig, ServerConfig, SupervisorConfig,
                                 TrainConfig, default_block_size)
 
 # arch id -> module (one file per assigned architecture + the paper's own)
@@ -42,7 +42,8 @@ def list_configs() -> List[str]:
 
 __all__ = [
     "ModelConfig", "MoEConfig", "MLAConfig", "SSMConfig", "EncDecConfig",
-    "DecodeConfig", "TrainConfig", "ServerConfig", "RouterConfig",
+    "DecodeConfig", "ExecutionConfig", "TrainConfig", "ServerConfig",
+    "RouterConfig",
     "SupervisorConfig", "DegradeConfig", "LadderRung",
     "default_block_size",
     "get_config", "list_configs", "ASSIGNED_ARCHS",

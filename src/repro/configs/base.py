@@ -217,6 +217,54 @@ def _param_count(cfg: ModelConfig, active_only: bool = False) -> int:
     return embed + total
 
 
+CACHE_POLICIES = ("none", "prefix", "dual")
+CACHE_REFRESH_MODES = ("block", "off")
+
+
+@dataclass(frozen=True)
+class ExecutionConfig:
+    """The validated execution surface of a :class:`DecodeConfig`.
+
+    Groups the driver-selection knobs (``fused_loop`` / ``fused_blocks`` /
+    ``use_pallas_kernel``) with the KV-cache policy axis
+    (``cache_policy`` / ``cache_refresh``) behind one object that
+    validates on construction.  ``DecodeConfig`` keeps the same knobs as
+    flat fields (so ``dataclasses.replace(dcfg, fused_loop=...)`` keeps
+    working everywhere, and the frozen dataclass stays the hashable unit
+    that keys jit caches and serving bucket keys) and exposes the grouped
+    view as ``dcfg.execution``; constructing a ``DecodeConfig`` always
+    constructs — and therefore validates — this sub-config, so an
+    invalid combination is rejected at the boundary it crosses
+    (``ServingEngine.submit`` → 400, ``Decoder.__init__``), never deep
+    inside a trace.
+    """
+    fused_loop: bool = True
+    fused_blocks: bool = True
+    use_pallas_kernel: Optional[bool] = None
+    cache_policy: str = "none"
+    cache_refresh: str = "block"
+
+    def __post_init__(self):
+        if self.cache_policy not in CACHE_POLICIES:
+            raise ValueError(
+                f"unknown cache_policy {self.cache_policy!r}; "
+                f"expected one of {CACHE_POLICIES}")
+        if self.cache_refresh not in CACHE_REFRESH_MODES:
+            raise ValueError(
+                f"unknown cache_refresh {self.cache_refresh!r}; "
+                f"expected one of {CACHE_REFRESH_MODES}")
+        if self.cache_policy == "dual" and self.cache_refresh == "off":
+            raise ValueError(
+                "cache_policy='dual' requires cache_refresh='block': the "
+                "dual cache freezes committed blocks AND the masked "
+                "suffix, so skipping block-boundary refreshes would "
+                "decode every block against the prefill-time canvas")
+
+    @property
+    def cached(self) -> bool:
+        return self.cache_policy != "none"
+
+
 @dataclass(frozen=True)
 class DecodeConfig:
     """Sampler / strategy hyperparameters (paper §5.1 defaults)."""
@@ -226,24 +274,36 @@ class DecodeConfig:
     strategy: str = "fdm"              # random|probability|margin|entropy|
                                        # eb|wino|fdm|fdm_a|wino_r|extrapolate
     temperature: float = 0.0
-    # execution
+    # execution (grouped + validated view: ``dcfg.execution``)
     fused_loop: bool = True            # device-resident lax.while_loop block
                                        # driver (core/loop.py); False = the
                                        # legacy host step loop (debugging /
                                        # A/B: benchmarks/loop_overhead.py)
     fused_blocks: bool = True          # fuse the OUTER block loop too: one
                                        # lax.scan over blocks = one compiled
-                                       # dispatch per request (plain path
-                                       # only; the cached path keeps its
-                                       # per-block host driver — see
-                                       # DESIGN.md).  False = per-block
-                                       # dispatches, for debugging.  Only
+                                       # dispatch per request.  False =
+                                       # per-block dispatches, for debugging
+                                       # and block streaming.  Only
                                        # meaningful with fused_loop=True.
     use_pallas_kernel: Optional[bool] = None
                                        # route score_logits through the fused
                                        # Pallas confidence kernel; None =
                                        # auto (TPU only — interpret mode on
                                        # CPU costs more than it saves)
+    cache_policy: str = "none"         # none | prefix | dual — the KV-cache
+                                       # axis (DESIGN.md "The KV cache").
+                                       # prefix: freeze prompt K/V, keep the
+                                       # whole generation region live (exact
+                                       # within the generation).  dual:
+                                       # Fast-dLLM-style — freeze prompt,
+                                       # committed blocks AND masked suffix;
+                                       # only the active block is live
+                                       # (approximate within a block).
+    cache_refresh: str = "block"       # block | off — recapture the cache
+                                       # with one full forward at each block
+                                       # boundary; 'off' (prefix only) keeps
+                                       # the prefill-time cache for the
+                                       # whole request
     # FDM (Algorithm 1)
     k: int = 2                         # search width K
     gamma: float = 0.6                 # dynamic pruning threshold
@@ -287,6 +347,20 @@ class DecodeConfig:
     extrap_beta: float = 0.5
     extrap_horizon: float = 2.0
     extrap_min_obs: int = 2
+
+    def __post_init__(self):
+        # Constructing the grouped view validates the execution knobs, so
+        # every DecodeConfig ever built (including dataclasses.replace at
+        # the serving boundary) carries a coherent execution surface.
+        _ = self.execution
+
+    @property
+    def execution(self) -> ExecutionConfig:
+        """Grouped, validated execution sub-config (see ExecutionConfig)."""
+        return ExecutionConfig(
+            fused_loop=self.fused_loop, fused_blocks=self.fused_blocks,
+            use_pallas_kernel=self.use_pallas_kernel,
+            cache_policy=self.cache_policy, cache_refresh=self.cache_refresh)
 
 
 def default_block_size(gen_length: int) -> int:

@@ -12,30 +12,33 @@ Public API:
                 un-commit; the pending set rides the strategy carry)
   extrapolate — confidence extrapolation / local determinism propagation
                 (trajectory carry; skips model forwards outright)
-  decoder     — the first-class Decoder: block orchestration (plain +
-                frozen-prefix cached), cross-call runner cache, streaming
-  loop        — device-resident fused block driver (one XLA program/block)
-  sampler     — deprecated function-style shims over Decoder
+  decoder     — the first-class Decoder: block orchestration for every
+                cache policy (none/prefix/dual), cross-call runner cache,
+                streaming
+  loop        — device-resident fused drivers (plain + KV-cached)
+  sampler     — ``make_model_fn``, the conditioned-forward helper
 """
 from repro.core.confidence import (Scores, global_confidence,
                                    local_confidence, score_logits)
 from repro.core.decoder import (BlockEvent, CacheInfo, Decoder, SampleStats,
                                 clear_decode_cache, decode_cache_info,
                                 decode_cache_scope,
-                                reset_decode_cache_stats)
+                                reset_decode_cache_stats,
+                                validate_cache_policy)
 from repro.core.extrapolate import ExtrapolationStrategy
 from repro.core.fdm import FDMStrategy, fdm_select, fdm_step
 from repro.core.fdm_a import (FDMAStrategy, fdm_a_plan, fdm_a_step,
                               fdm_a_step_fused)
 from repro.core.wino import WINORevocationStrategy
-from repro.core.loop import block_runner, drive_block, drive_request
+from repro.core.loop import (drive_block, drive_cached_block, drive_request,
+                             drive_request_cached)
 from repro.core.loss import masked_cross_entropy, token_accuracy
 from repro.core.masking import (apply_mask, fully_masked, mask_positions,
                                 sample_mask_ratio)
-from repro.core.sampler import generate, generate_cached, make_model_fn
+from repro.core.sampler import make_model_fn
 from repro.core.strategies import (StatelessStrategy, Strategy,
                                    available_strategies, commit_topn,
-                                   get_strategy, rank_desc,
+                                   rank_desc,
                                    register_strategy, resolve_strategy,
                                    unregister_strategy)
 
@@ -46,13 +49,14 @@ __all__ = [
     "Decoder", "BlockEvent", "CacheInfo", "decode_cache_info",
     "clear_decode_cache",
     "decode_cache_scope", "reset_decode_cache_stats",
+    "validate_cache_policy",
     "FDMStrategy", "fdm_step", "fdm_select",
     "FDMAStrategy", "fdm_a_step", "fdm_a_step_fused", "fdm_a_plan",
     "WINORevocationStrategy", "ExtrapolationStrategy",
-    "block_runner", "drive_block", "drive_request",
+    "drive_block", "drive_request",
+    "drive_cached_block", "drive_request_cached",
     "masked_cross_entropy", "token_accuracy",
     "apply_mask", "fully_masked", "mask_positions", "sample_mask_ratio",
-    "SampleStats", "generate", "generate_cached", "make_model_fn",
-    "get_strategy",
+    "SampleStats", "make_model_fn",
     "commit_topn", "rank_desc",
 ]

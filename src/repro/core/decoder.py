@@ -24,19 +24,31 @@ work:
   callers that already own a (jitted) forward.  The runner holds the
   callable only through a weakref, dereferenced at trace time.
 
+KV caching is a first-class axis of the execution surface
+(``DecodeConfig.cache_policy`` ∈ ``{none, prefix, dual}``, DESIGN.md
+"The KV cache"): ``prefix`` freezes the prompt's K/V and keeps the whole
+generation region live; ``dual`` (Fast-dLLM-style) additionally freezes
+committed blocks and the masked suffix, recomputing only the active
+block.  Both ride the SAME fused drivers as the plain path — the
+fixed-shape cache is a traced runner argument threaded through the
+``lax.scan`` carry, so one executable per strategy × shape × policy
+serves every prompt length, and all three drivers (host loop, per-block
+fused, whole-request fused) decode bit-identically per policy.  The
+legacy ``generate_cached`` shrinking-window path is subsumed by
+``cache_policy="prefix"`` (see the DESIGN.md migration note).
+
 The runner cache (``RunnerCache``) is module-global and *weak*: entries
 are keyed on the identity of the params leaves (or the model_fn) and
 evicted by a ``weakref.finalize`` when the keying object is collected.
-This replaces two seed-era idioms with one mechanism: ``block_runner``'s
-``lru_cache`` (which pinned model_fns/params forever — a leak for
-long-lived multi-model serving) and ``generate_cached``'s per-call re-jit
-of the window forwards and the fused block runner (params pytrees don't
-hash, so the seed simply recompiled every call).  Repeat decodes with the
-same weights now compile nothing, in both the plain and cached paths;
-``decode_cache_info()`` exposes hit/miss/trace counters so tests and
-benchmarks can assert exactly that.
+This replaces two seed-era idioms with one mechanism: the seed's
+``lru_cache`` over runners (which pinned model_fns/params forever — a
+leak for long-lived multi-model serving) and its per-call re-jit of the
+cached-path forwards (params pytrees don't hash, so the seed simply
+recompiled every call).  Repeat decodes with the same weights now
+compile nothing, in every policy; ``decode_cache_info()`` exposes
+hit/miss/trace counters so tests and benchmarks can assert exactly that.
 
-Streaming: ``generate``/``generate_cached`` accept
+Streaming: ``generate`` accepts
 ``on_block_committed(block_index, lo, hi, x)``, fired after each block
 commits (the natural streaming grain of blockwise diffusion decoding —
 tokens inside a block finalize together).  ``x`` is the live device
@@ -55,7 +67,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import DecodeConfig, ModelConfig
-from repro.core.loop import drive_block, drive_request
+from repro.core.loop import (carry_unwindow, carry_window,
+                             drive_block, drive_cached_block,
+                             drive_request, drive_request_cached,
+                             window_geometry)
 from repro.core.masking import fully_masked
 from repro.core.strategies import Strategy, resolve_strategy
 
@@ -223,7 +238,7 @@ def decode_cache_scope(cache: Optional[RunnerCache] = None):
     process-wide cache for the duration of the ``with`` block.
 
     Decoders constructed inside the scope — including the ones the
-    deprecation shims and the ServingEngine build internally — resolve
+    ServingEngine builds internally — resolve
     against the scoped cache, so its counters see exactly the scope's
     work and its entries drop with the scope (previously cached runners
     reappear after exit, untouched).  Yields the scoped cache.
@@ -265,27 +280,38 @@ def _tile_state(st, reps: int):
     return DecodeState(layer_states=ls, enc_out=eo)
 
 
-def _carry_window(strat: Strategy, carry, lo: int):
-    """Cached path: slice a positional carry's per-column leaves to the
-    live window ``[:, lo:]``, exactly like the canvas itself.  Carries of
-    strategies without ``positional_carry`` pass through whole."""
-    if not strat.positional_carry:
-        return carry
-    pos, glob = carry
-    return jax.tree.map(lambda a: a[:, lo:], pos), glob
+def _cached_model_fn(params, cfg: ModelConfig, batch: int) -> Callable:
+    """``(x_win, win_lo, state) -> logits`` for the cached drivers,
+    tiling the cache candidate-major when a foreseeing strategy folds
+    K candidates into the batch axis."""
+    from repro.models.model import forward_cached
+
+    def cf(w, win_lo, st):
+        return forward_cached(params, w, win_lo,
+                              _tile_state(st, w.shape[0] // batch), cfg)
+
+    return cf
 
 
-def _carry_unwindow(strat: Strategy, carry_full, carry_win, lo: int):
-    """Write a block's updated window carry back into the full-canvas
-    positional leaves (inverse of ``_carry_window``)."""
-    if not strat.positional_carry:
-        return carry_win
-    pos_full, _ = carry_full
-    pos_win, glob = carry_win
-    pos = jax.tree.map(
-        lambda full, win: jax.lax.dynamic_update_slice_in_dim(
-            full, win, lo, axis=1), pos_full, pos_win)
-    return pos, glob
+def validate_cache_policy(cfg: ModelConfig, dcfg: DecodeConfig) -> None:
+    """Boundary validation for the cache-policy axis: raise ``ValueError``
+    if ``cfg`` cannot serve ``dcfg.cache_policy`` (callers at trust
+    boundaries — ``ServingEngine.submit`` — map this to a 400).
+
+    The fixed-shape block cache scatters fresh window K/V into full-length
+    buffers; recurrent state (ssm/hybrid) is a running reduction and has
+    no per-position rows to scatter into, so those archs only support
+    ``cache_policy="none"``.
+    """
+    if dcfg.cache_policy == "none":
+        return
+    if cfg.arch_type in ("ssm", "hybrid") or cfg.attention == "none":
+        raise ValueError(
+            f"cache_policy={dcfg.cache_policy!r} requires an "
+            f"attention-backed architecture (gqa/mla); "
+            f"{cfg.name!r} is arch_type={cfg.arch_type!r} with "
+            f"attention={cfg.attention!r} — recurrent state cannot ride "
+            f"the fixed-shape block cache")
 
 
 class Decoder:
@@ -296,12 +322,15 @@ class Decoder:
 
         dec = Decoder(params, cfg, dcfg)
         tokens, stats = dec.generate(rng, prompt)
-        tokens, stats = dec.generate_cached(rng, prompt)   # frozen-prefix
+
+        # KV-cached decoding is the same call under a different policy:
+        dcfg2 = dataclasses.replace(dcfg, cache_policy="prefix")
+        tokens, stats = Decoder(params, cfg, dcfg2).generate(rng, prompt)
 
     ``Decoder`` objects are cheap: compiled runners live in the shared
     module-level cache keyed on the weights' identity, so constructing a
-    fresh ``Decoder`` per request (as the deprecation shims do) still
-    compiles nothing after the first decode.
+    fresh ``Decoder`` per request (as the ServingEngine does under
+    per-request overrides) still compiles nothing after the first decode.
     """
 
     def __init__(self, model, cfg: ModelConfig, dcfg: DecodeConfig, *,
@@ -507,71 +536,118 @@ class Decoder:
         params, ex = self._params, dict(extras or {})
         return lambda t: raw(params, ex, t)
 
-    def _window_fn(self, extend: Optional[str]) -> Callable:
-        """Cached-path window forward ``(tokens, positions, state)`` with
-        params bound as a traced argument underneath."""
+    def _refresh_runner(self) -> Callable:
+        """Jitted cache capture ``refresh(canvas) -> DecodeState`` — the
+        prefill and block-boundary refresh op of the cached path (one
+        full forward over the canvas, LM head skipped).  Strategy- and
+        dcfg-independent: every policy and strategy on the same weights
+        shares one compilation per canvas shape."""
         cfg, cache = self.cfg, self._cache
 
         def build():
-            from repro.models.model import forward_window
+            from repro.models.model import capture_cache
 
             @jax.jit
-            def wf(params, tokens, positions, state):
+            def refresh(params, canvas):
                 cache.note_trace()
-                return forward_window(params, tokens, positions, state,
-                                      cfg=cfg, extend=extend)
-            return wf
+                return capture_cache(params, canvas, cfg)
+            return refresh
 
-        raw = cache.get(self._key, self._anchor, ("window", cfg, extend),
+        raw = cache.get(self._key, self._anchor, ("refresh", cfg), build)
+        params = self._params
+        return lambda canvas: raw(params, canvas)
+
+    def _cached_forward_fn(self) -> Callable:
+        """Jitted windowed forward ``(x_win, win_lo, state) -> logits``
+        for the host step loop of the cached path."""
+        cfg, cache = self.cfg, self._cache
+
+        def build():
+            from repro.models.model import forward_cached
+
+            @jax.jit
+            def cfwd(params, w, win_lo, st):
+                cache.note_trace()
+                return forward_cached(params, w, win_lo, st, cfg)
+            return cfwd
+
+        raw = cache.get(self._key, self._anchor, ("cached_fwd", cfg),
                         build)
         params = self._params
-        return lambda tokens, positions, state: \
-            raw(params, tokens, positions, state)
+        return lambda w, win_lo, st: raw(params, w, win_lo, st)
 
-    def _cached_runner(self, strat: Strategy) -> Callable:
-        """Fused block runner for the cached path.  One callable serves
-        every block: the per-block window arrays (positions, in-block
-        mask, commit schedule, fwd scale) are traced arguments, so the jit
-        cache under it holds one compilation per window shape — reused
-        across calls (the seed re-jitted this per ``generate_cached``
-        call)."""
+    def _cached_block_runner(self, strat: Strategy) -> Callable:
+        """Per-block fused runner for the cached path: signature
+        ``run(x, rng, lo, sched, steps, fwd, carry, state)`` over the FULL
+        canvas — window slicing happens inside the trace
+        (``drive_cached_block``), with ``lo`` traced, so one executable
+        per strategy × shape × policy serves every block of every
+        request.  ``state`` is the traced fixed-shape cache from
+        ``_refresh_runner`` (never a baked const — ANA103)."""
         cfg, dcfg, cache = self.cfg, self.dcfg, self._cache
         subkey = ("cached_block", strat, cfg, dcfg)
 
         def build():
-            from repro.models.model import forward_window
-
             @jax.jit
-            def run(params, x_win, key, st, sched, steps, fwd, carry,
-                    win_pos, in_block, fwd_scale):
+            def run(params, x, rng, lo, sched, steps, fwd, carry, state):
                 cache.note_trace()
-                b = x_win.shape[0]
-
-                def mfn(w):
-                    reps = w.shape[0] // b
-                    p = jnp.tile(win_pos, (reps, 1)) if reps > 1 else win_pos
-                    return forward_window(params, w, p, _tile_state(st, reps),
-                                          cfg=cfg)[0]
-
-                return drive_block(strat, mfn, cfg, dcfg, sched,
-                                   x_win, key, in_block, steps, fwd, carry,
-                                   fwd_scale=fwd_scale)
+                cf = _cached_model_fn(params, cfg, x.shape[0])
+                return drive_cached_block(strat, cf, cfg, dcfg, x, rng,
+                                          lo, sched, steps, fwd, carry,
+                                          state)
             return run
 
         raw = cache.get(self._key, self._anchor, subkey, build)
         params = self._params
-        return lambda x_win, key, st, sched, steps, fwd, carry, win_pos, \
-            in_block, fwd_scale: raw(params, x_win, key, st, sched, steps,
-                                     fwd, carry, win_pos, in_block,
-                                     fwd_scale)
+        return lambda x, rng, lo, sched, steps, fwd, carry, state: \
+            raw(params, x, rng, lo, sched, steps, fwd, carry, state)
+
+    def _cached_request_runner(self, strat: Strategy, stream: bool
+                               ) -> Tuple[Callable, Optional[dict]]:
+        """Whole-request fused runner for the cached path
+        (``drive_request_cached``): prefill, every block's windowed
+        ``while_loop`` AND the block-boundary cache refreshes run as one
+        compiled dispatch.  Same signature and streaming-holder contract
+        as ``_request_runner``."""
+        cfg, dcfg, cache = self.cfg, self.dcfg, self._cache
+        subkey = ("request_cached", strat, cfg, dcfg, bool(stream))
+
+        def make_emit(holder):
+            def emit(blk, lo, hi, canvas):
+                cb = holder.get("cb")
+                if cb is not None:
+                    cb(int(blk), int(lo), int(hi), canvas)
+            return emit
+
+        def build():
+            holder = {"cb": None} if stream else None
+            emit = make_emit(holder) if stream else None
+
+            @jax.jit
+            def run(params, x, rng, los, scheds, steps, fwd, carry):
+                cache.note_trace()
+                from repro.models.model import capture_cache
+                cf = _cached_model_fn(params, cfg, x.shape[0])
+                return drive_request_cached(
+                    strat, cf, lambda cv: capture_cache(params, cv, cfg),
+                    cfg, dcfg, x, rng, los, scheds, steps, fwd, carry,
+                    emit=emit)
+            return run, holder
+
+        raw, holder = self._cache.get(self._key, self._anchor, subkey,
+                                      build)
+        params = self._params
+        return (lambda x, rng, los, scheds, steps, fwd, carry:
+                raw(params, x, rng, los, scheds, steps, fwd, carry),
+                holder)
 
     # -- decoding ----------------------------------------------------------
     def generate(self, rng, prompt: jnp.ndarray,
                  strategy: Optional[str] = None,
                  on_block_committed: Optional[Callable] = None,
                  **extras) -> Tuple[jnp.ndarray, SampleStats]:
-        """Decode ``gen_length`` tokens after ``prompt`` (B, Lp) with full
-        re-forwards per step.  Returns (tokens (B, Lp+gen), SampleStats).
+        """Decode ``gen_length`` tokens after ``prompt`` (B, Lp).
+        Returns (tokens (B, Lp+gen), SampleStats).
 
         ``strategy``: registered name or ``Strategy``; defaults to
         ``dcfg.strategy``.  ``extras`` (params mode only): conditioning
@@ -579,14 +655,21 @@ class Decoder:
         ``on_block_committed(block_index, lo, hi, x)`` fires after each
         committed block.
 
-        Three drivers, bit-identical tokens/steps/forwards (parity-tested
-        for every registered strategy):
+        ``dcfg.cache_policy`` selects the execution mode: ``none`` runs a
+        full re-forward per step; ``prefix``/``dual`` decode windowed
+        steps against the fixed-shape KV cache (params mode only —
+        DESIGN.md "The KV cache").  Per policy, three drivers decode
+        bit-identical tokens/steps (parity-tested for every registered
+        strategy):
 
         * ``fused_loop ∧ fused_blocks`` (default) — the whole request is
-          ONE compiled dispatch (``drive_request``); streaming callbacks
-          fire via ordered ``io_callback``.
+          ONE compiled dispatch (``drive_request`` /
+          ``drive_request_cached``, which folds the prefill and every
+          block-boundary cache refresh into the same dispatch);
+          streaming callbacks fire via ordered ``io_callback``.
         * ``fused_loop ∧ ¬fused_blocks`` — one dispatch per block
-          (``drive_block``), callbacks from host between blocks.
+          (``drive_block`` / ``drive_cached_block``), callbacks from
+          host between blocks.
         * ``¬fused_loop`` — the legacy host step loop, for debugging.
 
         The two per-block drivers are served by ``generate_blocks`` (the
@@ -596,6 +679,9 @@ class Decoder:
         self._check_extras(extras)
         cfg, dcfg = self.cfg, self.dcfg
         strat = resolve_strategy(strategy or dcfg.strategy)
+        cached = dcfg.cache_policy != "none"
+        if cached:
+            self._check_cached(extras)
         fused = dcfg.fused_loop and strat.supports_fused
         if not (fused and dcfg.fused_blocks):
             blocks = self.generate_blocks(rng, prompt, strategy=strat,
@@ -615,7 +701,8 @@ class Decoder:
         t0 = time.perf_counter()
 
         stream = on_block_committed is not None
-        run, holder = self._request_runner(strat, stream, extras)
+        run, holder = self._cached_request_runner(strat, stream) if cached \
+            else self._request_runner(strat, stream, extras)
         if holder is not None:
             # the holder is shared through the runner cache by every
             # Decoder on the same weights: refuse to clobber a live
@@ -681,49 +768,98 @@ class Decoder:
 
     def _blocks_gen(self, strat: Strategy, rng, prompt, geometry, extras):
         cfg, dcfg = self.cfg, self.dcfg
+        cached = dcfg.cache_policy != "none"
+        if cached:
+            self._check_cached(extras)
         b, lp = prompt.shape
         gen, bs, num_blocks, sched = geometry
+        total = lp + gen
         x = fully_masked(cfg, prompt, gen)
-        carry = strat.init_carry_shaped(cfg, dcfg, b, lp + gen)
+        carry = strat.init_carry_shaped(cfg, dcfg, b, total)
         stats = SampleStats(tokens_generated=b * gen)
         t0 = time.perf_counter()
+        # cached path: prefill captures the fixed-shape cache (= block 0's
+        # refresh); later refreshes run from host at block boundaries.
+        # Each capture is one full forward, accounted host-side so all
+        # three drivers report the same forward_equivalents.
+        refresh = self._refresh_runner() if cached else None
+        state = refresh(x) if cached else None
+        refresh_fwd = 1.0 if cached else 0.0
         fused = dcfg.fused_loop and strat.supports_fused
         if fused:
-            run = self._plain_runner(strat, extras)
+            run = self._cached_block_runner(strat) if cached \
+                else self._plain_runner(strat, extras)
             steps = jnp.zeros((), jnp.int32)
             fwd = jnp.zeros((), jnp.float32)
             for blk in range(num_blocks):
                 lo = lp + blk * bs
-                x, rng, steps, fwd, carry = run(
-                    x, rng, jnp.int32(lo), jnp.asarray(sched[blk]),
-                    steps, fwd, carry)
+                if cached and blk > 0 and dcfg.cache_refresh == "block":
+                    state = refresh(x)
+                    refresh_fwd += 1.0
+                if cached:
+                    x, rng, steps, fwd, carry = run(
+                        x, rng, jnp.int32(lo), jnp.asarray(sched[blk]),
+                        steps, fwd, carry, state)
+                else:
+                    x, rng, steps, fwd, carry = run(
+                        x, rng, jnp.int32(lo), jnp.asarray(sched[blk]),
+                        steps, fwd, carry)
                 yield BlockEvent(blk, lo, lo + bs, x)
             # one sync for the whole decode: canvas + both stats counters
             x.block_until_ready()
             stats.steps = int(jax.device_get(steps))
-            stats.forward_equivalents = float(jax.device_get(fwd))
+            stats.forward_equivalents = float(jax.device_get(fwd)) \
+                + refresh_fwd
         else:
-            mf = self._host_model_fn(extras)
+            cfwd = self._cached_forward_fn() if cached \
+                else self._host_model_fn(extras)
+            win, static_lo = window_geometry(dcfg, total) if cached \
+                else (total, 0)
             last = sched.shape[1] - 1
             for blk in range(num_blocks):
                 lo, hi = lp + blk * bs, lp + (blk + 1) * bs
-                in_block = (jnp.arange(x.shape[1]) >= lo) & \
-                    (jnp.arange(x.shape[1]) < hi)
-                carry = strat.begin_block(carry, x, in_block)
+                if cached and blk > 0 and dcfg.cache_refresh == "block":
+                    state = refresh(x)
+                    refresh_fwd += 1.0
+                # live window: full canvas when uncached; the policy's
+                # fixed-width slice when cached (window-relative coords,
+                # mirroring drive_cached_block)
+                win_lo = 0 if not cached else \
+                    (lo if static_lo is None else static_lo)
+                x_win = x[:, win_lo:win_lo + win]
+                wpos = win_lo + jnp.arange(win)
+                in_block = (wpos >= lo) & (wpos < hi)
+                scale = win / total if cached else 1.0
+                if cached:
+                    def mf(w, _st=state, _lo=win_lo):
+                        return cfwd(w, jnp.int32(_lo),
+                                    _tile_state(_st, w.shape[0] // b))
+                    wcarry = carry_window(strat, carry, win_lo, win)
+                else:
+                    mf, wcarry = cfwd, carry
+                wcarry = strat.begin_block(wcarry, x_win, in_block)
                 # guard: a strategy always commits ≥1 token/example/step,
                 # so a block can never need more than bs·4 steps
                 for i in range(bs * 4):
-                    active = in_block[None, :] & (x == cfg.mask_token_id)
+                    active = in_block[None, :] & \
+                        (x_win == cfg.mask_token_id)
                     if not bool(jax.device_get(jnp.any(active))):
                         break
                     rng, step_rng = jax.random.split(rng)
                     n = int(sched[blk, min(i, last)])
-                    x, carry, fwd_n = strat.step(step_rng, carry, x, active,
-                                                 mf, cfg, dcfg, n)
+                    x_win, wcarry, fwd_n = strat.step(
+                        step_rng, wcarry, x_win, active, mf, cfg, dcfg, n)
                     stats.steps += 1
-                    stats.forward_equivalents += fwd_n
+                    stats.forward_equivalents += fwd_n * scale
+                if cached:
+                    x = jax.lax.dynamic_update_slice_in_dim(
+                        x, x_win, win_lo, axis=1)
+                    carry = carry_unwindow(strat, carry, wcarry, win_lo)
+                else:
+                    x, carry = x_win, wcarry
                 yield BlockEvent(blk, lo, hi, x)
             x.block_until_ready()
+            stats.forward_equivalents += refresh_fwd
         self._merge_carry_stats(stats, strat, carry)
         stats.wall_time = time.perf_counter() - t0
         return x, stats
@@ -736,6 +872,21 @@ class Decoder:
                 f"got unexpected keyword argument(s) {sorted(unknown)}; "
                 f"conditioning extras must be one of "
                 f"{sorted(_CONDITIONING_KEYS)}")
+
+    def _check_cached(self, extras) -> None:
+        """Entry validation for ``cache_policy != 'none'`` decodes."""
+        validate_cache_policy(self.cfg, self.dcfg)
+        if self._params is None:
+            raise ValueError(
+                "cache_policy != 'none' requires a Decoder built from "
+                "params (a bare model_fn cannot drive the cache capture "
+                "or the windowed forwards)")
+        if extras:
+            raise ValueError(
+                "conditioning extras (enc_embeds / patch_embeds) are not "
+                "supported with cache_policy != 'none': the cache capture "
+                "runs the text stack only — decode uncached, or drop the "
+                "conditioning")
 
     @staticmethod
     def _merge_carry_stats(stats: SampleStats, strat: Strategy,
@@ -751,129 +902,6 @@ class Decoder:
                     f"strategy {strat.name!r} reported carry stat {key!r} "
                     f"which is not a SampleStats field")
             setattr(stats, key, val)
-
-    def generate_cached(self, rng, prompt: jnp.ndarray,
-                        strategy: Optional[str] = None,
-                        enc_embeds=None, state_dtype=None,
-                        on_block_committed: Optional[Callable] = None
-                        ) -> Tuple[jnp.ndarray, SampleStats]:
-        """Frozen-prefix cached decoding (the Fast-dLLM-style acceleration
-        the paper's related work ships, §3).
-
-        Committed blocks live in per-layer KV caches / recurrent states;
-        each denoising step forwards only the LIVE WINDOW — the active
-        block plus the still-masked future blocks — against the frozen
-        prefix (DESIGN.md §3: the suffix must stay live, masked-diffusion
-        models read the future mask tokens as a length signal).  Per-step
-        cost drops from O(L²) toward O((L−prefix)·L) as blocks commit.
-
-        Requires a params-mode Decoder (window forwards need raw weights).
-
-        This path always drives blocks from host (``dcfg.fused_blocks``
-        does not apply): the live window shrinks block by block, so the
-        window shapes are block-varying and cannot ride a fixed-shape
-        ``lax.scan`` carry — see DESIGN.md "one dispatch per request".
-        """
-        if self._params is None:
-            raise ValueError("generate_cached requires a Decoder built "
-                             "from params (a bare model_fn cannot drive "
-                             "the window forwards)")
-        from repro.models.model import (encode, init_decode_state,
-                                        set_valid_length)
-
-        cfg, dcfg = self.cfg, self.dcfg
-        strat = resolve_strategy(strategy or dcfg.strategy)
-        b, lp = prompt.shape
-        gen, bs, num_blocks, sched = self._geometry()
-        total = lp + gen
-        dtype = state_dtype or jnp.float32
-
-        win_fwd = self._window_fn(None)
-        extend_kv = self._window_fn("kv")
-        extend_rec = self._window_fn("recurrent")
-
-        enc_out = None
-        if cfg.is_encdec and enc_embeds is not None:
-            enc_out = encode(self._params, enc_embeds, cfg)
-        state = init_decode_state(cfg, b, total, dtype, enc_out=enc_out,
-                                  valid_length=0)
-
-        # prefill: k/v of the prompt must be encoded WITH the masked
-        # answer region visible (bidirectional context carries the length
-        # signal), so the kv-extend runs over [prompt | masks] and the
-        # valid length is reset to the prompt; causal recurrent states
-        # advance over the prompt only (they never see the future).
-        stats = SampleStats(tokens_generated=b * gen)
-        t0 = time.perf_counter()
-        x = fully_masked(cfg, prompt, gen)
-        all_pos = jnp.arange(total, dtype=jnp.int32)[None].repeat(b, 0)
-        _, state = extend_kv(x, all_pos, state)
-        state = set_valid_length(state, lp)
-        _, state = extend_rec(prompt, all_pos[:, :lp], state)
-        stats.forward_equivalents += 1
-
-        carry = strat.init_carry_shaped(cfg, dcfg, b, total)
-        steps_c = jnp.zeros((), jnp.int32)
-        fwd_c = jnp.zeros((), jnp.float32)
-        fused = dcfg.fused_loop and strat.supports_fused
-        run_blk = self._cached_runner(strat) if fused else None
-        last = sched.shape[1] - 1
-        for blk in range(num_blocks):
-            lo, hi = lp + blk * bs, lp + (blk + 1) * bs
-            # live window = active block + still-masked future blocks
-            win_pos = jnp.arange(lo, total, dtype=jnp.int32)[None] \
-                .repeat(b, 0)
-            wlen = total - lo
-            in_block = jnp.arange(wlen) < bs
-            scale = wlen / (total - lp)
-            # positional carries ride the live window, like x itself
-            wcarry = _carry_window(strat, carry, lo)
-
-            if fused:
-                new_win, rng, steps_c, fwd_c, wcarry = run_blk(
-                    x[:, lo:], rng, state, jnp.asarray(sched[blk]),
-                    steps_c, fwd_c, wcarry, win_pos, in_block,
-                    jnp.float32(scale))
-                x = jax.lax.dynamic_update_slice_in_dim(x, new_win, lo,
-                                                        axis=1)
-            else:
-                def model_fn(w, _state=state, _pos=win_pos):
-                    reps = w.shape[0] // b
-                    pos = jnp.tile(_pos, (reps, 1)) if reps > 1 else _pos
-                    return win_fwd(w, pos, _tile_state(_state, reps))[0]
-
-                wcarry = strat.begin_block(wcarry, x[:, lo:], in_block)
-                for i in range(bs * 4):
-                    x_win = x[:, lo:]
-                    active = in_block[None, :] & \
-                        (x_win == cfg.mask_token_id)
-                    if not bool(jax.device_get(jnp.any(active))):
-                        break
-                    rng, step_rng = jax.random.split(rng)
-                    new_win, wcarry, fwd_n = strat.step(
-                        step_rng, wcarry, x_win, active, model_fn, cfg,
-                        dcfg, int(sched[blk, min(i, last)]))
-                    x = jax.lax.dynamic_update_slice_in_dim(x, new_win, lo,
-                                                            axis=1)
-                    stats.steps += 1
-                    stats.forward_equivalents += fwd_n * scale
-            carry = _carry_unwindow(strat, carry, wcarry, lo)
-            # block committed: k/v from the live window (future context
-            # kept), then valid length clipped to the committed block;
-            # recurrent states advance over the block only
-            _, state = extend_kv(x[:, lo:], win_pos, state)
-            state = set_valid_length(state, hi)
-            _, state = extend_rec(x[:, lo:hi], win_pos[:, :bs], state)
-            stats.forward_equivalents += 1
-            if on_block_committed is not None:
-                on_block_committed(blk, lo, hi, x)
-        x.block_until_ready()
-        if fused:
-            stats.steps = int(jax.device_get(steps_c))
-            stats.forward_equivalents += float(jax.device_get(fwd_c))
-        self._merge_carry_stats(stats, strat, carry)
-        stats.wall_time = time.perf_counter() - t0
-        return x, stats
 
     # -- introspection -----------------------------------------------------
     def cache_info(self) -> CacheInfo:

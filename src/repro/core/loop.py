@@ -34,15 +34,24 @@ schedules are scanned arrays, the strategy carry rides the scan carry
 across blocks, and per-block streaming survives as an *ordered*
 ``jax.experimental.io_callback`` (see DESIGN.md "one dispatch per
 request").  ``DecodeConfig.fused_blocks=False`` keeps the per-block host
-driver for debugging; the cached path always uses it (its window shapes
-are block-varying).
+driver for debugging and block-grain scheduling.
+
+``drive_request_cached`` is the KV-cached variant of the same scan
+(``DecodeConfig.cache_policy`` ∈ ``{prefix, dual}``, DESIGN.md "The KV
+cache"): the fixed-shape cache captured by ``capture_cache`` rides the
+scan carry, each block decodes a fixed-width live window against it
+(``drive_cached_block``), and the block boundary optionally refreshes
+the cache with one full capture forward — all inside the single
+dispatch.  Every window shape is static (``prefix``: the whole
+generation region at a static offset; ``dual``: one block at a traced
+offset), which is what lets the cached path ride ``lax.scan`` at all —
+the legacy shrinking-window path could not.
 
 Runner construction and cross-call caching live in ``core/decoder.py``:
 the ``Decoder`` owns a params-keyed, weak-referenced runner cache so
 repeat decodes — the serving engine, benchmark warmup+measure pairs —
-reuse one compilation per strategy × shape without pinning model weights
-in an ``lru_cache``.  ``block_runner`` below survives as a deprecation
-shim over that cache.
+reuse one compilation per strategy × shape × cache policy without
+pinning model weights in an ``lru_cache``.
 
 When is the host loop still right?  Set ``DecodeConfig.fused_loop=False``
 to step-debug a strategy (prints / pdb inside step functions), to inspect
@@ -161,29 +170,123 @@ def drive_request(strategy, model_fn: Callable, cfg: ModelConfig,
     return out
 
 
-def block_runner(model_fn: Callable, strategy: str, cfg: ModelConfig,
-                 dcfg: DecodeConfig, n_per_step: int) -> Callable:
-    """Deprecated pre-Decoder entry point, kept for one release.
+def carry_window(strategy, carry, lo, width: int):
+    """Cached path: slice a positional carry's per-column leaves to the
+    live window ``[:, lo:lo+width]``, exactly like the canvas itself
+    (``lo`` may be traced).  Carries of strategies without
+    ``positional_carry`` pass through whole."""
+    strategy = as_strategy(strategy)
+    if not strategy.positional_carry:
+        return carry
+    pos, glob = carry
+    return jax.tree.map(
+        lambda a: jax.lax.dynamic_slice_in_dim(a, lo, width, axis=1),
+        pos), glob
 
-    Returns ``run(x, rng, lo, steps, fwd) -> (x, rng, steps, fwd)`` with
-    ``lo`` (traced int32) the block's start column.  Backed by the
-    ``Decoder`` runner cache, so it shares compilations with the new API
-    — and, unlike the old ``lru_cache``, drops them when ``model_fn`` is
-    garbage-collected instead of pinning it forever.
+
+def carry_unwindow(strategy, carry_full, carry_win, lo):
+    """Write a block's updated window carry back into the full-canvas
+    positional leaves (inverse of ``carry_window``)."""
+    strategy = as_strategy(strategy)
+    if not strategy.positional_carry:
+        return carry_win
+    pos_full, _ = carry_full
+    pos_win, glob = carry_win
+    pos = jax.tree.map(
+        lambda full, win: jax.lax.dynamic_update_slice_in_dim(
+            full, win, lo, axis=1), pos_full, pos_win)
+    return pos, glob
+
+
+def window_geometry(dcfg: DecodeConfig, total: int):
+    """(window width, static window start or None) for a cache policy.
+
+    ``prefix`` keeps the WHOLE generation region live — fixed width
+    ``gen_length`` at the static offset ``total - gen_length`` (committed
+    blocks are re-scored every step, so decoding within the generation is
+    exact; only the prompt's deep-layer K/V are frozen).  ``dual``
+    (Fast-dLLM) keeps only the active block live — fixed width
+    ``block_size`` at the traced block offset; prompt, committed blocks
+    AND the masked suffix are all served from the cache (the suffix K/V
+    go stale within a block — the documented approximation)."""
+    if dcfg.cache_policy == "prefix":
+        return dcfg.gen_length, total - dcfg.gen_length
+    return dcfg.block_size, None
+
+
+def drive_cached_block(strategy, cached_fn: Callable, cfg: ModelConfig,
+                       dcfg: DecodeConfig, x: jnp.ndarray, rng, lo,
+                       sched, steps, fwd, carry, state):
+    """One block of KV-cached decoding (traceable building block).
+
+    Slices the policy's live window out of the canvas, runs the block's
+    denoising ``while_loop`` against the fixed-shape cache ``state``
+    (``cached_fn(x_win, win_lo, state) -> logits``, read-only w.r.t. the
+    cache), and writes the window back.  Forward-equivalents are
+    pro-rated by ``window/total``.  Returns ``(x, rng, steps, fwd,
+    carry)``; ``state`` is not advanced — refreshes are the caller's
+    (block-boundary) concern.
     """
-    from repro.core.decoder import Decoder
-    from repro.core.strategies import resolve_strategy
+    strategy = as_strategy(strategy)
+    bs = dcfg.block_size
+    total = x.shape[1]
+    win, static_lo = window_geometry(dcfg, total)
+    win_lo = jnp.int32(static_lo) if static_lo is not None else lo
+    x_win = jax.lax.dynamic_slice_in_dim(x, win_lo, win, axis=1)
+    wpos = win_lo + jnp.arange(win)
+    in_block = (wpos >= lo) & (wpos < lo + bs)
+    wcarry = carry_window(strategy, carry, win_lo, win)
+    x_win, rng, steps, fwd, wcarry = drive_block(
+        strategy, lambda w: cached_fn(w, win_lo, state), cfg, dcfg, sched,
+        x_win, rng, in_block, steps, fwd, wcarry, fwd_scale=win / total)
+    x = jax.lax.dynamic_update_slice_in_dim(x, x_win, win_lo, axis=1)
+    carry = carry_unwindow(strategy, carry, wcarry, win_lo)
+    return x, rng, steps, fwd, carry
 
-    strat = resolve_strategy(strategy)
-    run6 = Decoder(model_fn, cfg, dcfg)._plain_runner(strat)
-    carry0 = strat.init_carry(cfg, dcfg)
-    # constant commit width: a length-1 schedule (the step index clamps)
-    sched = jnp.full((1,), n_per_step, jnp.int32)
 
-    # the cache only weakrefs model_fn; the returned runner must pin it
-    # (matching the seed contract — callers pass the jit expression inline)
-    def run(x, rng, lo, steps, fwd, _model_fn=model_fn):
-        x, rng, steps, fwd, _ = run6(x, rng, lo, sched, steps, fwd, carry0)
-        return x, rng, steps, fwd
+def drive_request_cached(strategy, cached_fn: Callable,
+                         refresh_fn: Callable, cfg: ModelConfig,
+                         dcfg: DecodeConfig, x: jnp.ndarray, rng,
+                         block_los: jnp.ndarray, schedules: jnp.ndarray,
+                         steps, fwd, carry=(),
+                         emit: Optional[Callable] = None):
+    """Whole-request KV-cached decoding as one ``lax.scan``.
 
-    return run
+    ``refresh_fn(canvas) -> state`` is the full-forward cache capture
+    (``models.model.capture_cache`` under the hood): it runs once up
+    front as the prefill and — when ``dcfg.cache_refresh == 'block'`` —
+    again at every later block boundary, inside the scan via
+    ``lax.cond``, so the whole request stays a single dispatch.  Each
+    refresh costs one forward-equivalent; windowed steps cost
+    ``window/total``.  The cache state rides the scan carry as ordinary
+    traced data (never a baked const — ANA103 checks the trace).
+    Returns ``(x, rng, steps, fwd, carry)`` exactly like
+    ``drive_request``.
+    """
+    strategy = as_strategy(strategy)
+    bs = dcfg.block_size
+    refresh_each = dcfg.cache_refresh == "block"
+
+    state = refresh_fn(x)                     # prefill = block-0 refresh
+    fwd = fwd + jnp.float32(1.0)
+
+    def scan_body(c, xs):
+        blk, lo, sched = xs
+        canvas, key, s, f, sc, st = c
+        if refresh_each:
+            st = jax.lax.cond(blk > 0, refresh_fn, lambda cv: st, canvas)
+            f = f + jnp.where(blk > 0, jnp.float32(1.0), jnp.float32(0.0))
+        canvas, key, s, f, sc = drive_cached_block(
+            strategy, cached_fn, cfg, dcfg, canvas, key, lo, sched,
+            s, f, sc, st)
+        if emit is not None:
+            io_callback(emit, None, blk, lo, lo + bs, canvas, ordered=True)
+        return (canvas, key, s, f, sc, st), None
+
+    num_blocks = block_los.shape[0]
+    xs = (jnp.arange(num_blocks, dtype=jnp.int32),
+          jnp.asarray(block_los, jnp.int32),
+          jnp.asarray(schedules, jnp.int32))
+    (x, rng, steps, fwd, carry, _), _ = jax.lax.scan(
+        scan_body, (x, rng, steps, fwd, carry, state), xs)
+    return x, rng, steps, fwd, carry

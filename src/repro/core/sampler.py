@@ -1,38 +1,26 @@
-"""Deprecated function-style sampler entry points (paper §5.1 pipeline).
+"""``make_model_fn`` — the supported helper for building a conditioned
+forward from params (paper §5.1 pipeline).
 
-The semi-autoregressive block sampler — generation length 256 in blocks of
-64, free decoding order *within* a block (where the strategy earns its
-keep) — now lives in the first-class ``Decoder`` object
-(``core/decoder.py``), which owns the block loop for both execution modes,
-the cross-call compiled-runner cache, RNG threading, stats, and per-block
-streaming callbacks.  Strategies are ``Strategy`` objects in an extensible
-registry (``core/strategies.py``).
+The function-style sampler entry points that used to live here
+(``generate`` / ``generate_cached``) are gone: the semi-autoregressive
+block sampler is the first-class ``Decoder`` object (``core/decoder.py``),
+which owns the block loop for every cache policy, the cross-call
+compiled-runner cache, RNG threading, stats, and per-block streaming
+callbacks.  The old cached entry point maps onto the policy axis::
 
-This module keeps the original free functions as thin deprecation shims
-for one release::
+    Decoder(model_fn, cfg, dcfg).generate(rng, prompt)        # plain
+    Decoder(params, cfg,
+            replace(dcfg, cache_policy="prefix")).generate(rng, prompt)
 
-    generate(rng, model_fn, prompt, cfg, dcfg)         # plain decoding
-    generate_cached(rng, params, prompt, cfg, dcfg)    # frozen-prefix
-
-are token-for-token equivalent to::
-
-    Decoder(model_fn, cfg, dcfg).generate(rng, prompt)
-    Decoder(params, cfg, dcfg).generate_cached(rng, prompt)
-
-and share the same runner cache, so mixing old and new call styles costs
-no extra compilations.  ``make_model_fn`` remains the supported helper
-for building a conditioned forward from params.  New code should construct
-a ``Decoder`` directly.
+(DESIGN.md "The KV cache" has the migration note.)
 """
 from __future__ import annotations
 
-import warnings
-from typing import Callable, Optional
+from typing import Callable
 
 import jax
-import jax.numpy as jnp
 
-from repro.configs.base import DecodeConfig, ModelConfig
+from repro.configs.base import ModelConfig
 from repro.core.decoder import Decoder, SampleStats  # noqa: F401 (re-export)
 
 
@@ -59,36 +47,3 @@ def make_model_fn(params, cfg: ModelConfig, **extras) -> Callable:
         return forward(params, x, cfg, **kw)[0]
 
     return model_fn
-
-
-def generate(rng, model_fn: Callable, prompt: jnp.ndarray,
-             cfg: ModelConfig, dcfg: DecodeConfig,
-             strategy: Optional[str] = None) -> tuple:
-    """Deprecated: use ``Decoder(model_fn, cfg, dcfg).generate(...)``.
-
-    Decode ``gen_length`` tokens after ``prompt`` (B, Lp).  Returns
-    (tokens (B, Lp+gen), SampleStats).  Token-for-token equivalent to the
-    Decoder path (it *is* the Decoder path) and shares its runner cache.
-    """
-    warnings.warn("repro.core.generate() is deprecated; use "
-                  "Decoder(model_fn, cfg, dcfg).generate(rng, prompt)",
-                  DeprecationWarning, stacklevel=2)
-    return Decoder(model_fn, cfg, dcfg).generate(rng, prompt,
-                                                 strategy=strategy)
-
-
-def generate_cached(rng, params, prompt: jnp.ndarray, cfg: ModelConfig,
-                    dcfg: DecodeConfig, strategy: Optional[str] = None,
-                    enc_embeds=None, state_dtype=None) -> tuple:
-    """Deprecated: use ``Decoder(params, cfg, dcfg).generate_cached(...)``.
-
-    Frozen-prefix cached decoding (DESIGN.md §3).  Unlike the seed-era
-    implementation, window forwards and the fused block runner come from
-    the params-keyed cross-call cache — repeat calls compile nothing.
-    """
-    warnings.warn("repro.core.generate_cached() is deprecated; use "
-                  "Decoder(params, cfg, dcfg).generate_cached(rng, prompt)",
-                  DeprecationWarning, stacklevel=2)
-    return Decoder(params, cfg, dcfg).generate_cached(
-        rng, prompt, strategy=strategy, enc_embeds=enc_embeds,
-        state_dtype=state_dtype)

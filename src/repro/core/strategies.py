@@ -311,35 +311,6 @@ def available_strategies() -> Tuple[str, ...]:
     return tuple(sorted(_REGISTRY))
 
 
-def get_strategy(name: str, fused: bool = False) -> Callable:
-    """Deprecated pre-Decoder lookup: returns a carry-less step callable
-    ``(rng, x, active, model_fn, cfg, dcfg, n) -> (x, forwards)``.
-
-    Kept for one release; use ``resolve_strategy`` (Strategy objects) or
-    the ``Decoder`` instead.  Only valid for stateless strategies — the
-    legacy signature has nowhere to thread a carry.
-    """
-    strat = resolve_strategy(name)
-    bound = strat.fused_step if fused else strat.step
-
-    def legacy_step(rng, x, active, model_fn, cfg, dcfg, n):
-        carry = strat.init_carry(cfg, dcfg)
-        if jax.tree.leaves(carry) and not strat.carry_is_observational:
-            # a fresh carry per step would silently freeze the strategy
-            # in its step-0 behavior — refuse (observational carries,
-            # e.g. FDM-A's phase counters, are safe to drop: the legacy
-            # signature has nowhere to report stats anyway)
-            raise TypeError(
-                f"strategy {strat.name!r} carries per-decode state; the "
-                f"deprecated get_strategy() signature cannot thread it — "
-                f"use resolve_strategy()/Decoder instead")
-        new_x, _, fwd = bound(rng, carry, x, active,
-                              model_fn, cfg, dcfg, n)
-        return new_x, fwd
-
-    return legacy_step
-
-
 # --------------------------------------------------------------------------
 # baseline step functions (kept as plain functions; adapters register them)
 # --------------------------------------------------------------------------

@@ -290,6 +290,114 @@ def attention_window(p: Params, x, positions, cfg: ModelConfig,
 
 
 # --------------------------------------------------------------------------
+# fixed-shape block cache (cache_policy = prefix | dual)
+# --------------------------------------------------------------------------
+#
+# Unlike the shrinking-window path above (variable cache length, host-side
+# valid-length bookkeeping), these two entry points keep every shape static
+# so they can ride the fused drivers: the cache always covers ALL ``total``
+# positions of the canvas, and the live window writes its fresh K/V into a
+# functional copy at a *traced* offset.  No validity mask is needed —
+# attention is bidirectional and every column is context: cached outside
+# the window, freshly recomputed inside it.
+
+def gqa_capture(p: Params, x, positions, cfg: ModelConfig
+                ) -> Tuple[jnp.ndarray, KVCache]:
+    """Full attention that also returns the K/V it computed — the
+    prefill/refresh op of the fixed-shape block cache."""
+    q, k, v = _project_qkv(p, x, positions, cfg)
+    out = self_attention(q, k, v, cfg.head_dim ** -0.5,
+                         window=cfg.sliding_window)
+    out = constrain(out.reshape(*x.shape[:2], -1), ("dp", None, "tp"))
+    # length is an array so the cache stacks/slices cleanly across the
+    # per-group layer axis (it is never consulted: the cache is always full)
+    return (out @ p["wo"].astype(x.dtype),
+            KVCache(k=k, v=v, length=jnp.int32(x.shape[1])))
+
+
+def gqa_cached(p: Params, x, positions, cfg: ModelConfig, cache: KVCache,
+               win_start) -> jnp.ndarray:
+    """A W-row live window attends over the full fixed-length cache with
+    its own fresh K/V scattered in at traced ``win_start`` (read-only with
+    respect to the cache — refreshes go through ``gqa_capture``)."""
+    dt = x.dtype
+    w = x.shape[1]
+    q, k_new, v_new = _project_qkv(p, x, positions, cfg)
+    k = jax.lax.dynamic_update_slice_in_dim(cache.k.astype(dt), k_new,
+                                            win_start, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache.v.astype(dt), v_new,
+                                            win_start, axis=1)
+    mask = None
+    if cfg.sliding_window:
+        mask = band_mask(win_start + jnp.arange(w),
+                         jnp.arange(cache.k.shape[1]), cfg.sliding_window)
+    out = _sdpa(q, k, v, mask, cfg.head_dim ** -0.5)
+    out = out.reshape(*x.shape[:2], -1)
+    return out @ p["wo"].astype(dt)
+
+
+def mla_capture(p: Params, x, positions, cfg: ModelConfig
+                ) -> Tuple[jnp.ndarray, KVCache]:
+    """Materialized MLA forward returning the latent cache (c_kv, k_rope)."""
+    m = cfg.mla
+    dt = x.dtype
+    b, l, _ = x.shape
+    nq = cfg.num_heads
+    q_nope, q_rope, c_kv, k_rope = _mla_latents(p, x, positions, cfg)
+    k_nope = (c_kv @ p["wk_b"].astype(dt)).reshape(b, l, nq,
+                                                   m.qk_nope_head_dim)
+    v = (c_kv @ p["wv_b"].astype(dt)).reshape(b, l, nq, m.v_head_dim)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                  (b, l, nq, m.qk_rope_head_dim))], axis=-1)
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    out = self_attention(q, k, v, scale)
+    return (out.reshape(b, l, -1) @ p["wo"].astype(dt),
+            KVCache(k=c_kv, v=k_rope, length=jnp.int32(l)))
+
+
+def mla_cached(p: Params, x, positions, cfg: ModelConfig, cache: KVCache,
+               win_start) -> jnp.ndarray:
+    """Live window against the fixed-length MLA latent cache (per-head K/V
+    reconstructed from all latents — fine at sampler scale)."""
+    m = cfg.mla
+    dt = x.dtype
+    b, w, _ = x.shape
+    nq = cfg.num_heads
+    q_nope, q_rope, c_new, kr_new = _mla_latents(p, x, positions, cfg)
+    c_all = jax.lax.dynamic_update_slice_in_dim(cache.k.astype(dt), c_new,
+                                                win_start, axis=1)
+    kr_all = jax.lax.dynamic_update_slice_in_dim(cache.v.astype(dt), kr_new,
+                                                 win_start, axis=1)
+    s = c_all.shape[1]
+    k_nope = (c_all @ p["wk_b"].astype(dt)).reshape(b, s, nq,
+                                                    m.qk_nope_head_dim)
+    vv = (c_all @ p["wv_b"].astype(dt)).reshape(b, s, nq, m.v_head_dim)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(kr_all[:, :, None, :],
+                                  (b, s, nq, m.qk_rope_head_dim))], axis=-1)
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    out = _sdpa(q, k, vv, None, scale)
+    return out.reshape(b, w, -1) @ p["wo"].astype(dt)
+
+
+def attention_capture(p: Params, x, positions, cfg: ModelConfig
+                      ) -> Tuple[jnp.ndarray, KVCache]:
+    if cfg.attention == "mla":
+        return mla_capture(p, x, positions, cfg)
+    return gqa_capture(p, x, positions, cfg)
+
+
+def attention_cached(p: Params, x, positions, cfg: ModelConfig,
+                     cache: KVCache, win_start) -> jnp.ndarray:
+    if cfg.attention == "mla":
+        return mla_cached(p, x, positions, cfg, cache, win_start)
+    return gqa_cached(p, x, positions, cfg, cache, win_start)
+
+
+# --------------------------------------------------------------------------
 # MLA (DeepSeek-V2)
 # --------------------------------------------------------------------------
 

@@ -23,7 +23,8 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import ssm as ssm_lib
-from repro.models.attention import (attention_decode, attention_forward,
+from repro.models.attention import (attention_cached, attention_capture,
+                                    attention_decode, attention_forward,
                                     attention_window, init_attention,
                                     init_cache)
 from repro.models.layers import (Params, apply_mlp, apply_norm, init_mlp,
@@ -168,6 +169,58 @@ def block_decode(p: Params, x, positions, cfg: ModelConfig, idx: int,
         h = apply_norm(p["norm2"], x, cfg)
         x = x + apply_mlp(p["mlp"], h, cfg)
     return x, state
+
+
+# --------------------------------------------------------------------------
+# fixed-shape block cache (cache_policy = prefix | dual; attention archs)
+# --------------------------------------------------------------------------
+
+def block_capture(p: Params, x, positions, cfg: ModelConfig, idx: int,
+                  enc_out: Optional[jnp.ndarray] = None
+                  ) -> Tuple[jnp.ndarray, Any]:
+    """Full-sequence forward that also emits this layer's fixed-shape
+    K/V cache (prefill / block-boundary refresh).  Attention-backed
+    archs only — recurrent state cannot ride a scatter-style cache; the
+    Decoder gates ssm/hybrid out before ever reaching here."""
+    x = constrain(x, ("dp", "sp", None))
+    h = apply_norm(p["norm1"], x, cfg)
+    attn_out, kv = attention_capture(p["attn"], h, positions, cfg)
+    x = x + attn_out
+
+    if cfg.is_encdec and enc_out is not None:
+        h = apply_norm(p["norm_x"], x, cfg)
+        x = x + _cross_attention(p["xattn"], h, enc_out, cfg)
+
+    if _is_moe_layer(cfg, idx):
+        h = apply_norm(p["norm2"], x, cfg)
+        out, _ = moe_forward(p["moe"], h, cfg, capacity_factor=2.0)
+        x = x + out
+    elif cfg.d_ff:
+        h = apply_norm(p["norm2"], x, cfg)
+        x = x + apply_mlp(p["mlp"], h, cfg)
+    return x, kv
+
+
+def block_cached(p: Params, x, positions, cfg: ModelConfig, idx: int,
+                 cache, win_start,
+                 enc_out: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """A W-row live window (B, W, d) against this layer's full-length
+    cache; read-only with respect to the cache (refresh = block_capture)."""
+    h = apply_norm(p["norm1"], x, cfg)
+    x = x + attention_cached(p["attn"], h, positions, cfg, cache, win_start)
+
+    if cfg.is_encdec and enc_out is not None:
+        h = apply_norm(p["norm_x"], x, cfg)
+        x = x + _cross_attention(p["xattn"], h, enc_out, cfg)
+
+    if _is_moe_layer(cfg, idx):
+        h = apply_norm(p["norm2"], x, cfg)
+        out, _ = moe_forward(p["moe"], h, cfg, capacity_factor=2.0)
+        x = x + out
+    elif cfg.d_ff:
+        h = apply_norm(p["norm2"], x, cfg)
+        x = x + apply_mlp(p["mlp"], h, cfg)
+    return x
 
 
 # --------------------------------------------------------------------------

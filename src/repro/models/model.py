@@ -261,6 +261,89 @@ def decode_step(params: Params, token: jnp.ndarray, position: jnp.ndarray,
                                enc_out=state.enc_out)
 
 
+# --------------------------------------------------------------------------
+# fixed-shape block cache (cache_policy = prefix | dual)
+# --------------------------------------------------------------------------
+
+def capture_cache(params: Params, tokens: jnp.ndarray, cfg: ModelConfig,
+                  enc_out: Optional[jnp.ndarray] = None) -> DecodeState:
+    """One full bidirectional pass over the canvas (B, total) capturing
+    every layer's fixed-shape K/V — the prefill / block-boundary refresh
+    op of the block cache (DESIGN.md "The KV cache").  Skips the LM head:
+    refresh logits are never consumed (the next windowed forward
+    re-scores the live rows anyway).  Unlike ``init_decode_state`` +
+    extend, the cache always covers ALL ``total`` positions, so every
+    shape stays static and the result can ride a ``lax.scan`` carry."""
+    b, l = tokens.shape
+    x = embed_tokens(params["embed"], tokens, cfg,
+                     positions=jnp.arange(l)[None].repeat(b, 0))
+    pos = make_positions(cfg, b, l)
+    groups = _layer_groups(cfg)
+    states = []
+    for g_params, g_idx in zip(params["blocks"], groups):
+        rep_idx = g_idx[0]
+
+        def body(h, layer_params):
+            return blocks_lib.block_capture(layer_params, h, pos, cfg,
+                                            rep_idx, enc_out=enc_out)
+
+        if len(g_idx) == 1:
+            x, kv = body(x, jax.tree.map(lambda a: a[0], g_params))
+            states.append(jax.tree.map(lambda a: a[None], kv))
+        elif cfg.unroll:
+            kvs = []
+            for i in range(len(g_idx)):
+                x, kv = body(x, jax.tree.map(lambda a: a[i], g_params))
+                kvs.append(kv)
+            states.append(jax.tree.map(lambda *xs: jnp.stack(xs), *kvs))
+        else:
+            x, kvs = jax.lax.scan(body, x, g_params)
+            states.append(kvs)
+    return DecodeState(layer_states=tuple(states), enc_out=enc_out)
+
+
+def forward_cached(params: Params, tokens: jnp.ndarray, win_start,
+                   state: DecodeState, cfg: ModelConfig) -> jnp.ndarray:
+    """Score a W-row live window (B, W) at traced offset ``win_start``
+    against the fixed-shape cache from ``capture_cache``.  Read-only with
+    respect to the cache: each layer scatters its fresh window K/V into a
+    functional copy and attends over all ``total`` keys — cached context
+    outside the window, fresh inside.  Returns logits (B, W, V)."""
+    b, w = tokens.shape
+    epos = win_start + jnp.arange(w, dtype=jnp.int32)[None].repeat(b, 0)
+    x = embed_tokens(params["embed"], tokens, cfg, positions=epos)
+    if cfg.rope == "mrope":
+        # slice the full-canvas position ids so cached and fresh K agree
+        total = state.layer_states[0].k.shape[2]
+        pos = jax.lax.dynamic_slice_in_dim(
+            make_positions(cfg, b, total), win_start, w, axis=-1)
+    else:
+        pos = epos
+    groups = _layer_groups(cfg)
+    for g_params, g_states, g_idx in zip(params["blocks"],
+                                         state.layer_states, groups):
+        rep_idx = g_idx[0]
+
+        def body(h, scan_in):
+            layer_params, layer_cache = scan_in
+            h2 = blocks_lib.block_cached(layer_params, h, pos, cfg, rep_idx,
+                                         layer_cache, win_start,
+                                         enc_out=state.enc_out)
+            return h2, None
+
+        if len(g_idx) == 1:
+            one = jax.tree.map(lambda a: a[0], (g_params, g_states))
+            x, _ = body(x, one)
+        elif cfg.unroll:
+            for i in range(len(g_idx)):
+                one = jax.tree.map(lambda a: a[i], (g_params, g_states))
+                x, _ = body(x, one)
+        else:
+            x, _ = jax.lax.scan(body, x, (g_params, g_states))
+    x = apply_norm(params["norm_f"], x, cfg)
+    return lm_head(params["embed"], x, cfg)
+
+
 def set_valid_length(state: DecodeState, length) -> DecodeState:
     """Reset the attention caches' valid count (after a live-window "kv"
     extend wrote k/v for future-mask positions beyond the commit)."""

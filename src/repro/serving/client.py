@@ -110,6 +110,7 @@ class ServingClient:
                  steps: Optional[int] = None,
                  gen_length: Optional[int] = None,
                  block_size: Optional[int] = None,
+                 cache_policy: Optional[str] = None,
                  deadline_s: Optional[float] = None,
                  wait: bool = True) -> Dict:
         """Submit a prompt (token-id list, or a string if the server has
@@ -120,6 +121,7 @@ class ServingClient:
         for key, val in (("model", model), ("strategy", strategy),
                          ("steps", steps), ("gen_length", gen_length),
                          ("block_size", block_size),
+                         ("cache_policy", cache_policy),
                          ("deadline_s", deadline_s)):
             if val is not None:
                 body[key] = val

@@ -59,7 +59,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import DecodeConfig, ModelConfig
-from repro.core.decoder import Decoder, SampleStats
+from repro.core.decoder import Decoder, SampleStats, validate_cache_policy
 from repro.core.strategies import resolve_strategy
 from repro.serving.faults import FaultInjector, validate_block_tokens
 
@@ -146,23 +146,29 @@ class ServingEngine:
                steps: Optional[int] = None,
                gen_length: Optional[int] = None,
                block_size: Optional[int] = None,
+               cache_policy: Optional[str] = None,
                deadline_s: Optional[float] = None) -> int:
         """Queue a prompt; returns the request id.
 
         The keyword overrides build this request's effective
-        ``DecodeConfig`` (validated HERE — an unknown strategy or an
-        infeasible geometry raises at the submission boundary instead of
-        deep inside a decode batch).  Requests only batch with requests
-        sharing the same effective config.  ``deadline_s`` bounds QUEUE
-        time: a request still queued after it is dropped as expired at
-        the next batch selection (admission control for overload — decode
-        work is never wasted on a request whose client gave up).
+        ``DecodeConfig`` (validated HERE — an unknown strategy, an
+        infeasible geometry, or a cache policy the model cannot serve
+        raises at the submission boundary instead of deep inside a decode
+        batch).  Requests only batch with requests sharing the same
+        effective config.  ``deadline_s`` bounds QUEUE time: a request
+        still queued after it is dropped as expired at the next batch
+        selection (admission control for overload — decode work is never
+        wasted on a request whose client gave up).
         """
         over = {k: v for k, v in dict(
             strategy=strategy, steps=steps, gen_length=gen_length,
-            block_size=block_size).items() if v is not None}
+            block_size=block_size, cache_policy=cache_policy).items()
+            if v is not None}
+        # replace() re-runs DecodeConfig.__post_init__, so an unknown
+        # cache_policy raises ValueError right here
         dcfg = dataclasses.replace(self.dcfg, **over) if over else self.dcfg
         resolve_strategy(dcfg.strategy)          # KeyError on unknown name
+        validate_cache_policy(self.cfg, dcfg)    # arch can serve the policy?
         for knob in ("gen_length", "block_size", "steps"):
             if getattr(dcfg, knob) < 1:
                 raise ValueError(f"{knob}={getattr(dcfg, knob)} must be "
@@ -218,8 +224,16 @@ class ServingEngine:
         bucket AND same effective DecodeConfig (frozen → hashable) AND
         same bisection cohort (supervision re-queues a failed batch's
         halves under fresh group ids precisely so they cannot re-merge
-        into the batch that just failed)."""
-        return (self._bucket_len(req.prompt.shape[0]), req.dcfg, req.group)
+        into the batch that just failed).
+
+        ``cache_policy`` appears explicitly even though ``dcfg`` already
+        subsumes it: policies decode through DIFFERENT executables with
+        different numerics (dual is approximate), so mixed-policy
+        co-batching would be a correctness bug, not a batching
+        inefficiency — the explicit key component keeps that invariant
+        standing if the effective-config keying is ever relaxed."""
+        return (self._bucket_len(req.prompt.shape[0]), req.dcfg,
+                req.dcfg.cache_policy, req.group)
 
     # -- supervision hooks (used by the async scheduler) -------------------
     def requeue(self, requests: List[Request],

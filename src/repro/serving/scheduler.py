@@ -262,13 +262,15 @@ class AsyncScheduler:
                steps: Optional[int] = None,
                gen_length: Optional[int] = None,
                block_size: Optional[int] = None,
+               cache_policy: Optional[str] = None,
                deadline_s: Optional[float] = None) -> int:
         """Admit a request; returns its rid.  Raises ``QueueFullError``
         at max queue depth, ``SchedulerDrainingError`` while draining,
         ``KeyError`` on an unknown strategy and ``ValueError`` on
-        infeasible geometry (both from ``engine.submit``'s boundary
-        validation).  Under pressure the degradation ladder cheapens the
-        request's effective step budget before the queue-full cliff."""
+        infeasible geometry or an unknown/unservable ``cache_policy``
+        (all from ``engine.submit``'s boundary validation).  Under
+        pressure the degradation ladder cheapens the request's effective
+        step budget before the queue-full cliff."""
         if self._closed:
             raise RuntimeError("scheduler is shut down")
         if self._draining:
@@ -296,6 +298,7 @@ class AsyncScheduler:
         rid = self.engine.submit(prompt, strategy=strategy, steps=steps,
                                  gen_length=gen_length,
                                  block_size=block_size,
+                                 cache_policy=cache_policy,
                                  deadline_s=deadline_s)
         self._streams[rid] = _Stream()
         self.counters["submitted"] += 1

@@ -9,14 +9,15 @@ web framework, zero new runtime dependencies.  The endpoint surface:
        "model": "name",                    # default: first registered
        "strategy": "fdm_a", "steps": 32,   # per-request DecodeConfig
        "gen_length": 64, "block_size": 16, # overrides (validated against
-                                           # the registry / geometry)
+       "cache_policy": "prefix",           # the registry / geometry /
+                                           # cache-policy axis)
        "deadline_s": 5.0,                  # max QUEUED time
        "wait": false}                      # true = block for the result
 
   ``wait=false`` (default) answers ``202 {"rid", "model", "stream"}``
-  immediately; follow the ``stream`` URL for SSE.  ``wait=true`` blocks
-  until the terminal event and answers it as JSON.  Unknown strategy or
-  bad geometry → 400 at the boundary; queue at max depth → 429.
+  immediately; follow the ``stream`` URL for SSE.  Unknown strategy,
+  bad geometry, or an unknown/unservable ``cache_policy`` → 400 at the
+  boundary; queue at max depth → 429.
 
 * ``GET /v1/stream/{rid}?model=name`` — Server-Sent Events: one ``block``
   event per committed semi-AR block (the natural streaming grain of
@@ -410,6 +411,7 @@ class ServingServer:
         prompt = self._prompt_ids(req)
         for key, types in (("strategy", str), ("steps", int),
                            ("gen_length", int), ("block_size", int),
+                           ("cache_policy", str),
                            ("deadline_s", (int, float)),
                            ("model", str)):
             val = req.get(key)
@@ -432,6 +434,7 @@ class ServingServer:
                            steps=req.get("steps"),
                            gen_length=gen_length,
                            block_size=req.get("block_size"),
+                           cache_policy=req.get("cache_policy"),
                            deadline_s=req.get("deadline_s"))
         if req.get("wait"):
             event = await sched.result(rid)

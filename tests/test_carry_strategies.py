@@ -2,6 +2,8 @@
 three-driver parity for plain and cached decoding, revocation / skipped-
 forward accounting consistency, schedule-overrun (net-commit) geometry,
 and the serving-engine stats plumbing."""
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -44,9 +46,10 @@ def _dcfg(**over):
 def _run(params, dcfg, prompts=None, cached=False):
     prompts = prompts if prompts is not None \
         else jnp.full((3, 6), 2, jnp.int32)
-    dec = Decoder(params, CFG, dcfg)
-    fn = dec.generate_cached if cached else dec.generate
-    out, stats = fn(jax.random.PRNGKey(0), prompts)
+    if cached:
+        dcfg = dataclasses.replace(dcfg, cache_policy="prefix")
+    out, stats = Decoder(params, CFG, dcfg).generate(jax.random.PRNGKey(0),
+                                                     prompts)
     return np.asarray(out), stats
 
 
@@ -157,14 +160,12 @@ def test_wino_r_overruns_remainder_schedule_safely(model, driver):
     assert s.steps < 4 * 4 * 4       # well inside num_blocks · bs·4
 
 
-def test_carry_ful_strategies_reject_legacy_entry_points(model):
-    """The deprecated carry-less signatures cannot thread a positional
-    carry; they must refuse loudly, not silently mis-decode."""
-    from repro.core.strategies import get_strategy, resolve_strategy
+def test_carry_ful_strategies_reject_shapeless_init_carry(model):
+    """A positional carry needs the canvas shape; the shapeless
+    ``init_carry`` entry point must refuse loudly, not silently
+    mis-decode."""
+    from repro.core.strategies import resolve_strategy
     for name in ("wino_r", "extrapolate"):
-        with pytest.raises(TypeError, match="per-decode"):
-            get_strategy(name)(jax.random.PRNGKey(0), None, None, None,
-                               CFG, _dcfg(), 1)
         strat = resolve_strategy(name)
         with pytest.raises(TypeError, match="per-decode"):
             strat.init_carry(CFG, _dcfg())

@@ -1,10 +1,9 @@
 """The first-class Decoder / Strategy API (core/decoder.py,
 core/strategies.py): registry round-trip with a custom carry-ful strategy,
-cross-call runner-cache hits and weak eviction, deprecation-shim parity,
-and per-block streaming callbacks."""
+cross-call runner-cache hits and weak eviction, and per-block streaming
+callbacks — under every cache policy."""
 import dataclasses
 import gc
-import warnings
 
 import jax
 import jax.numpy as jnp
@@ -14,7 +13,6 @@ import pytest
 from repro.configs import DecodeConfig, get_config
 from repro.core import (Decoder, Strategy, available_strategies,
                         commit_topn, decode_cache_info, decode_cache_scope,
-                        generate, generate_cached, get_strategy,
                         register_strategy, reset_decode_cache_stats,
                         resolve_strategy, score_logits, unregister_strategy)
 from repro.core.decoder import RunnerCache
@@ -91,8 +89,9 @@ def test_custom_strategy_registry_roundtrip(model, alternating):
 def test_custom_strategy_carry_survives_cached_path(model, alternating):
     params, _ = model
     prompts = jnp.full((2, 6), 2, jnp.int32)
-    dec = Decoder(params, CFG, _dcfg(strategy="alternating"))
-    out, _ = dec.generate_cached(jax.random.PRNGKey(0), prompts)
+    dec = Decoder(params, CFG, _dcfg(strategy="alternating",
+                                     cache_policy="prefix"))
+    out, _ = dec.generate(jax.random.PRNGKey(0), prompts)
     assert not (np.asarray(out) == CFG.mask_token_id).any()
 
 
@@ -103,21 +102,6 @@ def test_register_strategy_rejects_duplicates(alternating):
         resolve_strategy("definitely-not-registered")
 
 
-def test_get_strategy_rejects_stateful_strategies(model, alternating):
-    """The deprecated carry-less signature would silently re-zero a
-    decode-steering carry every step — it must refuse instead.  FDM-A's
-    carry is observational-only (phase counters), so it stays allowed."""
-    from repro.core.strategies import get_strategy as gs
-    _, model_fn = model
-    step = gs("alternating")
-    x = jnp.full((1, 8), CFG.mask_token_id, jnp.int32)
-    active = jnp.ones((1, 8), bool)
-    with pytest.raises(TypeError, match="per-decode state"):
-        step(jax.random.PRNGKey(0), x, active, model_fn, CFG, _dcfg(), 2)
-    gs("fdm_a")(jax.random.PRNGKey(0), x, active, model_fn, CFG,
-                _dcfg(), 2)                     # does not raise
-
-
 def test_generate_rejects_unknown_extras(model):
     params, _ = model
     with pytest.raises(TypeError, match="unexpected keyword"):
@@ -126,38 +110,29 @@ def test_generate_rejects_unknown_extras(model):
             on_block_comitted=lambda *a: None)      # the typo'd spelling
 
 
-def test_get_strategy_legacy_shim_still_callable(model):
-    """The pre-Decoder lookup keeps its carry-less call signature."""
-    _, model_fn = model
-    step = get_strategy("probability")
-    x = jnp.full((1, 8), CFG.mask_token_id, jnp.int32)
-    active = jnp.ones((1, 8), bool)
-    new_x, fwd = step(jax.random.PRNGKey(0), x, active, model_fn, CFG,
-                      _dcfg(), 2)
-    assert int((new_x != CFG.mask_token_id).sum()) == 2
-    assert fwd == 1
-
-
 # --------------------------------------------------------------------------
 # cross-call cache: zero recompiles on repeat, weak eviction on GC
 # --------------------------------------------------------------------------
 
 def test_cross_call_cache_zero_recompiles(model):
     """A second decode with the same params — even through a *new*
-    Decoder, as the shims do — must neither build nor trace anything,
-    in both the plain and cached paths.  Runs against a scoped fresh
-    cache so the counter assertions can't flake on test ordering (the
-    process-wide counters see every other test's decodes)."""
+    Decoder — must neither build nor trace anything, in both the plain
+    and KV-cached paths.  Runs against a scoped fresh cache so the
+    counter assertions can't flake on test ordering (the process-wide
+    counters see every other test's decodes)."""
     params, _ = model
     prompts = jnp.full((2, 6), 2, jnp.int32)
+    cached_dcfg = _dcfg(cache_policy="prefix")
     with decode_cache_scope():
         d1 = Decoder(params, CFG, _dcfg())
         d1.generate(jax.random.PRNGKey(0), prompts)
-        d1.generate_cached(jax.random.PRNGKey(0), prompts)
+        Decoder(params, CFG, cached_dcfg).generate(jax.random.PRNGKey(0),
+                                                   prompts)
         before = decode_cache_info()
         d2 = Decoder(params, CFG, _dcfg())      # fresh but equal config
         d2.generate(jax.random.PRNGKey(1), prompts)
-        d2.generate_cached(jax.random.PRNGKey(1), prompts)
+        Decoder(params, CFG, cached_dcfg).generate(jax.random.PRNGKey(1),
+                                                   prompts)
         after = decode_cache_info()
         assert after.traces == before.traces, "recompiled on repeat decode"
         assert after.misses == before.misses, "rebuilt a cached runner"
@@ -256,50 +231,6 @@ def test_cache_evicts_model_fn_entries_too(model):
 
 
 # --------------------------------------------------------------------------
-# deprecation shims: token-for-token parity with the Decoder path
-# --------------------------------------------------------------------------
-
-def test_generate_shim_matches_decoder(model):
-    params, model_fn = model
-    prompts = jnp.full((3, 6), 2, jnp.int32)
-    dcfg = _dcfg(strategy="fdm_a")
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        out_shim, s_shim = generate(jax.random.PRNGKey(0), model_fn,
-                                    prompts, CFG, dcfg)
-    out_dec, s_dec = Decoder(model_fn, CFG, dcfg).generate(
-        jax.random.PRNGKey(0), prompts)
-    np.testing.assert_array_equal(np.asarray(out_shim), np.asarray(out_dec))
-    assert s_shim.steps == s_dec.steps
-    assert s_shim.forward_equivalents == \
-        pytest.approx(s_dec.forward_equivalents)
-
-
-def test_generate_cached_shim_matches_decoder(model):
-    params, _ = model
-    prompts = jnp.full((2, 6), 2, jnp.int32)
-    dcfg = _dcfg()
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        out_shim, s_shim = generate_cached(jax.random.PRNGKey(0), params,
-                                           prompts, CFG, dcfg)
-    out_dec, s_dec = Decoder(params, CFG, dcfg).generate_cached(
-        jax.random.PRNGKey(0), prompts)
-    np.testing.assert_array_equal(np.asarray(out_shim), np.asarray(out_dec))
-    assert s_shim.steps == s_dec.steps
-    assert s_shim.forward_equivalents == \
-        pytest.approx(s_dec.forward_equivalents)
-
-
-def test_shims_emit_deprecation_warning(model):
-    _, model_fn = model
-    prompts = jnp.full((1, 4), 2, jnp.int32)
-    with pytest.warns(DeprecationWarning):
-        generate(jax.random.PRNGKey(0), model_fn, prompts, CFG,
-                 _dcfg(gen_length=8, block_size=8, steps=8))
-
-
-# --------------------------------------------------------------------------
 # streaming: on_block_committed fires once per block, in order, under all
 # three drivers (host / per-block fused / whole-request io_callback)
 # --------------------------------------------------------------------------
@@ -334,16 +265,18 @@ def test_on_block_committed_ordering(model, driver):
 
 @pytest.mark.parametrize("driver", sorted(DRIVERS))
 def test_on_block_committed_cached_path(model, driver):
-    """The cached path keeps its per-block host driver in every mode
-    (block-varying window shapes — DESIGN.md), but the streaming contract
-    is identical: num_blocks ordered events with correct bounds."""
+    """The streaming contract is policy-independent: the KV-cached path
+    delivers the same num_blocks ordered events with correct bounds under
+    every driver (the whole-request driver folds the refreshes into the
+    same dispatch the io_callbacks fire from)."""
     params, _ = model
     prompts = jnp.full((2, 6), 2, jnp.int32)
     events = []
-    dec = Decoder(params, CFG, _dcfg(**DRIVERS[driver]))
-    dec.generate_cached(jax.random.PRNGKey(0), prompts,
-                        on_block_committed=lambda blk, lo, hi, x:
-                        events.append((blk, lo, hi)))
+    dec = Decoder(params, CFG, _dcfg(cache_policy="prefix",
+                                     **DRIVERS[driver]))
+    dec.generate(jax.random.PRNGKey(0), prompts,
+                 on_block_committed=lambda blk, lo, hi, x:
+                 events.append((blk, lo, hi)))
     assert events == [(0, 6, 14), (1, 14, 22)]
 
 
@@ -361,8 +294,8 @@ def test_streaming_and_plain_request_decodes_match(model):
     assert s_plain.steps == s_stream.steps
 
 
-def test_model_fn_decoder_rejects_cached(model):
+def test_model_fn_decoder_rejects_cache_policy(model):
     _, model_fn = model
-    with pytest.raises(ValueError):
-        Decoder(model_fn, CFG, _dcfg()).generate_cached(
+    with pytest.raises(ValueError, match="params"):
+        Decoder(model_fn, CFG, _dcfg(cache_policy="prefix")).generate(
             jax.random.PRNGKey(0), jnp.full((1, 4), 2, jnp.int32))

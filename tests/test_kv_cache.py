@@ -1,0 +1,193 @@
+"""The cache-policy axis end to end: three-driver bit-parity under both
+approximate policies for every registered strategy, policy validation at
+every trust boundary (DecodeConfig, Decoder, ServingEngine.submit),
+one-executable-per-policy compile accounting, the dual policy's forward
+saving, and the engine's refusal to co-batch requests with different
+effective cache policies."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import DecodeConfig, get_config
+from repro.core import (Decoder, decode_cache_info, decode_cache_scope,
+                        validate_cache_policy)
+from repro.models.model import init_model
+from repro.serving import ServingEngine
+
+CFG = get_config("llada-8b").reduced()
+
+STRATEGIES = ["random", "probability", "margin", "entropy", "eb", "wino",
+              "fdm", "fdm_a", "wino_r", "extrapolate"]
+
+DRIVERS = {
+    "host": dict(fused_loop=False),
+    "block": dict(fused_loop=True, fused_blocks=False),
+    "request": dict(fused_loop=True, fused_blocks=True),
+}
+
+POLICIES = ("prefix", "dual")
+
+
+@pytest.fixture(scope="module")
+def params():
+    """Untrained tiny model — cache mechanics, not output quality."""
+    return init_model(jax.random.PRNGKey(0), CFG)
+
+
+def _dcfg(**over):
+    base = dict(gen_length=16, block_size=8, steps=16, k=2, k1=2,
+                strategy="probability")
+    base.update(over)
+    return DecodeConfig(**base)
+
+
+def _prompt(length, fill=3):
+    return np.full((length,), fill, np.int32)
+
+
+# --------------------------------------------------------------------------
+# parity: host ≡ per-block fused ≡ whole-request fused, per policy
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", POLICIES)
+@pytest.mark.parametrize("strategy", STRATEGIES)
+def test_three_driver_parity_per_policy(params, strategy, policy):
+    """The cache changes *what* the model computes (windowed forwards over
+    a frozen cache), but it must not change it differently per driver:
+    tokens and step counts stay bit-identical across all three drivers
+    under a fixed policy, and forward accounting agrees to float
+    precision (refreshes counted host-side vs in-scan)."""
+    prompts = jnp.full((3, 6), 2, jnp.int32)
+    dcfg = _dcfg(strategy=strategy, cache_policy=policy)
+    runs = {}
+    for name, over in DRIVERS.items():
+        runs[name] = Decoder(params, CFG,
+                             dataclasses.replace(dcfg, **over)).generate(
+            jax.random.PRNGKey(0), prompts)
+    out_ref, s_ref = runs["host"]
+    for name in ("block", "request"):
+        out, s = runs[name]
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(out_ref),
+                                      err_msg=f"{strategy}/{policy}/{name}")
+        assert s.steps == s_ref.steps, (strategy, policy, name)
+        assert s.forward_equivalents == \
+            pytest.approx(s_ref.forward_equivalents), (strategy, policy,
+                                                       name)
+    assert not (np.asarray(out_ref) == CFG.mask_token_id).any()
+
+
+def test_dual_policy_reduces_forward_cost(params):
+    """The acceptance criterion in miniature: the dual policy's windowed
+    steps (block_size/total of a full forward each) must cost measurably
+    fewer forward-equivalents than uncached decoding of the same request,
+    refreshes included."""
+    prompts = jnp.full((2, 6), 2, jnp.int32)
+    fwd = {}
+    for policy in ("none", "dual"):
+        _, stats = Decoder(params, CFG,
+                           _dcfg(cache_policy=policy)).generate(
+            jax.random.PRNGKey(0), prompts)
+        fwd[policy] = stats.forward_equivalents
+    assert fwd["dual"] < fwd["none"]
+
+
+# --------------------------------------------------------------------------
+# validation at every boundary
+# --------------------------------------------------------------------------
+
+def test_unknown_cache_policy_rejected_at_config():
+    with pytest.raises(ValueError, match="cache_policy"):
+        _dcfg(cache_policy="lru")
+
+
+def test_dual_requires_block_refresh():
+    """dual freezes out-of-block K/V; without per-block refreshes the
+    whole canvas outside block 0 would decode against the prefill — the
+    config rejects the combination rather than silently degrading."""
+    with pytest.raises(ValueError, match="cache_refresh"):
+        _dcfg(cache_policy="dual", cache_refresh="off")
+    # prefix + refresh-off is a legal (cheapest, most approximate) point
+    _dcfg(cache_policy="prefix", cache_refresh="off")
+
+
+@pytest.mark.parametrize("name", ["xlstm-125m", "hymba-1.5b"])
+def test_recurrent_archs_reject_cache_policies(name):
+    """ssm/hybrid state is a running reduction — there are no per-position
+    K/V rows to scatter into, so only cache_policy='none' is servable."""
+    cfg = get_config(name).reduced()
+    validate_cache_policy(cfg, _dcfg())          # none: always fine
+    for policy in POLICIES:
+        with pytest.raises(ValueError, match="attention-backed"):
+            validate_cache_policy(cfg, _dcfg(cache_policy=policy))
+
+
+def test_model_fn_decoder_rejects_cached_generate(params):
+    """The cache captures per-layer K/V, which needs params — a Decoder
+    wrapped around a bare model_fn must refuse, at generate(), with an
+    actionable error."""
+    from repro.models.model import forward
+    model_fn = jax.jit(lambda x: forward(params, x, CFG)[0])
+    dec = Decoder(model_fn, CFG, _dcfg(cache_policy="prefix"))
+    with pytest.raises(ValueError, match="params"):
+        dec.generate(jax.random.PRNGKey(0), jnp.full((2, 6), 2, jnp.int32))
+
+
+# --------------------------------------------------------------------------
+# compile accounting: one executable per strategy × shape × policy
+# --------------------------------------------------------------------------
+
+def test_zero_recompiles_per_policy(params):
+    """Each policy traces its own executable on first use; repeat decodes
+    under any already-seen policy must neither build nor trace anything —
+    the cache key includes the policy, so policies never evict each
+    other."""
+    prompts = jnp.full((2, 6), 2, jnp.int32)
+    with decode_cache_scope():
+        for policy in ("none",) + POLICIES:
+            Decoder(params, CFG, _dcfg(cache_policy=policy)).generate(
+                jax.random.PRNGKey(0), prompts)
+        before = decode_cache_info()
+        for policy in ("none",) + POLICIES:     # fresh Decoders, same keys
+            Decoder(params, CFG, _dcfg(cache_policy=policy)).generate(
+                jax.random.PRNGKey(1), prompts)
+        after = decode_cache_info()
+        assert after.traces == before.traces, "recompiled on repeat decode"
+        assert after.misses == before.misses, "rebuilt a cached runner"
+        assert after.hits > before.hits
+
+
+# --------------------------------------------------------------------------
+# serving: per-request policy overrides and batch isolation
+# --------------------------------------------------------------------------
+
+def test_engine_rejects_bad_cache_policy_at_submit(params):
+    engine = ServingEngine(params, CFG, _dcfg(), max_batch=4,
+                           length_bucket=8)
+    with pytest.raises(ValueError, match="cache_policy"):
+        engine.submit(_prompt(6), cache_policy="lru")
+    assert engine.queue_depth == 0               # nothing bad was queued
+
+
+def test_mixed_cache_policies_never_share_a_batch(params):
+    """Same prompt bucket, same strategy, different cache policy →
+    separate batches (the cached runner attends over cache state the
+    uncached runner does not have; co-batching would decode one request
+    under another's policy)."""
+    engine = ServingEngine(params, CFG, _dcfg(), max_batch=4,
+                           length_bucket=8)
+    a = engine.submit(_prompt(6))
+    b = engine.submit(_prompt(6), cache_policy="prefix")
+    c = engine.submit(_prompt(6))
+    first = engine.step()
+    assert sorted(first) == sorted([a, c])       # same-policy pair
+    second = engine.step()
+    assert second == [b]
+    # b decoded under its requested policy, bit-identical to direct
+    direct, _ = Decoder(params, CFG,
+                        _dcfg(cache_policy="prefix")).generate(
+        jax.random.PRNGKey(7), np.asarray([_prompt(6)]))
+    np.testing.assert_array_equal(engine.result(b).result,
+                                  np.asarray(direct)[0])

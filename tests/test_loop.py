@@ -10,7 +10,7 @@ import numpy as np
 import pytest
 
 from repro.configs import DecodeConfig, get_config
-from repro.core import generate, generate_cached, score_logits
+from repro.core import Decoder, score_logits
 from repro.core.confidence import pallas_enabled
 from repro.models.model import forward, init_model
 from repro.serving import ServingEngine
@@ -58,9 +58,9 @@ def test_three_driver_parity(model, strategy):
     dcfg = _dcfg(strategy=strategy)
     runs = {}
     for name, over in DRIVERS.items():
-        with pytest.warns(DeprecationWarning):
-            runs[name] = generate(jax.random.PRNGKey(0), model_fn, prompts,
-                                  CFG, dataclasses.replace(dcfg, **over))
+        runs[name] = Decoder(model_fn, CFG,
+                             dataclasses.replace(dcfg, **over)).generate(
+            jax.random.PRNGKey(0), prompts)
     out_ref, s_ref = runs["host"]
     for name in ("block", "request"):
         out, s = runs[name]
@@ -151,9 +151,10 @@ def test_serving_phase_counts_exclude_pad_replicas(model):
 
 def test_fdm_a_phase_counts_cached_path(model):
     params, _ = model
-    from repro.core import Decoder
     prompts = jnp.full((1, 6), 2, jnp.int32)
-    _, stats = Decoder(params, CFG, _dcfg(strategy="fdm_a")).generate_cached(
+    _, stats = Decoder(params, CFG,
+                       _dcfg(strategy="fdm_a",
+                             cache_policy="prefix")).generate(
         jax.random.PRNGKey(0), prompts)
     assert sum(stats.phase_counts.values()) == stats.steps
 
@@ -163,14 +164,13 @@ def test_fdm_a_phase_counts_cached_path(model):
 def test_cached_fused_host_parity(model, strategy):
     params, _ = model
     prompts = jnp.full((2, 6), 2, jnp.int32)
-    dcfg = _dcfg(strategy=strategy)
-    out_f, s_f = generate_cached(jax.random.PRNGKey(0), params, prompts,
-                                 CFG,
-                                 dataclasses.replace(dcfg, fused_loop=True))
-    out_h, s_h = generate_cached(jax.random.PRNGKey(0), params, prompts,
-                                 CFG,
-                                 dataclasses.replace(dcfg,
-                                                     fused_loop=False))
+    dcfg = _dcfg(strategy=strategy, cache_policy="prefix")
+    out_f, s_f = Decoder(params, CFG,
+                         dataclasses.replace(dcfg, fused_loop=True)
+                         ).generate(jax.random.PRNGKey(0), prompts)
+    out_h, s_h = Decoder(params, CFG,
+                         dataclasses.replace(dcfg, fused_loop=False)
+                         ).generate(jax.random.PRNGKey(0), prompts)
     np.testing.assert_array_equal(np.asarray(out_f), np.asarray(out_h))
     assert s_f.steps == s_h.steps
     assert s_f.forward_equivalents == pytest.approx(s_h.forward_equivalents)
@@ -202,9 +202,11 @@ def test_one_compilation_per_strategy_and_shape(model, strategy,
     prompts = jnp.full((2, 6), 2, jnp.int32)
     dcfg = _dcfg(strategy=strategy, **DRIVERS[driver])
     with decode_cache_scope():
-        generate(jax.random.PRNGKey(0), counting_fn, prompts, CFG, dcfg)
+        Decoder(counting_fn, CFG, dcfg).generate(jax.random.PRNGKey(0),
+                                                 prompts)
         assert len(traces) == expected_traces, traces
-        generate(jax.random.PRNGKey(1), counting_fn, prompts, CFG, dcfg)
+        Decoder(counting_fn, CFG, dcfg).generate(jax.random.PRNGKey(1),
+                                                 prompts)
         assert len(traces) == expected_traces, "recompiled on second call"
 
 
@@ -238,9 +240,11 @@ def test_kernel_on_decode_path(model):
     prompts = jnp.full((1, 6), 2, jnp.int32)
     dcfg = _dcfg(gen_length=8, block_size=8, steps=8,
                  strategy="probability", use_pallas_kernel=True)
-    out_k, _ = generate(jax.random.PRNGKey(0), model_fn, prompts, CFG, dcfg)
-    out_r, _ = generate(jax.random.PRNGKey(0), model_fn, prompts, CFG,
-                        dataclasses.replace(dcfg, use_pallas_kernel=False))
+    out_k, _ = Decoder(model_fn, CFG, dcfg).generate(jax.random.PRNGKey(0),
+                                                     prompts)
+    out_r, _ = Decoder(model_fn, CFG,
+                       dataclasses.replace(dcfg, use_pallas_kernel=False)
+                       ).generate(jax.random.PRNGKey(0), prompts)
     np.testing.assert_array_equal(np.asarray(out_k), np.asarray(out_r))
 
 

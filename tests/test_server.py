@@ -156,6 +156,29 @@ def test_bad_geometry_is_400(client):
     assert err.value.status == 400              # not a 500 via div-by-zero
 
 
+def test_unknown_cache_policy_is_400(client):
+    """An unknown policy dies at the submission boundary (ExecutionConfig
+    validation inside engine.submit), not deep inside a decode."""
+    with pytest.raises(ServerError) as err:
+        client.generate([3, 5, 2], cache_policy="lru")
+    assert err.value.status == 400
+    assert "cache_policy" in err.value.message
+    with pytest.raises(ServerError) as err:     # wrong type, typed check
+        client.generate([3, 5, 2], cache_policy=7)
+    assert err.value.status == 400
+    assert "wrong type" in err.value.message
+
+
+def test_cache_policy_request_over_http(client, params):
+    """A prefix-cached request through the full HTTP stack completes and
+    matches the direct prefix-cached Decoder output bit-for-bit."""
+    prompt = [3, 5, 2, 7, 4, 6]
+    res = client.generate(prompt, cache_policy="prefix")
+    assert res["status"] == "ok"
+    assert res["tokens"] == _direct(params, prompt,
+                                    cache_policy="prefix").tolist()
+
+
 def test_unknown_model_is_404_ish(client):
     with pytest.raises(ServerError) as err:
         client.generate([3, 5, 2], model="missing")

@@ -7,7 +7,7 @@ import numpy as np
 import pytest
 
 from repro.configs import DecodeConfig, TrainConfig, get_config
-from repro.core import generate
+from repro.core import Decoder
 from repro.data import CharTokenizer, TaskDataset
 from repro.models.model import forward
 from repro.serving import ServingEngine
@@ -44,8 +44,8 @@ def test_every_strategy_completes(trained, strategy):
     gen = ds.seq_len - prompts.shape[1]
     dcfg = DecodeConfig(gen_length=gen, block_size=gen, steps=gen,
                         strategy=strategy, k=2, k1=2)
-    out, stats = generate(jax.random.PRNGKey(0), model_fn, prompts, CFG,
-                          dcfg)
+    out, stats = Decoder(model_fn, CFG, dcfg).generate(
+        jax.random.PRNGKey(0), prompts)
     assert out.shape == (4, ds.seq_len)
     assert not (out == CFG.mask_token_id).any(), strategy
     assert stats.steps >= 1
@@ -57,21 +57,24 @@ def test_fdm_a_uses_fewer_steps_than_fdm(trained):
     prompts = jnp.asarray(ds.prompts_only(ds.eval_batch(4)))
     gen = ds.seq_len - prompts.shape[1]
     base = dict(gen_length=gen, block_size=gen, steps=gen, k=2, k1=2)
-    _, s_fdm = generate(jax.random.PRNGKey(0), model_fn, prompts, CFG,
-                        DecodeConfig(strategy="fdm", **base))
-    _, s_a = generate(jax.random.PRNGKey(0), model_fn, prompts, CFG,
-                      DecodeConfig(strategy="fdm_a", **base))
+    _, s_fdm = Decoder(model_fn, CFG, DecodeConfig(strategy="fdm", **base)
+                       ).generate(jax.random.PRNGKey(0), prompts)
+    _, s_a = Decoder(model_fn, CFG, DecodeConfig(strategy="fdm_a", **base)
+                     ).generate(jax.random.PRNGKey(0), prompts)
     assert s_a.steps <= s_fdm.steps
     assert s_a.tokens_per_forward >= s_fdm.tokens_per_forward
 
 
 def test_cached_generation_matches_full(trained):
-    """Frozen-prefix cached decoding (generate_cached) must track the full
-    re-forward sampler closely and leave no masks.  Threshold 0.85: the
-    approximation diverges more on an uncertain model, and this fixture
-    is deliberately lightly trained (a well-trained testbed model
-    measures ≥0.99 — see benchmarks/table5)."""
-    from repro.core import generate_cached
+    """KV-cached decoding must track the full re-forward sampler closely
+    and leave no masks.  ``prefix`` keeps the whole generation region
+    live (only prompt deep-layer K/V are frozen between refreshes) so it
+    tracks tightly; ``dual`` additionally serves the masked suffix from
+    the cache — the Fast-dLLM approximation — so its floor is looser.
+    Thresholds reflect a deliberately lightly-trained fixture (a
+    well-trained testbed model measures ≥0.99 for prefix — see
+    benchmarks/kv_cache)."""
+    import dataclasses
     params, ds, tok, _ = trained
     model_fn = jax.jit(lambda x: forward(params, x, CFG)[0])
     prompts = jnp.asarray(ds.prompts_only(ds.eval_batch(8)))
@@ -80,13 +83,15 @@ def test_cached_generation_matches_full(trained):
     for strategy in ["probability", "fdm_a"]:
         dcfg = DecodeConfig(gen_length=gen, block_size=bs, steps=gen,
                             strategy=strategy)
-        o1, _ = generate(jax.random.PRNGKey(0), model_fn, prompts, CFG,
-                         dcfg)
-        o2, _ = generate_cached(jax.random.PRNGKey(0), params, prompts,
-                                CFG, dcfg)
-        assert not (o2 == CFG.mask_token_id).any()
-        agree = float(jnp.mean((o1 == o2).astype(jnp.float32)))
-        assert agree >= 0.85, (strategy, agree)
+        o1, _ = Decoder(model_fn, CFG, dcfg).generate(
+            jax.random.PRNGKey(0), prompts)
+        for policy, floor in (("prefix", 0.85), ("dual", 0.6)):
+            o2, _ = Decoder(params, CFG,
+                            dataclasses.replace(dcfg, cache_policy=policy)
+                            ).generate(jax.random.PRNGKey(0), prompts)
+            assert not (o2 == CFG.mask_token_id).any()
+            agree = float(jnp.mean((o1 == o2).astype(jnp.float32)))
+            assert agree >= floor, (strategy, policy, agree)
 
 
 def test_serving_engine_roundtrip(trained):
