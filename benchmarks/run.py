@@ -177,7 +177,7 @@ def main() -> None:
                             serving_load, table1_decode_order,
                             table2_fdm_scaling, table3_fdm_a,
                             table4_arch_generality,
-                            table5_cached_serving)
+                            table5_cached_serving, trace_overhead)
     n_eval = 16 if args.fast else 0
     suites = {
         "table1": lambda: table1_decode_order.run(n_eval=n_eval),
@@ -208,6 +208,7 @@ def main() -> None:
         "kernel": kernel_confidence.run,
         "loop": lambda: _loop_with_regression_gate(
             batches=(1, 4) if args.fast else None),
+        "trace": lambda: trace_overhead.run(fast=args.fast),
         "kv_cache": lambda: _kv_cache_with_regression_gate(
             fast=args.fast),
     }

@@ -20,6 +20,14 @@ state once-for-all (they quantify over *future* strategies):
           keeps every canvas/carry leaf out of float64 — a Python-float
           constant that silently promotes doubles the FLOPs the day x64
           is enabled.
+  ANA105  the step-telemetry contract: wrapping the strategy in
+          ``tracing(...)`` (``core/tracebuffer.py``) must preserve every
+          contract above — the TraceBuffer rides the carry, so a
+          non-fixed-shape write surfaces as an ANA101 break of the
+          wrapped strategy — and with trace **off** the raw drivers'
+          jaxprs must contain no ``trace_capacity``-sized array at all:
+          telemetry that leaks into the trace=off graph would change
+          compiled decode for every request that never asked for it.
 
 Everything runs through ``jax.eval_shape`` / ``jax.make_jaxpr`` on a
 tiny synthetic harness (a weightless one-hot "model", B=2, 12-column
@@ -323,6 +331,90 @@ def check_strategy(strategy, *, batch: int = 2, prompt_len: int = 4,
     return out
 
 
+def check_trace_telemetry(strategy_name: str, *,
+                          const_bytes: int = DEFAULT_CONST_BYTES
+                          ) -> List[Finding]:
+    """ANA105, two directions per registered strategy:
+
+    * trace **on**: ``tracing(strategy)`` must hold every fused-decode
+      contract itself — its carry carries the TraceBuffer, so the
+      ANA101 fixed-point check *is* the proof that telemetry writes are
+      fixed-shape, and ANA102/103/104 prove the wrapper adds no
+      callbacks, baked constants, or f64 promotion.
+    * trace **off**: the raw drivers' jaxprs must be entirely free of
+      ``trace_capacity(dcfg)``-sized arrays — the buffer must be
+      unreachable from the fused roots unless the wrapper was applied.
+    """
+    from repro.core.loop import drive_block, drive_request
+    from repro.core.strategies import as_strategy
+    from repro.core.tracebuffer import trace_capacity, tracing
+
+    strat = as_strategy(strategy_name)
+    where = f"strategy:{strategy_name}"
+    out: List[Finding] = []
+
+    wrapped = tracing(strat)
+    for f in check_strategy(wrapped, const_bytes=const_bytes, path=where):
+        out.append(make_finding(
+            "ANA105", where, 0,
+            f"tracing({strategy_name}) breaks {f.rule}: {f.message}"))
+
+    cfg, dcfg = _tiny_setup(strategy_name)
+    cap = trace_capacity(dcfg)
+    model_fn = _toy_model_fn(cfg)
+    batch, prompt_len = 2, 4
+    length = prompt_len + dcfg.gen_length
+    x0 = jnp.where(jnp.arange(length)[None, :] < prompt_len, 2,
+                   cfg.mask_token_id).astype(jnp.int32)
+    x0 = jnp.broadcast_to(x0, (batch, length))
+    key = jax.random.PRNGKey(0)
+    in_block = (jnp.arange(length) >= prompt_len) & (
+        jnp.arange(length) < prompt_len + dcfg.block_size)
+    sched = jnp.full((dcfg.block_size,), 1, jnp.int32)
+    block_los = jnp.asarray([prompt_len, prompt_len + dcfg.block_size],
+                            jnp.int32)
+    schedules = jnp.broadcast_to(sched, (2, sched.shape[0]))
+    steps0 = jnp.asarray(0, jnp.int32)
+    fwd0 = jnp.asarray(0.0, jnp.float32)
+    try:
+        carry0 = strat.init_carry_shaped(cfg, dcfg, batch, length)
+    except Exception:
+        return out          # the base sweep already reports ANA101
+
+    def scan(label, fn, args):
+        try:
+            jaxpr = jax.make_jaxpr(fn)(*args)
+        except Exception:
+            return          # ditto: tracing failures are ANA101's job
+        hits = set()
+        for eqn in _iter_eqns(jaxpr):
+            for v in list(eqn.invars) + list(eqn.outvars):
+                shape = tuple(getattr(getattr(v, "aval", None),
+                                      "shape", ()) or ())
+                if cap in shape:
+                    hits.add(shape)
+        if hits:
+            out.append(make_finding(
+                "ANA105", where, 0,
+                f"[{strategy_name}] {label} (trace=off) jaxpr contains "
+                f"trace_capacity({cap})-sized arrays {sorted(hits)} — "
+                "the TraceBuffer must be unreachable unless "
+                "dcfg.trace wrapped the strategy"))
+
+    plain_args = (x0, key, steps0, fwd0, carry0)
+    scan("drive_block",
+         lambda x, k, s, f, c: drive_block(strat, model_fn, cfg, dcfg,
+                                           sched, x, k, in_block, s, f,
+                                           c),
+         plain_args)
+    scan("drive_request",
+         lambda x, k, s, f, c: drive_request(strat, model_fn, cfg, dcfg,
+                                             x, k, block_los, schedules,
+                                             s, f, c),
+         plain_args)
+    return out
+
+
 def assert_conforms(strategy) -> None:
     """Raise ``ConformanceError`` listing every violated contract."""
     problems = check_strategy(strategy)
@@ -335,9 +427,11 @@ def assert_conforms(strategy) -> None:
 def conformance_findings(names: Optional[Sequence[str]] = None,
                          const_bytes: int = DEFAULT_CONST_BYTES
                          ) -> List[Finding]:
-    """Check every registered strategy (the CLI's jaxpr grain)."""
+    """Check every registered strategy (the CLI's jaxpr grain): the base
+    fused-decode contracts plus the ANA105 telemetry contract."""
     from repro.core.strategies import available_strategies
     out: List[Finding] = []
     for name in names if names is not None else available_strategies():
         out.extend(check_strategy(name, const_bytes=const_bytes))
+        out.extend(check_trace_telemetry(name, const_bytes=const_bytes))
     return out

@@ -34,6 +34,8 @@ RULES = {
     "ANA102": ("error", "unsanctioned callback in fused jaxpr"),
     "ANA103": ("warning", "large constant baked into fused jaxpr"),
     "ANA104": ("error", "float64 promotion under enable_x64"),
+    "ANA105": ("error", "step-telemetry contract broken (TraceBuffer "
+                        "not fixed-shape, or reachable when trace=off)"),
     "ANA201": ("error", "cross-thread access to loop-affine state"),
     "ANA202": ("error", "await-spanning read-modify-write"),
     "ANA203": ("error", "lock discipline violation"),

@@ -347,6 +347,16 @@ class DecodeConfig:
     extrap_beta: float = 0.5
     extrap_horizon: float = 2.0
     extrap_min_obs: int = 2
+    # observability (DESIGN.md "Observability"): record per-step decode
+    # telemetry on device — commit step/confidence per position,
+    # commit/revocation counts, forward-skip flags, FDM-A phase — in a
+    # fixed-shape TraceBuffer riding the strategy carry
+    # (core/tracebuffer.py), read back with ONE device_get per decode.
+    # Off by default: the disabled path never sees the buffer (the
+    # strategy is only wrapped when trace=True, and the dcfg is part of
+    # every runner-cache subkey), so trace=off decodes stay bit-identical
+    # and share their compiled executables with pre-trace configs.
+    trace: bool = False
 
     def __post_init__(self):
         # Constructing the grouped view validates the execution knobs, so
@@ -473,6 +483,11 @@ class ServerConfig:
     max_body_bytes: int = 1 << 20      # POST body cap (413 beyond; chunked
                                        # bodies are rejected outright)
     retry_after_s: float = 1.0         # Retry-After header on 429/503
+    profile_dir: str = ""              # non-empty = bracket each decoded
+                                       # batch with jax.profiler
+                                       # start_trace/stop_trace, dumping
+                                       # device profiles here (ops use:
+                                       # flip on, reproduce, flip off)
     supervisor: SupervisorConfig = SupervisorConfig()
     degrade: DegradeConfig = DegradeConfig()
 

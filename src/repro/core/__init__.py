@@ -17,6 +17,9 @@ Public API:
                 streaming
   loop        — device-resident fused drivers (plain + KV-cached)
   sampler     — ``make_model_fn``, the conditioned-forward helper
+  tracebuffer — on-device step telemetry (``dcfg.trace``): the fixed-
+                shape TraceBuffer carry adapter + the DecodeTrace
+                host read-back
 """
 from repro.core.confidence import (Scores, global_confidence,
                                    local_confidence, score_logits)
@@ -41,6 +44,8 @@ from repro.core.strategies import (StatelessStrategy, Strategy,
                                    rank_desc,
                                    register_strategy, resolve_strategy,
                                    unregister_strategy)
+from repro.core.tracebuffer import (DecodeTrace, TracingStrategy,
+                                    trace_capacity, tracing)
 
 __all__ = [
     "Scores", "score_logits", "local_confidence", "global_confidence",
@@ -58,5 +63,6 @@ __all__ = [
     "masked_cross_entropy", "token_accuracy",
     "apply_mask", "fully_masked", "mask_positions", "sample_mask_ratio",
     "SampleStats", "make_model_fn",
+    "DecodeTrace", "TracingStrategy", "tracing", "trace_capacity",
     "commit_topn", "rank_desc",
 ]

@@ -73,6 +73,7 @@ from repro.core.loop import (carry_unwindow, carry_window,
                              window_geometry)
 from repro.core.masking import fully_masked
 from repro.core.strategies import Strategy, resolve_strategy
+from repro.core.tracebuffer import DecodeTrace, TracingStrategy, tracing
 
 
 @dataclass
@@ -96,6 +97,9 @@ class SampleStats:
     # committed straight from the carry.  Plain path invariant:
     # steps == forward_equivalents + skipped_forwards (the cached path
     # pro-rates forwards by window size but counts skips raw).
+    trace: Optional[DecodeTrace] = None
+    # per-step telemetry (dcfg.trace=True only): commit order/confidence,
+    # revocations, skips, phases — core/tracebuffer.py.
 
     @property
     def tps(self) -> float:
@@ -104,6 +108,25 @@ class SampleStats:
     @property
     def tokens_per_forward(self) -> float:
         return self.tokens_generated / max(self.forward_equivalents, 1)
+
+    def as_dict(self) -> Dict[str, Any]:
+        """The one stable wire/summary form of a decode's stats — the
+        HTTP terminal event, ``ServingEngine.summary()``, and the
+        benchmarks all read THIS instead of hand-picking fields (they
+        had drifted).  JSON-safe, unrounded — aggregators sum these, so
+        precision loss here would show up as drift in their invariants;
+        the trace object stays off the wire (it has its own endpoint)."""
+        return {
+            "steps": int(self.steps),
+            "forward_equivalents": float(self.forward_equivalents),
+            "wall_time_s": float(self.wall_time),
+            "tokens_generated": int(self.tokens_generated),
+            "tps": float(self.tps),
+            "tokens_per_forward": float(self.tokens_per_forward),
+            "revocations": float(self.revocations),
+            "skipped_forwards": float(self.skipped_forwards),
+            "phase_counts": dict(self.phase_counts),
+        }
 
 
 class BlockEvent(NamedTuple):
@@ -343,6 +366,10 @@ class Decoder:
         else:
             self._model_fn, self._params = None, model
         self._key, self._anchor = RunnerCache.key_for(model)
+        # optional telemetry hook ``(block_index, t_start_s, t_end_s)``
+        # fired around each KV-cache refresh on the blockwise path (the
+        # serving layer turns these into trace spans); None = free
+        self.on_cache_refresh: Optional[Callable] = None
 
     # -- geometry ----------------------------------------------------------
     def _geometry(self) -> Tuple[int, int, int, np.ndarray]:
@@ -679,6 +706,12 @@ class Decoder:
         self._check_extras(extras)
         cfg, dcfg = self.cfg, self.dcfg
         strat = resolve_strategy(strategy or dcfg.strategy)
+        if dcfg.trace:
+            # the memoized wrapper keeps strategy identity stable across
+            # calls, so traced decodes get their own cached runners
+            # (per the dcfg-keyed subkeys) without recompiling per call
+            # — and trace=off decodes never see the wrapper at all
+            strat = tracing(strat)
         cached = dcfg.cache_policy != "none"
         if cached:
             self._check_cached(extras)
@@ -734,6 +767,8 @@ class Decoder:
                 holder["cb"] = None
         stats.steps = int(jax.device_get(steps))
         stats.forward_equivalents = float(jax.device_get(fwd))
+        if isinstance(strat, TracingStrategy):
+            stats.trace = strat.extract(carry)
         self._merge_carry_stats(stats, strat, carry)
         stats.wall_time = time.perf_counter() - t0
         return x, stats
@@ -762,6 +797,8 @@ class Decoder:
         """
         self._check_extras(extras)
         strat = resolve_strategy(strategy or self.dcfg.strategy)
+        if self.dcfg.trace:
+            strat = tracing(strat)
         # geometry errors should raise HERE, not at the first next()
         geometry = self._geometry()
         return self._blocks_gen(strat, rng, prompt, geometry, extras)
@@ -783,7 +820,21 @@ class Decoder:
         # Each capture is one full forward, accounted host-side so all
         # three drivers report the same forward_equivalents.
         refresh = self._refresh_runner() if cached else None
-        state = refresh(x) if cached else None
+        hook = self.on_cache_refresh
+
+        def timed_refresh(canvas, blk):
+            if hook is None:
+                return refresh(canvas)
+            # hook installed = serving-layer tracing: the extra sync is
+            # paid only then, and the blockwise caller syncs per block
+            # anyway (it materializes each block's tokens on host)
+            t0r = time.perf_counter()
+            st = refresh(canvas)
+            jax.block_until_ready(st)
+            hook(blk, t0r, time.perf_counter())
+            return st
+
+        state = timed_refresh(x, 0) if cached else None
         refresh_fwd = 1.0 if cached else 0.0
         fused = dcfg.fused_loop and strat.supports_fused
         if fused:
@@ -794,7 +845,7 @@ class Decoder:
             for blk in range(num_blocks):
                 lo = lp + blk * bs
                 if cached and blk > 0 and dcfg.cache_refresh == "block":
-                    state = refresh(x)
+                    state = timed_refresh(x, blk)
                     refresh_fwd += 1.0
                 if cached:
                     x, rng, steps, fwd, carry = run(
@@ -819,7 +870,7 @@ class Decoder:
             for blk in range(num_blocks):
                 lo, hi = lp + blk * bs, lp + (blk + 1) * bs
                 if cached and blk > 0 and dcfg.cache_refresh == "block":
-                    state = refresh(x)
+                    state = timed_refresh(x, blk)
                     refresh_fwd += 1.0
                 # live window: full canvas when uncached; the policy's
                 # fixed-width slice when cached (window-relative coords,
@@ -860,6 +911,8 @@ class Decoder:
                 yield BlockEvent(blk, lo, hi, x)
             x.block_until_ready()
             stats.forward_equivalents += refresh_fwd
+        if isinstance(strat, TracingStrategy):
+            stats.trace = strat.extract(carry)
         self._merge_carry_stats(stats, strat, carry)
         stats.wall_time = time.perf_counter() - t0
         return x, stats

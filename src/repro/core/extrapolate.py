@@ -79,6 +79,14 @@ class ExtrapolationStrategy(Strategy):
         _, (skipped,) = carry
         return {"skipped_forwards": float(jax.device_get(skipped))}
 
+    def trace_confidence(self, carry, dcfg: DecodeConfig):
+        """Commit confidence for the trace: the extrapolated trajectory
+        ``ema + horizon·slope`` — the value the commit decision actually
+        used.  Read from the post-step carry; a model_fn tap is unsafe
+        here (the forward sits inside ``fused_step``'s lax.cond)."""
+        (ema, slope, _, _), _ = carry
+        return ema + dcfg.extrap_horizon * slope
+
     # -- the two step halves, shared by the host and fused variants ------
     def _plan(self, carry, x, active, dcfg: DecodeConfig, n):
         """(ready, n_arr, skip): which positions may commit from the

@@ -106,6 +106,10 @@ class FDMAStrategy(Strategy):
 
     name = "fdm_a"
     carry_is_observational = True    # the counter never steers decoding
+    trace_confidence_tap = True      # the scoring forward is unconditional
+                                     # and full-canvas (the cond-guarded
+                                     # search forward is K-folded, which
+                                     # the tap's shape guard skips)
 
     def init_carry(self, cfg: ModelConfig, dcfg: DecodeConfig):
         return jnp.zeros((4,), jnp.int32)
@@ -116,6 +120,13 @@ class FDMAStrategy(Strategy):
     def phase_counts(self, carry) -> Dict[str, int]:
         vals = jax.device_get(carry)
         return {k: int(v) for k, v in zip(PHASES, vals)}
+
+    def trace_phase(self, carry_before, carry_after):
+        """The step's phase for the trace: each step adds the batch's
+        phase histogram to the carry, so the argmax of the increment is
+        the batch-dominant phase (exact at batch 1 — every example is in
+        one phase)."""
+        return jnp.argmax(carry_after - carry_before).astype(jnp.int32)
 
     def step(self, rng, carry, x, active, model_fn: ModelFn,
              cfg: ModelConfig, dcfg: DecodeConfig, n) -> Tuple:

@@ -116,6 +116,13 @@ class Strategy:
     # column-aligned with the canvas, so the cached path can slice them
     # alongside its live window.  False (default) = the carry is opaque
     # and rides every driver whole.
+    trace_confidence_tap: bool = False
+    # True = the strategy's FIRST full-canvas model_fn call per step is
+    # unconditional, so the tracing adapter (core/tracebuffer.py) may
+    # wrap model_fn and capture that call's logits for commit-confidence
+    # attribution.  False (default) = the call may sit inside a lax.cond
+    # branch (extrapolate's skip) where a tap would leak tracers; the
+    # adapter falls back to ``trace_confidence``.
 
     def forwards_per_step(self, dcfg: DecodeConfig) -> float:
         """Nominal batched-forward count per step (upper bound for
@@ -166,6 +173,22 @@ class Strategy:
         the end of decode — never per step."""
         return {}
 
+    def trace_confidence(self, carry, dcfg: DecodeConfig):
+        """Trace-safe (B, L) confidence map read from the POST-step
+        carry, for strategies whose commit confidence lives in the carry
+        rather than a tappable forward (``trace_confidence_tap = False``
+        with cross-step state — extrapolate's trajectory).  ``None``
+        (default) = no confidence attribution; the tracing adapter
+        records NaN at commits."""
+        return None
+
+    def trace_phase(self, carry_before, carry_after):
+        """Trace-safe scalar int32 phase id derived from one step's
+        carry transition, for phase-switching strategies (FDM-A's
+        explore/accel/local_only/balance).  ``None`` (default) = no
+        phase attribution (recorded as -1)."""
+        return None
+
     def step(self, rng, carry, x, active, model_fn: ModelFn,
              cfg: ModelConfig, dcfg: DecodeConfig, n) -> Tuple:
         raise NotImplementedError
@@ -186,6 +209,10 @@ class StatelessStrategy(Strategy):
     is the pre-Decoder signature; ``fused_fn`` (optional) is its
     trace-safe form.
     """
+
+    # every builtin stateless step opens with one unconditional
+    # full-canvas model_fn(x) — safe for the tracing adapter to tap
+    trace_confidence_tap = True
 
     def __init__(self, name: str, step_fn: Callable,
                  fused_fn: Optional[Callable] = None,

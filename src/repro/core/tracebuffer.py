@@ -1,0 +1,297 @@
+"""On-device step telemetry: the ``TraceBuffer`` and its strategy adapter.
+
+Observability for the decode *order* — the thing the paper is about —
+cannot come from host-side logging: the fused drivers run a whole block
+(or a whole request) as one compiled dispatch, and a per-step host sync
+would undo exactly the overhead the fused loop removed (ANA001).  So the
+trace rides the machinery that already crosses every step boundary: the
+strategy carry.
+
+``TracingStrategy`` wraps any registered ``Strategy`` and widens its
+carry with a fixed-shape buffer, written with ``.at[ptr].set`` inside
+``fused_step``/``step`` — pure array math, trace-safe in
+``lax.while_loop``/``lax.scan``, zero extra host syncs.  Because it is
+*just a strategy*, every driver (host step loop, per-block fused,
+whole-request fused, and their KV-cached twins) records the identical
+trace with no driver changes at all.  Layout, per decode of ``S`` steps
+on a ``(B, L)`` canvas (``cap = gen_length·4``, the drivers' global
+step bound — each block is capped at ``block_size·4`` steps):
+
+* positional half (column-aligned, windowed on the cached path):
+  ``commit_step (B, L) i32`` — the step index at which each position's
+  surviving token committed (-1 = prompt / never committed; a revoked
+  position re-records at its final commit), and ``commit_conf (B, L)
+  f32`` — the strategy's confidence for that commit (NaN = the strategy
+  offers no attribution).
+* global half: per-step ``commits``/``revocations (cap,) i32``,
+  ``skipped (cap,) bool`` (the step committed without a forward),
+  ``phase (cap,) i32`` (FDM-A's regime, -1 = n/a), ``block (cap,) i32``,
+  plus the write pointer ``ptr`` (= steps recorded — it doubles as the
+  step index, since steps don't receive a global counter) and the
+  current block index ``blk`` (incremented by ``begin_block``).
+
+Commit/revocation detection is strategy-agnostic: a canvas diff against
+``mask_token_id`` before/after the inner step.  Confidence attribution
+is per-strategy: strategies whose first full-canvas forward is
+unconditional declare ``trace_confidence_tap = True`` and the adapter
+wraps ``model_fn`` to capture that call's logits (the shape guard skips
+FDM's K-folded search forward); strategies that forward inside
+``lax.cond`` (extrapolate) expose ``trace_confidence(carry, dcfg)``
+instead — tapping a cond branch would leak tracers.
+
+``DecodeTrace`` is the host-side read-back: ONE ``device_get`` at the
+end of decode, after the canvas is already synced.  Its
+``commit_histogram`` derives per-step FINAL commit counts from
+``commit_step`` (not the raw per-step ``commits``), so the counts sum
+exactly to the generated-token count even under wino_r revocation.
+
+``tracing(strategy)`` is memoized per wrapped strategy: the Decoder's
+runner cache keys subkeys on strategy *identity*, so a fresh wrapper
+per call would recompile every decode.  trace=off configs never touch
+this module — ``Decoder`` only wraps when ``dcfg.trace`` is set.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import DecodeConfig, ModelConfig
+from repro.core.confidence import pallas_enabled, score_logits
+from repro.core.strategies import Strategy
+
+
+def trace_capacity(dcfg: DecodeConfig) -> int:
+    """Upper bound on steps per decode: every driver caps a block at
+    ``block_size·4`` steps and there are ``gen_length/block_size``
+    blocks."""
+    return dcfg.gen_length * 4
+
+
+@dataclasses.dataclass(frozen=True)
+class DecodeTrace:
+    """Host-side (numpy) view of one decode's TraceBuffer.
+
+    Step arrays are trimmed to the recorded step count; ``commit_step``/
+    ``commit_conf`` keep full canvas width (prompt columns are -1/NaN).
+    """
+
+    commit_step: np.ndarray    # (B, L) i32; -1 = never committed
+    commit_conf: np.ndarray    # (B, L) f32; NaN = no attribution
+    commits: np.ndarray        # (S,) i32 raw commits per step
+    revocations: np.ndarray    # (S,) i32 re-masked per step
+    skipped: np.ndarray        # (S,) bool — step ran without a forward
+    phase: np.ndarray          # (S,) i32 FDM-A regime; -1 = n/a
+    block: np.ndarray          # (S,) i32 semi-AR block of each step
+
+    @property
+    def steps(self) -> int:
+        return int(self.commits.shape[0])
+
+    def commit_histogram(self) -> np.ndarray:
+        """(steps,) FINAL commit count per step: where each *surviving*
+        token committed.  A token revoked and re-decoded counts once, at
+        its last commit — so the histogram sums exactly to the number of
+        committed positions (``tokens_generated`` for a finished
+        decode), which the raw per-step ``commits`` does not under
+        revocation."""
+        if self.steps == 0:
+            return np.zeros((0,), np.int64)
+        flat = self.commit_step[self.commit_step >= 0]
+        return np.bincount(flat, minlength=self.steps)[: self.steps]
+
+    def slice_rows(self, row: int, pad_cols: int = 0) -> "DecodeTrace":
+        """One batch row's view (serving: request ``row`` was left-padded
+        by ``pad_cols`` mask columns).  Step arrays are batch-grain and
+        shared as-is."""
+        return dataclasses.replace(
+            self,
+            commit_step=self.commit_step[row:row + 1, pad_cols:],
+            commit_conf=self.commit_conf[row:row + 1, pad_cols:])
+
+    def summary(self) -> Dict[str, float]:
+        conf = self.commit_conf[self.commit_step >= 0]
+        finite = conf[np.isfinite(conf)]
+        return {
+            "steps": self.steps,
+            "tokens_committed": int((self.commit_step >= 0).sum()),
+            "revocations": int(self.revocations.sum()),
+            "skipped_forwards": int(self.skipped.sum()),
+            "mean_commit_conf": float(finite.mean()) if finite.size
+            else float("nan"),
+        }
+
+
+class TracingStrategy(Strategy):
+    """A ``Strategy`` that decodes exactly like ``inner`` while recording
+    a TraceBuffer in a widened carry (module docstring has the layout):
+
+        ``((inner_pos, (commit_step, commit_conf)),
+           (inner_glob, step_arrays))``
+
+    where ``(inner_pos, inner_glob)`` is the inner carry's own
+    positional split (``((), carry)`` for non-positional inners).  The
+    structure is uniform either way, so it is an ANA101 fixed-point and
+    the cached path windows the positional half — inner leaves and
+    commit maps together — with the stock ``carry_window`` machinery.
+    """
+
+    positional_carry = True
+
+    def __init__(self, inner: Strategy):
+        if isinstance(inner, TracingStrategy):
+            raise TypeError("refusing to double-wrap a TracingStrategy")
+        self.inner = inner
+        self.name = f"{inner.name}+trace"
+        self.supports_fused = inner.supports_fused
+        self.carry_is_observational = inner.carry_is_observational
+
+    # -- carry plumbing ----------------------------------------------------
+    def _split(self, inner_carry) -> Tuple:
+        if self.inner.positional_carry:
+            pos, glob = inner_carry
+            return pos, glob
+        return (), inner_carry
+
+    def _join(self, pos, glob):
+        return (pos, glob) if self.inner.positional_carry else glob
+
+    def inner_carry(self, carry):
+        (ipos, _), (iglob, _) = carry
+        return self._join(ipos, iglob)
+
+    def forwards_per_step(self, dcfg: DecodeConfig) -> float:
+        return self.inner.forwards_per_step(dcfg)
+
+    def init_carry(self, cfg: ModelConfig, dcfg: DecodeConfig):
+        raise TypeError(
+            "a traced decode carries per-position state; decode through "
+            "Decoder (which calls init_carry_shaped), not the deprecated "
+            "carry-less entry points")
+
+    def init_carry_shaped(self, cfg: ModelConfig, dcfg: DecodeConfig,
+                          batch: int, length: int):
+        inner0 = self.inner.init_carry_shaped(cfg, dcfg, batch, length)
+        ipos, iglob = self._split(inner0)
+        cap = trace_capacity(dcfg)
+        pos_t = (jnp.full((batch, length), -1, jnp.int32),
+                 jnp.full((batch, length), jnp.nan, jnp.float32))
+        glob_t = (jnp.zeros((cap,), jnp.int32),        # commits
+                  jnp.zeros((cap,), jnp.int32),        # revocations
+                  jnp.zeros((cap,), bool),             # skipped
+                  jnp.full((cap,), -1, jnp.int32),     # phase
+                  jnp.zeros((cap,), jnp.int32),        # block
+                  jnp.zeros((), jnp.int32),            # ptr (steps)
+                  jnp.full((), -1, jnp.int32))         # blk
+        return (ipos, pos_t), (iglob, glob_t)
+
+    def begin_block(self, carry, x, in_block):
+        (ipos, pos_t), (iglob, glob_t) = carry
+        inner_c = self.inner.begin_block(self._join(ipos, iglob),
+                                         x, in_block)
+        ipos, iglob = self._split(inner_c)
+        glob_t = glob_t[:-1] + (glob_t[-1] + 1,)       # blk += 1
+        return (ipos, pos_t), (iglob, glob_t)
+
+    def phase_counts(self, carry) -> Dict[str, int]:
+        return self.inner.phase_counts(self.inner_carry(carry))
+
+    def carry_stats(self, carry) -> Dict[str, float]:
+        return self.inner.carry_stats(self.inner_carry(carry))
+
+    # -- the traced step ---------------------------------------------------
+    def step(self, rng, carry, x, active, model_fn, cfg, dcfg, n):
+        return self._run(self.inner.step, rng, carry, x, active,
+                         model_fn, cfg, dcfg, n)
+
+    def fused_step(self, rng, carry, x, active, model_fn, cfg, dcfg, n):
+        return self._run(self.inner.fused_step, rng, carry, x, active,
+                         model_fn, cfg, dcfg, n)
+
+    def _run(self, step_fn, rng, carry, x, active, model_fn, cfg, dcfg, n):
+        (ipos, (cstep, cconf)), (iglob, glob_t) = carry
+        commits, revs, skips, phases, blocks, ptr, blk = glob_t
+        inner_c = self._join(ipos, iglob)
+
+        taps = []
+        mf = model_fn
+        if self.inner.trace_confidence_tap:
+            def mf(t, _inner=model_fn):
+                logits = _inner(t)
+                # first FULL-CANVAS call only: the shape guard skips
+                # K-folded search forwards (FDM calls with (K·B, L))
+                if not taps and logits.shape[:2] == x.shape:
+                    taps.append(logits)
+                return logits
+
+        new_x, new_inner, df = step_fn(rng, inner_c, x, active, mf,
+                                       cfg, dcfg, n)
+
+        mask = cfg.mask_token_id
+        commit = (x == mask) & (new_x != mask)
+        revoke = (x != mask) & (new_x == mask)
+        if taps:
+            conf = score_logits(taps[0], pallas_enabled(dcfg)) \
+                .max_prob.astype(jnp.float32)
+        else:
+            conf = self.inner.trace_confidence(new_inner, dcfg)
+            if conf is not None:
+                conf = jnp.asarray(conf, jnp.float32)
+        nan = jnp.float32(jnp.nan)
+        conf_map = conf if conf is not None \
+            else jnp.full(x.shape, nan, jnp.float32)
+        cstep = jnp.where(commit, ptr, jnp.where(revoke, -1, cstep))
+        cconf = jnp.where(commit, conf_map, jnp.where(revoke, nan, cconf))
+
+        ph = self.inner.trace_phase(inner_c, new_inner)
+        ph = jnp.asarray(-1 if ph is None else ph, jnp.int32)
+        # fixed-shape scatter at the write pointer; 'drop' makes an
+        # out-of-capacity step (impossible under the drivers' step caps)
+        # a silent no-op instead of undefined indexing
+        commits = commits.at[ptr].set(
+            jnp.sum(commit, dtype=jnp.int32), mode="drop")
+        revs = revs.at[ptr].set(
+            jnp.sum(revoke, dtype=jnp.int32), mode="drop")
+        skips = skips.at[ptr].set(
+            jnp.asarray(df, jnp.float32) == 0, mode="drop")
+        phases = phases.at[ptr].set(ph, mode="drop")
+        blocks = blocks.at[ptr].set(blk, mode="drop")
+
+        ipos, iglob = self._split(new_inner)
+        glob_t = (commits, revs, skips, phases, blocks, ptr + 1, blk)
+        return new_x, ((ipos, (cstep, cconf)), (iglob, glob_t)), df
+
+    # -- host read-back ----------------------------------------------------
+    def extract(self, carry) -> DecodeTrace:
+        """ONE device_get over the final carry's trace leaves."""
+        (_, (cstep, cconf)), (_, glob_t) = carry
+        commits, revs, skips, phases, blocks, ptr, _ = glob_t
+        host = jax.device_get(
+            (cstep, cconf, commits, revs, skips, phases, blocks, ptr))
+        cstep, cconf, commits, revs, skips, phases, blocks, ptr = host
+        s = int(ptr)
+        return DecodeTrace(
+            commit_step=np.asarray(cstep), commit_conf=np.asarray(cconf),
+            commits=np.asarray(commits[:s]),
+            revocations=np.asarray(revs[:s]),
+            skipped=np.asarray(skips[:s]), phase=np.asarray(phases[:s]),
+            block=np.asarray(blocks[:s]))
+
+
+_TRACING: Dict[int, TracingStrategy] = {}
+
+
+def tracing(strategy: Strategy) -> TracingStrategy:
+    """Memoized wrapper: one ``TracingStrategy`` per inner strategy, ever
+    — the runner cache keys on strategy identity, so a fresh wrapper per
+    decode would recompile per decode.  The wrapper holds ``inner``
+    strongly, keeping the keying ``id`` stable."""
+    if isinstance(strategy, TracingStrategy):
+        return strategy
+    wrapped = _TRACING.get(id(strategy))
+    if wrapped is None or wrapped.inner is not strategy:
+        wrapped = _TRACING[id(strategy)] = TracingStrategy(strategy)
+    return wrapped

@@ -66,6 +66,9 @@ class WINORevocationStrategy(Strategy):
 
     name = "wino_r"
     positional_carry = True
+    trace_confidence_tap = True    # one unconditional full-canvas forward
+                                   # per step — the tap sees the scores
+                                   # the wide-in commit used
 
     def init_carry(self, cfg: ModelConfig, dcfg: DecodeConfig):
         raise TypeError(

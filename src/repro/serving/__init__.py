@@ -16,6 +16,10 @@
                    engine rebuild, graceful drain)
 * ``router``     — named-model routing over engines under a bytes-budget
                    LRU, with hot swap and observable cache eviction
+* ``metrics``    — Prometheus-text metrics registry (counters, gauges,
+                   histograms, collector callbacks) behind ``/metrics``
+* ``tracing``    — per-request span records + Chrome trace-event export
+                   behind ``/v1/trace/{rid}``
 * ``server``     — stdlib asyncio HTTP/1.1 + SSE front end over a router
 * ``client``     — small blocking client with backoff retries (tests /
                    examples / load gen)
@@ -25,12 +29,15 @@ from repro.serving.engine import Batch, Request, ServingEngine
 from repro.serving.faults import (CorruptOutputError, Fault,
                                   FaultInjector, InjectedFault,
                                   SimulatedOOM, is_engine_fatal)
+from repro.serving.metrics import (CONTENT_TYPE, Counter, Family, Gauge,
+                                   Histogram, MetricsRegistry)
 from repro.serving.router import ModelRouter, params_bytes
 from repro.serving.scheduler import (AsyncScheduler, QueueFullError,
                                      SchedulerDrainingError, stats_dict)
 from repro.serving.server import ServerThread, ServingServer
 from repro.serving.supervisor import (Backoff, CircuitBreaker,
                                       DegradationLadder, WatchdogTimeout)
+from repro.serving.tracing import Span, TraceStore, chrome_trace
 
 __all__ = [
     "Request", "Batch", "ServingEngine",
@@ -40,6 +47,9 @@ __all__ = [
     "AsyncScheduler", "QueueFullError", "SchedulerDrainingError",
     "stats_dict",
     "ModelRouter", "params_bytes",
+    "CONTENT_TYPE", "Counter", "Gauge", "Histogram", "Family",
+    "MetricsRegistry",
+    "Span", "TraceStore", "chrome_trace",
     "ServingServer", "ServerThread",
     "ServingClient", "ServerError",
 ]

@@ -112,17 +112,21 @@ class ServingClient:
                  block_size: Optional[int] = None,
                  cache_policy: Optional[str] = None,
                  deadline_s: Optional[float] = None,
+                 trace: Optional[bool] = None,
                  wait: bool = True) -> Dict:
         """Submit a prompt (token-id list, or a string if the server has
         a tokenizer).  ``wait=True`` blocks for the final result;
-        ``wait=False`` returns ``{"rid", "model", "stream"}``."""
+        ``wait=False`` returns ``{"rid", "model", "stream"}``.
+        ``trace=True`` enables on-device step telemetry for this request
+        (read it back with :meth:`trace`)."""
         body = {"prompt": list(prompt) if not isinstance(prompt, str)
                 else prompt, "wait": wait}
         for key, val in (("model", model), ("strategy", strategy),
                          ("steps", steps), ("gen_length", gen_length),
                          ("block_size", block_size),
                          ("cache_policy", cache_policy),
-                         ("deadline_s", deadline_s)):
+                         ("deadline_s", deadline_s),
+                         ("trace", trace)):
             if val is not None:
                 body[key] = val
         return self._request("POST", "/v1/generate", body)
@@ -195,6 +199,15 @@ class ServingClient:
         if model:
             body["model"] = model
         return bool(self._request("POST", "/v1/cancel", body)["cancelled"])
+
+    def trace(self, rid: int, model: Optional[str] = None) -> Dict:
+        """Chrome trace-event JSON for a finished request (``GET
+        /v1/trace/{rid}``).  Feed it to Perfetto / ``chrome://tracing``
+        or ``tools/trace_view.py``."""
+        path = f"/v1/trace/{rid}"
+        if model:
+            path += "?model=" + urllib.parse.quote(model)
+        return self._request("GET", path)
 
     def models(self) -> Dict:
         return self._request("GET", "/v1/models")

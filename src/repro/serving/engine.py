@@ -125,6 +125,10 @@ class ServingEngine:
         self.max_batch = max_batch
         self.length_bucket = max(length_bucket, 1)
         self.on_block_committed = on_block_committed
+        # observability hook (installed by the async scheduler):
+        # ``(requests, block_index, t_start_s, t_end_s)`` per KV-cache
+        # refresh inside ``decode_batch_blocks``
+        self.on_cache_refresh: Optional[Callable] = None
         self.fault_injector = fault_injector
         self.queue: Deque[Request] = deque()
         self.done: Dict[int, Request] = {}
@@ -147,6 +151,7 @@ class ServingEngine:
                gen_length: Optional[int] = None,
                block_size: Optional[int] = None,
                cache_policy: Optional[str] = None,
+               trace: Optional[bool] = None,
                deadline_s: Optional[float] = None) -> int:
         """Queue a prompt; returns the request id.
 
@@ -162,8 +167,8 @@ class ServingEngine:
         """
         over = {k: v for k, v in dict(
             strategy=strategy, steps=steps, gen_length=gen_length,
-            block_size=block_size, cache_policy=cache_policy).items()
-            if v is not None}
+            block_size=block_size, cache_policy=cache_policy,
+            trace=trace).items() if v is not None}
         # replace() re-runs DecodeConfig.__post_init__, so an unknown
         # cache_policy raises ValueError right here
         dcfg = dataclasses.replace(self.dcfg, **over) if over else self.dcfg
@@ -394,6 +399,15 @@ class ServingEngine:
         bi = inj.begin_batch() if inj is not None else 0
         rids = [r.rid for r in batch.requests]
         dec = self._decoder_for(batch.dcfg)
+        if self.on_cache_refresh is not None:
+            # decoders are per-config and the engine decodes one batch
+            # at a time, so pointing the decoder hook at this batch's
+            # requests is race-free
+            dec.on_cache_refresh = (
+                lambda blk, t0, t1, _reqs=batch.requests:
+                self.on_cache_refresh(_reqs, blk, t0, t1))
+        else:
+            dec.on_cache_refresh = None
         blocks = dec.generate_blocks(batch.rng, jnp.asarray(batch.prompts))
         block_index = 0
         while True:
@@ -440,6 +454,10 @@ class ServingEngine:
             # replica rows from inflating the reported phase work.
             # revocations / skipped_forwards are whole-batch totals like
             # forwards: each real request gets its share
+            # the trace (dcfg.trace decodes only) is per-POSITION, not
+            # pro-rated: each request gets its own row of the commit
+            # maps, pad columns sliced off so commit_step indexes line
+            # up with the request's own result coordinates
             req.stats = dataclasses.replace(
                 stats,
                 tokens_generated=batch.dcfg.gen_length,
@@ -448,7 +466,9 @@ class ServingEngine:
                 revocations=stats.revocations / real,
                 skipped_forwards=stats.skipped_forwards / real,
                 phase_counts={k: v / rows
-                              for k, v in stats.phase_counts.items()})
+                              for k, v in stats.phase_counts.items()},
+                trace=stats.trace.slice_rows(i, batch.pads[i])
+                if stats.trace is not None else None)
             req.finish_time = now
             self.done[req.rid] = req
         return [r.rid for r in batch.requests]
@@ -486,9 +506,12 @@ class ServingEngine:
         if not reqs:
             return {}
         lat = [r.latency for r in reqs]
-        toks = sum(r.stats.tokens_generated for r in reqs)
-        fwds = sum(r.stats.forward_equivalents for r in reqs)
-        decode_s = sum(r.stats.wall_time for r in reqs)
+        # one stable stats form: aggregate over as_dict(), the same wire
+        # shape the HTTP terminal event and the benchmarks read
+        stats = [r.stats.as_dict() for r in reqs]
+        toks = sum(s["tokens_generated"] for s in stats)
+        fwds = sum(s["forward_equivalents"] for s in stats)
+        decode_s = sum(s["wall_time_s"] for s in stats)
         span = max(r.finish_time for r in reqs) - \
             min(r.submit_time for r in reqs)
         return {"requests": len(reqs),
@@ -497,7 +520,7 @@ class ServingEngine:
                 "throughput_tps": toks / max(span, 1e-9),
                 "decode_tps": toks / max(decode_s, 1e-9),
                 "forward_equivalents": float(fwds),
-                "revocations": float(sum(r.stats.revocations
-                                         for r in reqs)),
-                "skipped_forwards": float(sum(r.stats.skipped_forwards
-                                              for r in reqs))}
+                "revocations": float(sum(s["revocations"]
+                                         for s in stats)),
+                "skipped_forwards": float(sum(s["skipped_forwards"]
+                                              for s in stats))}

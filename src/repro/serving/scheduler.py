@@ -63,6 +63,7 @@ resumed again).
 from __future__ import annotations
 
 import asyncio
+import time
 from collections import deque
 from typing import AsyncIterator, Callable, Deque, Dict, List, Optional
 
@@ -71,9 +72,11 @@ import numpy as np
 from repro.configs.base import DegradeConfig, SupervisorConfig
 from repro.core.decoder import SampleStats
 from repro.serving.engine import Batch, Request, ServingEngine
+from repro.serving.metrics import MetricsRegistry
 from repro.serving.supervisor import (Backoff, CircuitBreaker,
                                       DegradationLadder, WatchdogTimeout,
                                       bisect, classify_failure)
+from repro.serving.tracing import Span, TraceStore
 
 
 class QueueFullError(RuntimeError):
@@ -86,17 +89,12 @@ class SchedulerDrainingError(RuntimeError):
 
 
 def stats_dict(stats: Optional[SampleStats]) -> Dict:
-    """A SampleStats as a JSON-serializable dict (wire format)."""
+    """A SampleStats as a JSON-serializable dict (wire format) —
+    ``SampleStats.as_dict()``, the one stable stats shape shared with
+    ``ServingEngine.summary()`` and the benchmarks."""
     if stats is None:
         return {}
-    return {"steps": stats.steps,
-            "forward_equivalents": stats.forward_equivalents,
-            "wall_time_s": stats.wall_time,
-            "tokens_generated": stats.tokens_generated,
-            "tps": stats.tps,
-            "revocations": stats.revocations,
-            "skipped_forwards": stats.skipped_forwards,
-            "phase_counts": stats.phase_counts}
+    return stats.as_dict()
 
 
 class _Stream:
@@ -129,7 +127,10 @@ class AsyncScheduler:
                  svcfg: SupervisorConfig = SupervisorConfig(),
                  dgcfg: DegradeConfig = DegradeConfig(),
                  rebuild_engine: Optional[
-                     Callable[[], ServingEngine]] = None):
+                     Callable[[], ServingEngine]] = None,
+                 registry: Optional[MetricsRegistry] = None,
+                 model: str = "",
+                 profile_dir: str = ""):
         self.engine = engine
         self.max_queue_depth = max_queue_depth
         self.default_deadline_s = default_deadline_s
@@ -137,6 +138,38 @@ class AsyncScheduler:
         self.svcfg = svcfg
         self.dgcfg = dgcfg
         self.rebuild_engine = rebuild_engine
+        self.model = model
+        self.profile_dir = profile_dir
+        # request tracing: span records at every lifecycle stage, same
+        # retention horizon as the event streams (retired together)
+        self.trace_store = TraceStore(retain=self.stream_retain)
+        self._install_refresh_hook(engine)
+        # metrics registry (optional — standalone schedulers skip it):
+        # the scheduler owns the per-request distributions the flat
+        # counters cannot express
+        self._m_latency = self._m_queue_wait = None
+        self._m_tokens = self._m_depth = self._m_decodes = None
+        if registry is not None:
+            self._m_latency = registry.histogram(
+                "repro_request_latency_seconds",
+                "End-to-end latency, submit to terminal event",
+                ("model",))
+            self._m_queue_wait = registry.histogram(
+                "repro_queue_wait_seconds",
+                "Time a request spent queued before batch selection",
+                ("model",))
+            self._m_depth = registry.histogram(
+                "repro_queue_depth_at_submit",
+                "Queue depth observed by each arriving request",
+                ("model",), buckets=(0, 1, 2, 4, 8, 16, 32, 64, 128))
+            self._m_tokens = registry.histogram(
+                "repro_tokens_per_request",
+                "Generated tokens per finished request",
+                ("model",), buckets=(8, 16, 32, 64, 128, 256, 512, 1024))
+            self._m_decodes = registry.counter(
+                "repro_decodes_total",
+                "Finished decodes by strategy and cache policy",
+                ("model", "strategy", "cache_policy"))
         self.breaker = CircuitBreaker(svcfg.breaker_threshold,
                                       svcfg.breaker_window_s)
         self.ladder = DegradationLadder(dgcfg, max_queue_depth)
@@ -263,6 +296,7 @@ class AsyncScheduler:
                gen_length: Optional[int] = None,
                block_size: Optional[int] = None,
                cache_policy: Optional[str] = None,
+               trace: Optional[bool] = None,
                deadline_s: Optional[float] = None) -> int:
         """Admit a request; returns its rid.  Raises ``QueueFullError``
         at max queue depth, ``SchedulerDrainingError`` while draining,
@@ -299,9 +333,12 @@ class AsyncScheduler:
                                  gen_length=gen_length,
                                  block_size=block_size,
                                  cache_policy=cache_policy,
+                                 trace=trace,
                                  deadline_s=deadline_s)
         self._streams[rid] = _Stream()
         self.counters["submitted"] += 1
+        if self._m_depth is not None:
+            self._m_depth.labels(model=self.model).observe(depth)
         self._wake.set()
         return rid
 
@@ -338,6 +375,14 @@ class AsyncScheduler:
                 return event
         raise RuntimeError(f"stream {rid} ended without a terminal event")
 
+    def trace(self, rid: int) -> Dict:
+        """Chrome trace-event JSON for one request: the scheduler's span
+        records (queue wait, batch assembly, per-block decode, cache
+        refresh, emit) plus — when the request decoded with
+        ``trace=true`` — the on-device per-step counters.  ``KeyError``
+        for a rid never selected into a batch or already retired."""
+        return self.trace_store.chrome(rid)
+
     def metrics(self) -> Dict:
         return {"queue_depth": self.engine.queue_depth,
                 "decoding": self._decoding,
@@ -353,6 +398,19 @@ class AsyncScheduler:
                 "engine": self.engine.summary()}
 
     # -- internals ---------------------------------------------------------
+    def _install_refresh_hook(self, engine: ServingEngine) -> None:
+        """KV-cache refreshes happen inside the decoder between blocks;
+        the engine surfaces them through this hook so the trace shows
+        refresh time separately from decode time."""
+        engine.on_cache_refresh = self._on_cache_refresh
+
+    def _on_cache_refresh(self, requests, blk: int, t0: float,
+                          t1: float) -> None:
+        span = Span(f"cache_refresh[{blk}]", "decode", t0, t1,
+                    {"block": blk})
+        for req in requests:
+            self.trace_store.add(req.rid, span)
+
     def _emit(self, rid: int, event: Dict) -> None:
         stream = self._streams.get(rid)
         if stream is None:
@@ -365,6 +423,9 @@ class AsyncScheduler:
         stream.emit(event)
         if event.get("final"):
             self._retired.append(rid)
+            # the request's trace retires on the same horizon as its
+            # stream — /v1/trace stays answerable as long as /v1/stream
+            self.trace_store.retire(rid)
             while len(self._retired) > self.stream_retain:
                 old = self._retired.popleft()
                 self._streams.pop(old, None)
@@ -389,6 +450,7 @@ class AsyncScheduler:
                 # starting — it must not see that window as evictable
                 # idleness
                 self._decoding = True
+                t_sel = time.perf_counter()
                 batch = self.engine.select_batch()
                 if batch is None:
                     self._decoding = False
@@ -401,6 +463,19 @@ class AsyncScheduler:
                         await self._wake.wait()
                     continue
                 self.counters["batches"] += 1
+                t_asm = time.perf_counter()
+                asm_args = {"batch_size": len(batch.requests),
+                            "strategy": batch.dcfg.strategy,
+                            "cache_policy": batch.dcfg.cache_policy}
+                for req in batch.requests:
+                    self.trace_store.add(req.rid, Span(
+                        "queue_wait", "serving", req.submit_time, t_sel))
+                    self.trace_store.add(req.rid, Span(
+                        "batch_assembly", "serving", t_sel, t_asm,
+                        asm_args))
+                    if self._m_queue_wait is not None:
+                        self._m_queue_wait.labels(model=self.model) \
+                            .observe(t_sel - req.submit_time)
                 t0 = loop.time()
                 try:
                     await self._decode_supervised(loop, batch)
@@ -436,10 +511,15 @@ class AsyncScheduler:
             self._inflight.update(r.rid for r in batch.requests)
             progress = {"blocks": 0}
             try:
-                await self._drive_batch(loop, batch, progress)
+                profiling = self._start_profiler()
+                try:
+                    await self._drive_batch(loop, batch, progress)
+                finally:
+                    self._stop_profiler(profiling)
                 self.breaker.record_success()
                 for req in batch.requests:
                     self.counters["finished"] += 1
+                    self._record_finished(req, batch)
                     self._emit(req.rid, self._done_event(req))
                 return
             except _AbandonBatch:
@@ -482,13 +562,59 @@ class AsyncScheduler:
                 self._wake.set()
                 return
 
+    def _record_finished(self, req: Request, batch: Batch) -> None:
+        """Per-request observability on decode success: latency/token
+        histograms, the per-strategy decode counter, and the on-device
+        DecodeTrace attached to the request's span record."""
+        if self._m_decodes is not None:
+            self._m_decodes.labels(
+                model=self.model, strategy=batch.dcfg.strategy,
+                cache_policy=batch.dcfg.cache_policy).inc()
+            self._m_latency.labels(model=self.model).observe(req.latency)
+            self._m_tokens.labels(model=self.model).observe(
+                req.stats.tokens_generated if req.stats else 0)
+        trace = req.stats.trace if req.stats is not None else None
+        self.trace_store.attach(
+            req.rid, trace, rid=req.rid,
+            strategy=batch.dcfg.strategy,
+            cache_policy=batch.dcfg.cache_policy,
+            tokens_generated=int(req.stats.tokens_generated)
+            if req.stats else 0)
+
+    def _start_profiler(self) -> bool:
+        """``ServerConfig.profile_dir`` (non-empty) brackets each decoded
+        batch with a ``jax.profiler`` device trace — the heavyweight
+        opt-in complement to the always-cheap span records."""
+        if not self.profile_dir:
+            return False
+        import jax
+        try:
+            jax.profiler.start_trace(self.profile_dir)
+            return True
+        except Exception:
+            # a profiler session may already be live (concurrent model,
+            # external harness): tracing is telemetry, never a reason to
+            # fail the decode
+            return False
+
+    def _stop_profiler(self, started: bool) -> None:
+        if not started:
+            return
+        import jax
+        try:
+            jax.profiler.stop_trace()
+        except Exception:
+            pass
+
     async def _drive_batch(self, loop, batch: Batch, progress: Dict
                            ) -> None:
         """Drive one decode attempt block by block, under the watchdog;
         fans block events out to the per-request streams."""
         svc = self.svcfg
+        rids = [r.rid for r in batch.requests]
         blocks = self.engine.decode_batch_blocks(batch)
         while True:
+            t_blk = time.perf_counter()
             fut = loop.run_in_executor(None, _drive, blocks)
             if svc.watchdog_s > 0:
                 try:
@@ -506,8 +632,16 @@ class AsyncScheduler:
             else:
                 kind, payload = await fut
             if kind == "done":
+                final = Span("decode_finish", "decode", t_blk,
+                             time.perf_counter())
+                for rid in rids:
+                    self.trace_store.add(rid, final)
                 return
             blk, lo, hi, tokens = payload
+            span = Span(f"decode_block[{blk}]", "decode", t_blk,
+                        time.perf_counter(), {"block": blk})
+            for rid in rids:
+                self.trace_store.add(rid, span)
             self.counters["blocks"] += 1
             progress["blocks"] += 1
             for i, req in enumerate(batch.requests):
@@ -537,6 +671,9 @@ class AsyncScheduler:
             if rebuilt is not None:
                 rebuilt.adopt(self.engine)
                 self.engine = rebuilt
+                # hooks are NOT adopted — re-point the refresh spans at
+                # the engine that will actually decode from here on
+                self._install_refresh_hook(rebuilt)
                 self.counters["engine_rebuilds"] += 1
         survivors = []
         for req in batch.requests:
@@ -555,13 +692,16 @@ class AsyncScheduler:
             self.counters["requeued"] += len(survivors)
             self._wake.set()
 
-    @staticmethod
-    def _done_event(req: Request) -> Dict:
-        return {"type": "done", "rid": req.rid, "status": "ok",
-                "final": True,
-                "tokens": req.result.tolist(),
-                "latency_s": req.latency,
-                "stats": stats_dict(req.stats)}
+    def _done_event(self, req: Request) -> Dict:
+        # the "emit" span covers payload construction (tolist dominates
+        # fan-out cost) and lands BEFORE _emit, whose terminal event
+        # retires the trace — nothing may attach after retirement
+        with self.trace_store.span(req.rid, "emit", "serving"):
+            return {"type": "done", "rid": req.rid, "status": "ok",
+                    "final": True,
+                    "tokens": req.result.tolist(),
+                    "latency_s": req.latency,
+                    "stats": stats_dict(req.stats)}
 
 
 def _drive(blocks):

@@ -32,9 +32,15 @@ web framework, zero new runtime dependencies.  The endpoint surface:
 * ``GET /v1/models`` — registered models (+ residency) and strategies.
 * ``GET /healthz`` — liveness + per-model health (``ok`` / ``degraded``
   after a circuit-breaker engine rebuild / ``draining``) + queue depths.
-* ``GET /metrics`` — Prometheus-style text exposition, including the
-  supervision counters (retries, quarantines, watchdog timeouts, engine
-  faults/rebuilds, injected faults) and the active degradation rung.
+* ``GET /v1/trace/{rid}?model=name`` — Chrome trace-event JSON for one
+  request: scheduler lifecycle spans (queue wait, batch assembly,
+  per-block decode, cache refresh, emit) and — when submitted with
+  ``trace: true`` — the on-device per-step commit/revocation/skip
+  counters.  Open in Perfetto or render with ``tools/trace_view.py``.
+* ``GET /metrics`` — Prometheus text exposition (format 0.0.4, with
+  HELP/TYPE) from a real ``MetricsRegistry``: the seed-era router/
+  scheduler/decode-cache series plus latency, queue-wait, queue-depth
+  and tokens-per-request histograms and per-strategy decode counters.
 
 Backpressure answers carry ``Retry-After``: 429 at queue depth, 503
 while draining for shutdown.  Bodies are bounded by Content-Length
@@ -52,13 +58,14 @@ import asyncio
 import json
 import threading
 import urllib.parse
-from typing import Dict, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.configs.base import ServerConfig
 from repro.core.decoder import decode_cache_info
 from repro.core.strategies import available_strategies
+from repro.serving.metrics import (CONTENT_TYPE, Family, MetricsRegistry)
 from repro.serving.router import ModelRouter
 from repro.serving.scheduler import (AsyncScheduler, QueueFullError,
                                      SchedulerDrainingError)
@@ -92,6 +99,8 @@ class ServingServer:
         self.router = router
         self.scfg = scfg
         self.tokenizer = tokenizer
+        self.registry = MetricsRegistry()
+        self.registry.register_collector(self._collect_families)
         self._scheds: Dict[str, AsyncScheduler] = {}
         self._build_lock = asyncio.Lock()
         self._server: Optional[asyncio.AbstractServer] = None
@@ -211,7 +220,9 @@ class ServingServer:
                 stream_retain=self.scfg.stream_retain,
                 svcfg=self.scfg.supervisor,
                 dgcfg=self.scfg.degrade,
-                rebuild_engine=lambda n=name: self._rebuild_engine(n))
+                rebuild_engine=lambda n=name: self._rebuild_engine(n),
+                registry=self.registry, model=name,
+                profile_dir=self.scfg.profile_dir)
             await sched.start()
             self._scheds[name] = sched
             self.router.set_busy_probe(
@@ -333,6 +344,8 @@ class ServingServer:
             await self._generate(body, writer)
         elif method == "GET" and path.startswith("/v1/stream/"):
             return await self._stream(path, query, writer)
+        elif method == "GET" and path.startswith("/v1/trace/"):
+            self._trace(path, query, writer)
         elif method == "POST" and path == "/v1/cancel":
             await self._cancel(body, writer)
         elif method == "GET" and path == "/v1/models":
@@ -359,8 +372,8 @@ class ServingServer:
                 "queue_depth": {n: s.engine.queue_depth
                                 for n, s in scheds}})
         elif method == "GET" and path == "/metrics":
-            self._respond_raw(writer, 200, self._metrics_text(),
-                              "text/plain; version=0.0.4")
+            self._respond_raw(writer, 200, self.registry.render(),
+                              CONTENT_TYPE)
         else:
             raise _HttpError(404, f"no route for {method} {path}")
         return False
@@ -418,6 +431,9 @@ class ServingServer:
             if val is not None and (not isinstance(val, types)
                                     or isinstance(val, bool)):
                 raise _HttpError(400, f"{key} has the wrong type")
+        trace = req.get("trace")
+        if trace is not None and not isinstance(trace, bool):
+            raise _HttpError(400, "trace must be a boolean")
         model = req.get("model") or self.router.default
         gen_length = req.get("gen_length")
         if gen_length is not None and \
@@ -435,6 +451,7 @@ class ServingServer:
                            gen_length=gen_length,
                            block_size=req.get("block_size"),
                            cache_policy=req.get("cache_policy"),
+                           trace=trace,
                            deadline_s=req.get("deadline_s"))
         if req.get("wait"):
             event = await sched.result(rid)
@@ -485,6 +502,29 @@ class ServingServer:
                 np.asarray(event["tokens"]))}
         return event
 
+    def _trace(self, path: str, query: Dict[str, str],
+               writer: asyncio.StreamWriter) -> None:
+        """``GET /v1/trace/{rid}?model=name`` — Chrome trace-event JSON
+        for one finished (or in-flight) request: scheduler lifecycle
+        spans always; on-device per-step counters when the request was
+        submitted with ``trace=true``.  Load the body in Perfetto /
+        ``chrome://tracing``, or render it with tools/trace_view.py."""
+        tail = path[len("/v1/trace/"):]
+        if not tail.isdigit():
+            raise _HttpError(404, f"bad trace id {tail!r}")
+        rid = int(tail)
+        model = self._resolve_model(query.get("model"))
+        sched = self._scheds.get(model)
+        if sched is None:
+            raise _HttpError(404, f"model {model!r} has no live "
+                                  f"scheduler (evicted or never used)")
+        try:
+            trace = sched.trace(rid)
+        except KeyError:
+            raise _HttpError(404, f"no trace for request id {rid} "
+                                  f"(never decoded, or retired)")
+        self._respond(writer, 200, trace)
+
     async def _cancel(self, body: bytes,
                       writer: asyncio.StreamWriter) -> None:
         req = self._parse_json(body)
@@ -497,61 +537,98 @@ class ServingServer:
         self._respond(writer, 200, {"rid": rid, "cancelled": cancelled})
 
     # -- metrics -----------------------------------------------------------
-    def _metrics_text(self) -> str:
-        lines = ["# TYPE repro_up gauge", "repro_up 1"]
+    def _collect_families(self) -> List[Family]:
+        """Scrape-time collector: snapshot router / scheduler / decode-
+        cache state into exposition families.  The series names and the
+        model-first label order are the seed's — dashboards and tests
+        pin them — only the HELP/TYPE metadata and escaping moved into
+        ``serving.metrics``."""
+        fams: List[Family] = [
+            Family("repro_up", "gauge", "Server process is serving.",
+                   [({}, 1)]),
+        ]
 
-        def emit(series: str, value, labels: str = "") -> None:
-            lines.append(f"repro_{series}{labels} {value}")
-
-        def lab(name: str, **extra: str) -> str:
-            """Label set with the model name escaped per the exposition
-            format (an unescaped quote/backslash would corrupt the whole
-            scrape)."""
-            esc = name.replace("\\", r"\\").replace('"', r'\"') \
-                .replace("\n", r"\n")
-            pairs = [f'model="{esc}"'] + \
-                [f'{k}="{v}"' for k, v in extra.items()]
-            return "{" + ",".join(pairs) + "}"
+        def fam(series: str, mtype: str, help: str, samples) -> None:
+            fams.append(Family(f"repro_{series}", mtype, help,
+                               list(samples)))
 
         info = self.router.info()
-        emit("router_resident_bytes", info["resident_bytes"])
-        emit("router_budget_bytes", info["budget_bytes"])
-        emit("router_evictions_total", info["evictions"])
-        emit("router_builds_total", info["builds"])
-        emit("router_swaps_total", info["swaps"])
-        emit("router_rebuilds_total", info["rebuilds"])
+        for series, key, mtype, help in (
+                ("router_resident_bytes", "resident_bytes", "gauge",
+                 "Bytes of resident params."),
+                ("router_budget_bytes", "budget_bytes", "gauge",
+                 "Router residency budget."),
+                ("router_evictions_total", "evictions", "counter",
+                 "Models evicted for space."),
+                ("router_builds_total", "builds", "counter",
+                 "Model builds (cold loads)."),
+                ("router_swaps_total", "swaps", "counter",
+                 "Resident-model swaps."),
+                ("router_rebuilds_total", "rebuilds", "counter",
+                 "Faulted-model rebuilds.")):
+            fam(series, mtype, help, [({}, info[key])])
+
         # snapshot: evictions may pop entries from an executor thread
-        for name, sched in list(self._scheds.items()):
+        scheds = list(self._scheds.items())
+        per_model: Dict[str, List] = {}
+
+        def add(series: str, mtype: str, help: str, labels, value):
+            per_model.setdefault(series, [mtype, help, []])[2].append(
+                (labels, value))
+
+        for name, sched in scheds:
             m = sched.metrics()
-            labels = lab(name)
-            emit("queue_depth", m["queue_depth"], labels)
-            emit("decoding", int(m["decoding"]), labels)
-            emit("health_degraded",
-                 int(m["health"] == "degraded"), labels)
-            emit("ladder_rung", m["ladder_rung"], labels)
-            emit("breaker_trips_total", m["breaker_trips"], labels)
+            labels = {"model": name}
+            add("queue_depth", "gauge",
+                "Requests waiting for batch assembly.", labels,
+                m["queue_depth"])
+            add("decoding", "gauge", "A decode batch is in flight.",
+                labels, int(m["decoding"]))
+            add("health_degraded", "gauge",
+                "Scheduler is on a degradation rung.", labels,
+                int(m["health"] == "degraded"))
+            add("ladder_rung", "gauge",
+                "Current degradation-ladder rung.", labels,
+                m["ladder_rung"])
+            add("breaker_trips_total", "counter",
+                "Circuit-breaker trips.", labels, m["breaker_trips"])
             for counter in ("submitted", "finished", "rejected",
                             "cancelled", "expired", "errors", "batches",
                             "blocks", "retries", "requeued",
                             "quarantined", "watchdog_timeouts",
                             "engine_faults", "engine_rebuilds",
                             "rebuild_failures", "resets", "degraded"):
-                emit(f"requests_{counter}_total", m[counter], labels)
+                add(f"requests_{counter}_total", "counter",
+                    f"Lifecycle counter: {counter}.", labels, m[counter])
             for kind, fired in m["faults_injected"].items():
-                emit("faults_injected_total", fired,
-                     lab(name, kind=kind))
+                add("faults_injected_total", "counter",
+                    "Injected faults that fired.",
+                    {"model": name, "kind": kind}, fired)
             summary = m["engine"]
             if summary:
-                emit("latency_seconds", summary["mean_latency_s"],
-                     lab(name, stat="mean"))
-                emit("latency_seconds", summary["p95_latency_s"],
-                     lab(name, stat="p95"))
-                emit("decode_tps", summary["decode_tps"], labels)
-                emit("throughput_tps", summary["throughput_tps"], labels)
+                add("latency_seconds", "gauge",
+                    "Request latency summary stats.",
+                    {"model": name, "stat": "mean"},
+                    summary["mean_latency_s"])
+                add("latency_seconds", "gauge",
+                    "Request latency summary stats.",
+                    {"model": name, "stat": "p95"},
+                    summary["p95_latency_s"])
+                add("decode_tps", "gauge",
+                    "Committed tokens per decode-second.", labels,
+                    summary["decode_tps"])
+                add("throughput_tps", "gauge",
+                    "Committed tokens per wall-second.", labels,
+                    summary["throughput_tps"])
+        for series, (mtype, help, samples) in per_model.items():
+            fam(series, mtype, help, samples)
+
         cache = decode_cache_info()
         for fld in ("entries", "runners", "hits", "misses", "traces"):
-            emit(f"decode_cache_{fld}", getattr(cache, fld))
-        return "\n".join(lines) + "\n"
+            fam(f"decode_cache_{fld}", "gauge",
+                f"Decode runner cache: {fld}.",
+                [({}, getattr(cache, fld))])
+        return fams
 
     # -- response helpers --------------------------------------------------
     def _retry_after(self) -> Dict[str, str]:

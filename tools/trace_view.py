@@ -1,0 +1,110 @@
+"""Terminal viewer for the Chrome trace-event JSON that
+``GET /v1/trace/{rid}`` (and ``ServingClient.trace``) returns.
+
+The JSON loads directly into Perfetto / ``chrome://tracing``; this tool
+is for the ssh-only case — it prints the scheduler lifecycle spans as a
+proportional timeline and, when the request was submitted with
+``trace: true``, a per-step device table (block, commits, revocations,
+skipped forwards, FDM-A phase) plus the commit total, which equals
+``tokens_generated`` by construction of the commit histogram.
+
+Input is a file path or an http(s) URL:
+
+    PYTHONPATH=src python tools/trace_view.py trace.json
+    PYTHONPATH=src python tools/trace_view.py \
+        http://localhost:8411/v1/trace/0?model=tiny
+
+Stdlib-only; no repro imports, so it runs against a saved trace on a
+machine without the repo installed.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import urllib.request
+from typing import Dict, List
+
+BAR_WIDTH = 40
+
+
+def load(source: str) -> Dict:
+    if source.startswith(("http://", "https://")):
+        with urllib.request.urlopen(source) as resp:
+            return json.loads(resp.read().decode())
+    with open(source) as fh:
+        return json.load(fh)
+
+
+def _spans(events: List[Dict]) -> List[Dict]:
+    return sorted((e for e in events if e.get("ph") == "X"
+                   and e.get("cat") != "device"),
+                  key=lambda e: e.get("ts", 0.0))
+
+
+def _device_steps(events: List[Dict]) -> List[Dict]:
+    """Pair each ``step i`` duration event with its ``commits`` counter
+    event (same ts by construction)."""
+    counters = {e["ts"]: e["args"] for e in events
+                if e.get("ph") == "C" and e.get("name") == "commits"}
+    steps = []
+    for e in events:
+        if e.get("ph") == "X" and e.get("cat") == "device":
+            steps.append({**e.get("args", {}),
+                          **counters.get(e["ts"], {})})
+    return sorted(steps, key=lambda s: s.get("step", 0))
+
+
+def render(trace: Dict, out=sys.stdout) -> None:
+    events = trace.get("traceEvents", [])
+    meta = trace.get("otherData", {})
+    if meta:
+        pairs = ", ".join(f"{k}={v}" for k, v in meta.items())
+        print(f"request: {pairs}", file=out)
+
+    spans = _spans(events)
+    if spans:
+        t_lo = min(e["ts"] for e in spans)
+        t_hi = max(e["ts"] + e.get("dur", 0.0) for e in spans)
+        extent = max(t_hi - t_lo, 1e-9)
+        name_w = max(len(e["name"]) for e in spans)
+        print(f"\nspans ({(t_hi - t_lo) / 1e3:.2f} ms total):", file=out)
+        for e in spans:
+            start = int((e["ts"] - t_lo) / extent * BAR_WIDTH)
+            width = max(int(e.get("dur", 0.0) / extent * BAR_WIDTH), 1)
+            bar = " " * start + "#" * min(width, BAR_WIDTH - start)
+            print(f"  {e['name']:<{name_w}} |{bar:<{BAR_WIDTH}}| "
+                  f"{e.get('dur', 0.0) / 1e3:9.3f} ms", file=out)
+
+    steps = _device_steps(events)
+    if steps:
+        print(f"\ndevice steps ({len(steps)}):", file=out)
+        header = f"  {'step':>4} {'block':>5} {'commits':>7} " \
+                 f"{'revoked':>7} {'skipped':>7} {'phase':>5}"
+        print(header, file=out)
+        total = 0
+        for s in steps:
+            commits = s.get("commits", 0)
+            total += commits
+            phase = s.get("phase", "")
+            print(f"  {s.get('step', '?'):>4} {s.get('block', '?'):>5} "
+                  f"{commits:>7} {s.get('revocations', 0):>7} "
+                  f"{s.get('skipped', 0):>7} {phase!s:>5}", file=out)
+        print(f"  total committed tokens: {total}", file=out)
+    elif spans:
+        print("\n(no device steps — request was not submitted with "
+              "trace=true)", file=out)
+    if not spans and not steps:
+        print("empty trace", file=out)
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    parser.add_argument("source", help="trace JSON file path or URL")
+    args = parser.parse_args(argv)
+    render(load(args.source))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
